@@ -1,0 +1,67 @@
+"""Figure 4 (+ Figs 12/13): throughput of different deployment configurations
+(DP, TP, PP degrees) per workload and GPU type, Llama3-70B.
+
+Derived checks (Observation 2): the optimal configuration varies with
+workload type and GPU type; config-choice spread (paper: up to 2.61x).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.core.catalog import GPU_CATALOG
+from repro.core.costmodel import LLAMA3_70B, Stage, config_throughput
+from repro.core.workloads import WorkloadType
+
+# (DP, TP, PP) triples from the paper's Fig 4 (8 GPUs total per cell).
+CONFIGS = [(8, 1, 1), (4, 2, 1), (2, 4, 1), (1, 8, 1),
+           (1, 1, 8), (1, 4, 2), (1, 2, 4), (2, 2, 2)]
+WORKLOADS = [WorkloadType(2455, 510), WorkloadType(2455, 18),
+             WorkloadType(496, 510), WorkloadType(496, 18)]
+GPUS = ["H100", "A100", "L40", "A6000"]
+
+
+def _config_throughput(dev, dp, tp, pp, model, w):
+    stages = tuple(Stage(dev, tp, 1.0 / pp) for _ in range(pp))
+    return dp * config_throughput(stages, model, w)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    spreads = []
+    optima = set()
+    for gpu in GPUS:
+        dev = GPU_CATALOG[gpu]
+        for w in WORKLOADS:
+            results = {}
+            for dp, tp, pp in CONFIGS:
+                if tp > dev.devices_per_machine:
+                    continue
+                h, us = timed(_config_throughput, dev, dp, tp, pp,
+                              LLAMA3_70B, w)
+                results[(dp, tp, pp)] = h
+                rows.append({
+                    "name": f"fig4/{gpu}/{w.name}/dp{dp}tp{tp}pp{pp}",
+                    "us_per_call": us,
+                    "throughput_rps": round(h, 4),
+                })
+            feasible = {k: v for k, v in results.items() if v > 0}
+            if feasible:
+                best = max(feasible, key=feasible.get)
+                worst = min(feasible, key=feasible.get)
+                spreads.append(feasible[best] / max(feasible[worst], 1e-9))
+                optima.add((gpu, best))
+                rows.append({
+                    "name": f"fig4/{gpu}/{w.name}/BEST",
+                    "us_per_call": 0.0,
+                    "best_config": f"dp{best[0]}tp{best[1]}pp{best[2]}",
+                    "spread_vs_worst": round(spreads[-1], 2),
+                })
+    rows.append({
+        "name": "fig4/summary",
+        "us_per_call": 0.0,
+        "max_spread": round(max(spreads), 2),
+        "distinct_optima": len({c for _, c in optima}),
+        "paper_claim_max_spread": 2.61,
+    })
+    return rows

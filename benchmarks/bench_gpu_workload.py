@@ -1,0 +1,65 @@
+"""Figure 3 + Figure 11: cost-efficiency of each GPU type per workload type,
+for Llama3-70B and Llama3-8B.
+
+Derived checks (the paper's Observation 1):
+  * data-center GPUs win compute-intensive workloads on the 70B model;
+  * workstation GPUs win memory-intensive workloads on the 70B model;
+  * consumer GPUs win the 8B model;
+  * best-vs-worst GPU choice spread (paper: up to 2.27x).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.core.catalog import GPU_CATALOG
+from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, Stage,
+                                  config_throughput)
+from repro.core.workloads import WORKLOAD_TYPES
+
+# Minimal per-type deployment that fits each model (cf. paper's Fig 3 setup).
+_TP_70B = {"A6000": 4, "A40": 4, "L40": 4, "A100": 4, "H100": 2, "4090": 8}
+_TP_8B = {name: 1 for name in GPU_CATALOG}
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    spreads = []
+    for model, tp_map in ((LLAMA3_70B, _TP_70B), (LLAMA3_8B, _TP_8B)):
+        best_per_w = {}
+        for w in WORKLOAD_TYPES:
+            per_dollar = {}
+            for name, dev in GPU_CATALOG.items():
+                tp = tp_map[name]
+                if tp > dev.devices_per_machine:
+                    continue
+                stages = (Stage(dev, tp, 1.0),)
+                h, us = timed(config_throughput, stages, model, w)
+                cost = tp * dev.price_per_hour
+                per_dollar[name] = h / cost
+                rows.append({
+                    "name": f"fig3/{model.name}/{w.name}/{name}x{tp}",
+                    "us_per_call": us,
+                    "throughput_per_dollar": round(h / cost, 4),
+                    "throughput_rps": round(h, 4),
+                })
+            served = {k: v for k, v in per_dollar.items() if v > 0}
+            if served:
+                best = max(served, key=served.get)
+                worst = min(served, key=served.get)
+                spread = served[best] / max(served[worst], 1e-9)
+                spreads.append(spread)
+                best_per_w[w.name] = best
+                rows.append({
+                    "name": f"fig3/{model.name}/{w.name}/BEST",
+                    "us_per_call": 0.0,
+                    "best_gpu": best,
+                    "spread_vs_worst": round(spread, 2),
+                })
+    rows.append({
+        "name": "fig3/summary",
+        "us_per_call": 0.0,
+        "max_spread": round(max(spreads), 2),
+        "paper_claim_max_spread": 2.27,
+    })
+    return rows

@@ -1,0 +1,57 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — wall times are
+emulation times, NOT TPU performance; the derived column carries the
+roofline-relevant FLOP counts instead)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.flash_attention.ops import flash_attention_op
+
+
+def _bench(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    for (b, h, kv, s, d) in [(1, 8, 2, 512, 128), (1, 4, 4, 1024, 64)]:
+        q = (jax.random.normal(key, (b, h, s, d)) * 0.5).astype(jnp.bfloat16)
+        k = (jax.random.normal(key, (b, kv, s, d)) * 0.5).astype(jnp.bfloat16)
+        v = (jax.random.normal(key, (b, kv, s, d)) * 0.5).astype(jnp.bfloat16)
+        us = _bench(flash_attention_op, q, k, v, block_q=256, block_k=256)
+        flops = 4 * b * h * s * s * d // 2  # causal
+        rows.append({
+            "name": f"kernel/flash_attention/b{b}h{h}kv{kv}s{s}d{d}",
+            "us_per_call": us,
+            "attention_gflops": round(flops / 1e9, 2),
+            "mode": "interpret",
+        })
+
+    for (b, h, kv, t, d) in [(4, 8, 2, 2048, 128), (8, 32, 8, 1024, 128)]:
+        q = (jax.random.normal(key, (b, h, d)) * 0.5).astype(jnp.bfloat16)
+        kc = (jax.random.normal(key, (b, t, kv, d)) * 0.5).astype(jnp.bfloat16)
+        vc = (jax.random.normal(key, (b, t, kv, d)) * 0.5).astype(jnp.bfloat16)
+        lengths = jnp.full((b,), t, jnp.int32)
+        us = _bench(decode_attention_op, q, kc, vc, lengths, block_k=512)
+        kv_bytes = 2 * b * t * kv * d * 2
+        rows.append({
+            "name": f"kernel/decode_attention/b{b}h{h}kv{kv}t{t}d{d}",
+            "us_per_call": us,
+            "kv_mbytes_streamed": round(kv_bytes / 2**20, 1),
+            "mode": "interpret",
+        })
+    return rows

@@ -1,0 +1,56 @@
+"""Roofline summary table (deliverable g): reads the dry-run baseline JSONL
+(results/dryrun_baseline.jsonl, produced by repro.launch.dryrun) and emits
+per-(arch x shape) roofline terms for the single-pod mesh."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_baseline.jsonl")
+
+
+def load_records(path: str = BASELINE) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def run() -> List[Row]:
+    recs = load_records()
+    if not recs:
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "note": "run: python -m repro.launch.dryrun --arch all "
+                         "--shape all --mesh both --out results/dryrun_baseline.jsonl"}]
+    rows: List[Row] = []
+    ok = fail = 0
+    for r in recs:
+        if "error" in r:
+            fail += 1
+            rows.append({"name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                         "us_per_call": 0.0, "ERROR": r["error"][:80]})
+            continue
+        ok += 1
+        if r["mesh"] != "16x16":
+            continue   # roofline table is single-pod; multi-pod proves lowering
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": r["compile_s"] * 1e6,
+            "compute_s": round(r["compute_term_s"], 5),
+            "memory_s": round(r["memory_term_s"], 5),
+            "collective_s": round(r["collective_term_s"], 5),
+            "bottleneck": r["bottleneck"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "args_gib_per_dev": round(r["arg_bytes_per_device"] / 2**30, 2),
+            "fits_hbm": r["fits_hbm"],
+        })
+    rows.append({"name": "roofline/summary", "us_per_call": 0.0,
+                 "lowered_ok": ok, "failed": fail})
+    return rows

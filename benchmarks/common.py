@@ -1,0 +1,25 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+Row = Dict[str, object]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def emit(rows: List[Row]) -> List[str]:
+    """Format rows as ``name,us_per_call,derived`` CSV lines."""
+    lines = []
+    for r in rows:
+        name = r.get("name", "?")
+        us = r.get("us_per_call", 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        lines.append(f"{name},{us:.1f},{derived}")
+    return lines

@@ -1,0 +1,72 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+
+  bench_gpu_workload    Fig 3 + Fig 11 (GPU x workload cost-efficiency)
+  bench_deploy_configs  Fig 4 + Figs 12/13 (deployment configurations)
+  bench_simple_example  §4.2 / App C worked example (exact numbers)
+  bench_end_to_end      Figs 5/6 (+15) end-to-end vs homogeneous
+  bench_hexgen          Fig 7 (vs HexGen uniform/optimal composition)
+  bench_ablation        Fig 8 (ablations)
+  bench_algo_efficiency Fig 9 (MILP vs binary search)
+  bench_multimodel      Fig 10 (multi-model serving)
+  bench_budget_scaling  Fig 16 / App K (gap vs budget)
+  bench_tpu_catalog     hardware adaptation (TPU slice catalog)
+  bench_kernels         Pallas kernels (interpret mode)
+  bench_roofline        deliverable (g): dry-run roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+from benchmarks.common import emit
+
+MODULES = [
+    "bench_simple_example",
+    "bench_gpu_workload",
+    "bench_deploy_configs",
+    "bench_end_to_end",
+    "bench_hexgen",
+    "bench_ablation",
+    "bench_algo_efficiency",
+    "bench_multimodel",
+    "bench_budget_scaling",
+    "bench_tpu_catalog",
+    "bench_kernels",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run")
+    args = ap.parse_args()
+    selected = MODULES
+    if args.only:
+        keys = args.only.split(",")
+        selected = [m for m in MODULES if any(k in m for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in selected:
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            rows = mod.run()
+            for line in emit(rows):
+                print(line)
+            print(f"# {modname}: {len(rows)} rows in "
+                  f"{time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"# {modname}: FAILED {type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: cost-efficient LLM serving over heterogeneous accelerators
+(ICML'25 reproduction) — scheduler core, JAX model zoo, serving runtime,
+Pallas kernels, multi-pod launch."""
+__version__ = "0.1.0"

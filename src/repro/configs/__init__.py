@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned public-pool architectures (each
+cites its source) plus the paper's own evaluation models (Llama3-8B/70B).
+
+``get_config(name)`` / ``list_archs()`` are the ``--arch <id>`` entry points.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+
+_MODULES = {
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "llama3-70b": "repro.configs.llama3_70b",
+}
+
+ASSIGNED_ARCHS = tuple(list(_MODULES)[:10])
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {name: get_config(name) for name in _MODULES}

@@ -1,0 +1,22 @@
+"""ChatGLM3-6B [arXiv:2406.12793] — dense, 2d (half-dim) RoPE, GQA kv=2,
+QKV bias."""
+from repro.models.config import ATTN, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="chatglm3-6b",
+    arch_type="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    period=(LayerDesc(ATTN, MLP),),
+    rope_fraction=0.5,
+    qkv_bias=True,
+    mlp_act="silu",
+    norm="rmsnorm",
+    long_context_mode="sliding_window",
+    source="arXiv:2406.12793",
+)

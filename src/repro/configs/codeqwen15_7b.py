@@ -1,0 +1,22 @@
+"""CodeQwen1.5-7B [hf:Qwen/CodeQwen1.5-7B] — dense, Qwen1.5 architecture:
+GQA kv=32 (== MHA at 32 heads), RoPE theta=1e6, QKV bias, SwiGLU, RMSNorm."""
+from repro.models.config import ATTN, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=13440,
+    vocab_size=92416,
+    period=(LayerDesc(ATTN, MLP),),
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    mlp_act="silu",
+    norm="rmsnorm",
+    long_context_mode="sliding_window",
+    source="hf:Qwen/CodeQwen1.5-7B",
+)

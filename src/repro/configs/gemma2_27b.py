@@ -1,0 +1,26 @@
+"""Gemma-2 27B [arXiv:2408.00118] — dense, local(SWA 4096)/global
+alternating attention, attention + final-logit softcapping, GQA kv=16,
+scaled & tied embeddings, GeGLU."""
+from repro.models.config import ATTN, ATTN_LOCAL, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="gemma2-27b",
+    arch_type="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    period=(LayerDesc(ATTN_LOCAL, MLP), LayerDesc(ATTN, MLP)),
+    sliding_window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    scale_embed=True,
+    tie_embeddings=True,
+    mlp_act="gelu",
+    norm="rmsnorm",
+    long_context_mode="sliding_window",  # global layers windowed at 500k
+    source="arXiv:2408.00118",
+)

@@ -1,0 +1,26 @@
+"""InternVL2-1B [arXiv:2404.16821] — Qwen2-0.5B language backbone (24L,
+d=896, 14H GQA kv=2, head_dim 64) consuming InternViT patch embeddings.
+The vision tower + projector is a STUB: ``input_specs`` provides 256
+precomputed patch embeddings; the language model is fully implemented."""
+from repro.models.config import ATTN, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="internvl2-1b",
+    arch_type="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    period=(LayerDesc(ATTN, MLP),),
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    mlp_act="silu",
+    norm="rmsnorm",
+    frontend="vision_stub",
+    num_patches=256,
+    long_context_mode="sliding_window",
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,32 @@
+"""Jamba-v0.1 (52B) [arXiv:2403.19887] — hybrid Mamba+attention 1:7
+interleave (attention at layer i%8==4), MoE 16 experts top-2 every other
+layer, GQA kv=8, no positional encoding."""
+from repro.models.config import ATTN, MAMBA, MLP, MOE, ArchConfig, LayerDesc
+
+_PERIOD = tuple(
+    LayerDesc(ATTN if i == 4 else MAMBA, MOE if i % 2 == 1 else MLP)
+    for i in range(8)
+)
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    period=_PERIOD,
+    use_rope=False,
+    n_experts=16,
+    n_experts_active=2,
+    moe_d_ff=14336,
+    ssm_state_dim=16,
+    ssm_conv_width=4,
+    ssm_expand=2,
+    mlp_act="silu",
+    norm="rmsnorm",
+    source="arXiv:2403.19887",
+)

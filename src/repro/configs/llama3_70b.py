@@ -1,0 +1,20 @@
+"""Llama3-70B [arXiv:2407.21783] — the paper's large evaluation model."""
+from repro.models.config import ATTN, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="llama3-70b",
+    arch_type="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    period=(LayerDesc(ATTN, MLP),),
+    rope_theta=500_000.0,
+    mlp_act="silu",
+    norm="rmsnorm",
+    long_context_mode="sliding_window",
+    source="arXiv:2407.21783",
+)

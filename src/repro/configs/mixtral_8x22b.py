@@ -1,0 +1,24 @@
+"""Mixtral-8x22B [arXiv:2401.04088] — MoE 8 experts top-2, sliding-window
+attention, GQA kv=8."""
+from repro.models.config import ATTN_LOCAL, MOE, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    period=(LayerDesc(ATTN_LOCAL, MOE),),
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    n_experts=8,
+    n_experts_active=2,
+    moe_d_ff=16384,
+    mlp_act="silu",
+    norm="rmsnorm",
+    source="arXiv:2401.04088",
+)

@@ -1,0 +1,25 @@
+"""MusicGen-large [arXiv:2306.05284] — decoder-only transformer over EnCodec
+audio tokens (vocab 2048).  The EnCodec/conditioning frontend is a STUB:
+``input_specs`` provides a 64-token precomputed conditioning-prefix embedding;
+the decoder itself is fully implemented (LayerNorm, GELU, ungated MLP)."""
+from repro.models.config import ATTN, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    arch_type="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    period=(LayerDesc(ATTN, MLP),),
+    mlp_act="gelu",
+    mlp_gated=False,
+    norm="layernorm",
+    frontend="audio_stub",
+    num_patches=64,
+    long_context_mode="sliding_window",
+    source="arXiv:2306.05284",
+)

@@ -1,0 +1,25 @@
+"""Qwen3-MoE-235B-A22B [hf:Qwen/Qwen3-30B-A3B family] — 94 layers, MoE 128
+experts top-8 (per-expert d_ff=1536), GQA kv=4, QK-norm, RoPE theta=1e6."""
+from repro.models.config import ATTN, MOE, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    arch_type="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    period=(LayerDesc(ATTN, MOE),),
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    n_experts=128,
+    n_experts_active=8,
+    moe_d_ff=1536,
+    mlp_act="silu",
+    norm="rmsnorm",
+    long_context_mode="sliding_window",
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

@@ -1,0 +1,23 @@
+"""StarCoder2-3B [arXiv:2402.19173] — dense, GQA kv=2, RoPE, LayerNorm,
+plain (ungated) GELU MLP."""
+from repro.models.config import ATTN, MLP, ArchConfig, LayerDesc
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    period=(LayerDesc(ATTN, MLP),),
+    rope_theta=100_000.0,
+    qkv_bias=True,
+    mlp_act="gelu",
+    mlp_gated=False,
+    norm="layernorm",
+    long_context_mode="sliding_window",
+    source="arXiv:2402.19173",
+)

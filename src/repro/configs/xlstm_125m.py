@@ -1,0 +1,21 @@
+"""xLSTM-125M [arXiv:2405.04517] — sLSTM + mLSTM blocks (no separate FFN;
+d_ff=0).  Ratio 5:1 mLSTM:sLSTM per period of 6 (xLSTM[7:1]-style mix fitted
+to 12 layers).  Constant-size recurrent state -> native long-context decode."""
+from repro.models.config import MLSTM, NONE, SLSTM, ArchConfig, LayerDesc
+
+_PERIOD = tuple(LayerDesc(MLSTM, NONE) for _ in range(5)) + (LayerDesc(SLSTM, NONE),)
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    arch_type="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    period=_PERIOD,
+    norm="layernorm",
+    source="arXiv:2405.04517",
+)

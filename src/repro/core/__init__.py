@@ -1,0 +1,25 @@
+"""Core contribution: cost-efficient LLM serving plan search over
+heterogeneous accelerators (MILP + binary-search-on-T + simulator)."""
+from repro.core.catalog import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG,
+                                TPU_CATALOG, DeviceType, get_catalog)
+from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, ModelProfile, Stage,
+                                  config_throughput, max_batch_size)
+from repro.core.plan import Config, ServingPlan
+from repro.core.milp import SchedulingProblem, solve_feasibility, solve_milp
+from repro.core.binsearch import knapsack_feasible, solve_binary_search
+from repro.core.scheduler import (build_problem, solve, solve_homogeneous,
+                                  solve_fixed_composition, uniform_composition)
+from repro.core.simulator import SimResult, simulate
+from repro.core.workloads import (TRACE_MIXES, WORKLOAD_TYPES, Request, Trace,
+                                  WorkloadType, make_trace, workload_demand)
+
+__all__ = [
+    "AVAILABILITY_SNAPSHOTS", "GPU_CATALOG", "TPU_CATALOG", "DeviceType",
+    "get_catalog", "LLAMA3_8B", "LLAMA3_70B", "ModelProfile", "Stage",
+    "config_throughput", "max_batch_size", "Config", "ServingPlan",
+    "SchedulingProblem", "solve_feasibility", "solve_milp",
+    "knapsack_feasible", "solve_binary_search", "build_problem", "solve",
+    "solve_homogeneous", "solve_fixed_composition", "uniform_composition",
+    "SimResult", "simulate", "TRACE_MIXES", "WORKLOAD_TYPES", "Request",
+    "Trace", "WorkloadType", "make_trace", "workload_demand",
+]

@@ -1,0 +1,142 @@
+"""Accelerator catalogs.
+
+``GPU_CATALOG`` reproduces Table 1 of the paper exactly (six cloud GPU types
+with FP16 peak FLOPs, HBM bandwidth, memory capacity, and hourly rental price).
+
+``TPU_CATALOG`` is the hardware adaptation: the same scheduling problem posed
+over heterogeneous *TPU slice types*. Prices are representative on-demand
+prices; per-chip constants follow the target-hardware spec used throughout the
+roofline analysis (v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 16 GB).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceType:
+    """One rentable accelerator type.
+
+    Attributes:
+      name: catalog key.
+      peak_flops: peak dense half-precision FLOP/s per device.
+      hbm_bandwidth: HBM bytes/s per device.
+      memory_bytes: HBM capacity in bytes per device.
+      price_per_hour: rental price, $/h per device.
+      devices_per_machine: max devices sharing the fast intra-machine
+        interconnect (TP domain; App-D heuristic restricts TP to one machine).
+      intra_bw: intra-machine interconnect bytes/s (NVLink / PCIe / ICI).
+      inter_bw: inter-machine network bytes/s (Ethernet / DCN), used by PP.
+      family: "datacenter" | "workstation" | "consumer" | "tpu".
+    """
+
+    name: str
+    peak_flops: float
+    hbm_bandwidth: float
+    memory_bytes: float
+    price_per_hour: float
+    devices_per_machine: int
+    intra_bw: float
+    inter_bw: float
+    family: str
+    # Dense (non-sparsity) matmul peak.  Table 1 lists the H100 at 1979
+    # TFLOPS, which is the 2:4-structured-sparsity figure; dense bf16 is
+    # 989.5 TFLOPS.  The cost model computes with the dense peak.
+    dense_peak_flops: float = 0.0
+
+    def __post_init__(self):
+        if self.dense_peak_flops == 0.0:
+            object.__setattr__(self, "dense_peak_flops", self.peak_flops)
+
+    @property
+    def flops_per_dollar(self) -> float:
+        return self.peak_flops / self.price_per_hour
+
+    @property
+    def bandwidth_per_dollar(self) -> float:
+        return self.hbm_bandwidth / self.price_per_hour
+
+    @property
+    def memory_per_dollar(self) -> float:
+        return self.memory_bytes / self.price_per_hour
+
+
+_T = 1e12
+_G = 1e9
+_GB = 1024**3
+
+# Table 1 of the paper.  Rows: A6000, A40, L40, A100, H100, 4090.
+# Data-center GPUs: NVLink 300 GB/s; workstation/consumer: PCIe 60 GB/s.
+# Inter-machine Ethernet: 5 Gb/s = 0.625 GB/s (paper §5.1).
+_ETH = 5 / 8 * _G
+
+GPU_CATALOG: Dict[str, DeviceType] = {
+    "A6000": DeviceType("A6000", 91 * _T, 960 * _G, 48 * _GB, 0.83, 8, 60 * _G, _ETH, "workstation"),
+    "A40":   DeviceType("A40", 150 * _T, 696 * _G, 48 * _GB, 0.55, 8, 60 * _G, _ETH, "workstation"),
+    "L40":   DeviceType("L40", 181 * _T, 864 * _G, 48 * _GB, 0.83, 8, 60 * _G, _ETH, "workstation"),
+    "A100":  DeviceType("A100", 312 * _T, 1555 * _G, 80 * _GB, 1.75, 8, 300 * _G, _ETH, "datacenter"),
+    "H100":  DeviceType("H100", 1979 * _T, 3350 * _G, 80 * _GB, 2.99, 8, 300 * _G, _ETH, "datacenter",
+                        dense_peak_flops=989.5 * _T),
+    # RTX 4090s have no NVLink and no PCIe P2P: multi-GPU traffic stages
+    # through host memory, ~12 GB/s effective (the paper's 60 GB/s PCIe
+    # figure applies to the workstation cards, which do support P2P).
+    "4090":  DeviceType("4090", 83 * _T, 1008 * _G, 24 * _GB, 0.53, 4, 12 * _G, _ETH, "consumer"),
+}
+
+# Hardware adaptation: heterogeneous TPU slice types.  A "device" here is one
+# slice (the paper's unit of rental is one GPU; ours is one slice), so
+# devices_per_machine=1 and TP happens *inside* the slice — peak numbers are
+# aggregated over the slice's chips and intra_bw is the ICI bisection.
+_V5E_FLOPS = 197 * _T
+_V5E_BW = 819 * _G
+_V5E_MEM = 16 * _GB
+_ICI = 50 * _G  # per link
+
+def _tpu(name: str, chips: int, flops: float, bw: float, mem: float,
+         price: float, ici_links: int) -> DeviceType:
+    return DeviceType(
+        name=name,
+        peak_flops=chips * flops,
+        hbm_bandwidth=chips * bw,
+        memory_bytes=chips * mem,
+        price_per_hour=price,
+        devices_per_machine=1,
+        intra_bw=ici_links * _ICI,
+        inter_bw=25 / 8 * _G,  # DCN
+        family="tpu",
+    )
+
+# Representative cloud pricing: larger slices carry bulk discounts and the
+# older v4 generation trades at a deep discount per chip — the same
+# supply-and-demand spread (Fig 2 of the paper) that makes heterogeneous
+# composition worthwhile on GPU marketplaces.
+TPU_CATALOG: Dict[str, DeviceType] = {
+    "v5e-1": _tpu("v5e-1", 1, _V5E_FLOPS, _V5E_BW, _V5E_MEM, 1.20, 0),
+    "v5e-4": _tpu("v5e-4", 4, _V5E_FLOPS, _V5E_BW, _V5E_MEM, 4.40, 4),
+    "v5e-8": _tpu("v5e-8", 8, _V5E_FLOPS, _V5E_BW, _V5E_MEM, 8.00, 8),
+    "v4-8":  _tpu("v4-8", 4, 275 * _T, 1228 * _G, 32 * _GB, 9.50, 6),
+    "v5p-8": _tpu("v5p-8", 4, 459 * _T, 2765 * _G, 95 * _GB, 16.80, 6),
+}
+
+
+def get_catalog(kind: str = "gpu") -> Mapping[str, DeviceType]:
+    if kind == "gpu":
+        return GPU_CATALOG
+    if kind == "tpu":
+        return TPU_CATALOG
+    raise ValueError(f"unknown catalog kind: {kind!r}")
+
+
+# Real-time availability snapshots (paper Table 3, Vast.ai).
+AVAILABILITY_SNAPSHOTS: Dict[str, Dict[str, int]] = {
+    "avail1": {"4090": 16, "A40": 12, "A6000": 8, "L40": 12, "A100": 6, "H100": 8},
+    "avail2": {"4090": 32, "A40": 8, "A6000": 16, "L40": 16, "A100": 7, "H100": 12},
+    "avail3": {"4090": 32, "A40": 16, "A6000": 8, "L40": 8, "A100": 32, "H100": 8},
+    "avail4": {"4090": 24, "A40": 24, "A6000": 24, "L40": 16, "A100": 4, "H100": 8},
+}
+
+TPU_AVAILABILITY_SNAPSHOTS: Dict[str, Dict[str, int]] = {
+    "tpu-avail1": {"v5e-1": 16, "v5e-4": 8, "v5e-8": 4, "v4-8": 4, "v5p-8": 2},
+    "tpu-avail2": {"v5e-1": 32, "v5e-4": 4, "v5e-8": 2, "v4-8": 8, "v5p-8": 1},
+}

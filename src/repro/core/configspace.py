@@ -1,0 +1,153 @@
+"""Feasible deployment-configuration enumeration (§4.3 precomputation + App D).
+
+A configuration is a pipeline of stages; each stage is ``tp`` devices of one
+type inside one machine (App-D heuristic i: TP only within a machine).  We
+enumerate:
+
+* homogeneous configs: one device type, tp ∈ {1,2,4,8}, pp ∈ {1..MAX_STAGES};
+* mixed-type PP configs: 2..MAX_STAGES stages drawn from up to two device
+  types (HexGen-style asymmetric pipelines), non-uniform layer split
+  proportional to stage memory (App-D heuristic ii);
+
+and filter by the App-D constraints:
+
+* memory check: Σ_n d_n(c)·m_n ≥ M_r;
+* availability: d_n(c) ≤ a_n for every type;
+* connectivity: all stage device types must be mutually connected
+  (``connected`` predicate; defaults to everything-connected, matching a
+  single cloud region);
+
+followed by dominance pruning (App G i): drop c if some c' costs no more and
+has ≥ throughput on every workload.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage, config_throughput
+from repro.core.plan import Config
+from repro.core.workloads import WORKLOAD_TYPES, WorkloadType
+
+TP_DEGREES = (1, 2, 4, 8)
+MAX_STAGES = 4
+MAX_MIXED_TYPES = 2
+
+
+def _make_config(stage_specs: Sequence[tuple], model: ModelProfile,
+                 model_index: int) -> Config:
+    """Build a Config with memory-proportional non-uniform layer split."""
+    mems = np.array([dev.memory_bytes * tp for dev, tp in stage_specs], dtype=float)
+    fracs = mems / mems.sum()
+    stages = tuple(Stage(dev, tp, float(f)) for (dev, tp), f in zip(stage_specs, fracs))
+    return Config(stages=stages, model_index=model_index, model=model)
+
+
+def _memory_ok(config: Config) -> bool:
+    total = sum(st.memory for st in config.stages)
+    return total >= config.model.min_memory_bytes()
+
+
+def _availability_ok(config: Config, availability: Mapping[str, int]) -> bool:
+    for name, n in config.device_counts().items():
+        if n > availability.get(name, 0):
+            return False
+    return True
+
+
+def enumerate_configs(
+    model: ModelProfile,
+    catalog: Mapping[str, DeviceType],
+    availability: Mapping[str, int],
+    *,
+    model_index: int = 0,
+    max_stages: int = MAX_STAGES,
+    tp_degrees: Sequence[int] = TP_DEGREES,
+    connected: Optional[Callable[[str, str], bool]] = None,
+    include_mixed: bool = True,
+) -> List[Config]:
+    """Enumerate all feasible configs for one model."""
+    connected = connected or (lambda a, b: True)
+    types = [t for t in catalog.values() if availability.get(t.name, 0) > 0]
+    configs: List[Config] = []
+
+    # Per-type stage menu (respect machine size).
+    stage_menu: Dict[str, List[tuple]] = {}
+    for dev in types:
+        stage_menu[dev.name] = [(dev, tp) for tp in tp_degrees
+                                if tp <= dev.devices_per_machine]
+
+    # Homogeneous configs: same (type, tp) repeated pp times.
+    for dev in types:
+        for (d, tp) in stage_menu[dev.name]:
+            for pp in range(1, max_stages + 1):
+                if tp * pp > availability.get(dev.name, 0):
+                    continue
+                configs.append(_make_config([(d, tp)] * pp, model, model_index))
+
+    # Mixed-type pipelines (asymmetric stages over ≤ MAX_MIXED_TYPES types).
+    if include_mixed and len(types) > 1:
+        all_stage_options = [s for dev in types for s in stage_menu[dev.name]]
+        for n_stages in range(2, max_stages + 1):
+            for combo in itertools.combinations_with_replacement(all_stage_options, n_stages):
+                names = {dev.name for dev, _ in combo}
+                if len(names) < 2 or len(names) > MAX_MIXED_TYPES:
+                    continue  # homogeneous handled above; cap type diversity
+                if not all(connected(a, b) for a in names for b in names):
+                    continue
+                configs.append(_make_config(list(combo), model, model_index))
+
+    configs = [c for c in configs if _memory_ok(c) and _availability_ok(c, availability)]
+    return configs
+
+
+def throughput_table(configs: Sequence[Config],
+                     workloads: Sequence[WorkloadType] = WORKLOAD_TYPES,
+                     throughput_fn: Optional[Callable] = None) -> np.ndarray:
+    """h_{c,w} matrix (req/s).  ``throughput_fn(config, workload)`` overrides
+    the analytical model (e.g. with a profiled table)."""
+    fn = throughput_fn or (lambda c, w: config_throughput(c.stages, c.model, w))
+    h = np.zeros((len(configs), len(workloads)))
+    for i, c in enumerate(configs):
+        for j, w in enumerate(workloads):
+            h[i, j] = fn(c, w)
+    return h
+
+
+def prune_dominated(configs: List[Config], h: np.ndarray,
+                    tol: float = 1e-9) -> tuple[List[Config], np.ndarray]:
+    """App-G pruning: drop configs dominated on (cost, every-workload h).
+
+    A config is dominated if another has cost ≤ and throughput ≥ everywhere
+    (strictly better somewhere).  Also drops configs with all-zero throughput.
+    """
+    keep: List[int] = []
+    costs = np.array([c.cost for c in configs])
+    order = np.argsort(costs)  # cheap first: dominators found early
+    for idx in order:
+        if h[idx].max() <= tol:
+            continue
+        dominated = False
+        for k in keep:
+            if costs[k] <= costs[idx] + tol and np.all(h[k] >= h[idx] - tol):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(idx)
+    # Exact second pass: cost ties admitted above can still dominate each
+    # other (greedy only checks against earlier-kept entries).
+    final: List[int] = []
+    for i in keep:
+        dominated = any(
+            j != i and costs[j] <= costs[i] + tol
+            and np.all(h[j] >= h[i] - tol)
+            and (costs[j] < costs[i] - tol or np.any(h[j] > h[i] + tol))
+            for j in keep)
+        if not dominated:
+            final.append(i)
+    final.sort()
+    return [configs[i] for i in final], h[final]

@@ -1,0 +1,223 @@
+"""Analytical serving cost model.
+
+The paper obtains the per-config/per-workload throughput table ``h_{c,w}`` via
+one-time profiling on real GPUs (§4.3, item iv).  Without heterogeneous
+hardware in this container we replace profiling with an analytical roofline
+model with the *same interface* — a table ``h[c][w]`` in requests/second — and
+additionally support loading an externally profiled table (``ProfiledThroughput``).
+
+The model captures exactly the physics the paper's observations rest on:
+
+* prefill is compute-bound  →  t_prefill ≈ FLOPs / (Σ peak_flops · MFU) + TP comm
+* decode is memory-bound    →  t_step   ≈ bytes(weights_active + KV) / HBM_bw + TP comm
+* batch size is capped by the KV-cache memory left after weights
+* TP adds per-layer all-reduce cost over the intra-machine link
+* PP throughput is bottlenecked by its slowest stage; activations cross the
+  inter-machine network
+
+so "workstation GPUs win memory-bound decode per dollar", "H100 wins
+compute-bound prefill", and "consumer GPUs win small models" all emerge from
+first principles (§3 Observations 1–3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple
+
+from repro.core.catalog import DeviceType
+from repro.core.workloads import WorkloadType
+
+BYTES_PER_PARAM = 2  # bf16 serving
+
+# Utilization knobs (single global calibration, not per-GPU fudge factors).
+PREFILL_MFU = 0.55
+DECODE_BW_UTIL = 0.75
+# Effective concurrent batch in the paper's trace-driven serving regime
+# (trace concurrency and latency SLOs keep effective decode batches well
+# under vLLM's max_num_seqs).  The cap balances the paper's two capacity
+# arguments: small enough that bandwidth-per-dollar decides (Observation
+# 1 iii: consumer GPUs win small models), large enough that KV-memory
+# capacity per dollar matters (Observation 1 ii: workstation GPUs' 1.8x
+# memory/$ wins memory-bound 70B workloads).
+MAX_BATCH = 64
+MEMORY_UTIL = 0.9  # vLLM gpu_memory_utilization: usable fraction of HBM
+RUNTIME_OVERHEAD_BYTES = 1 * 1024**3  # per-device activations/framework
+# Unhidden per-boundary cost of a pipeline hop (NCCL-over-TCP handshake +
+# framing on commodity Ethernet).  Charged per prefill and per decode step:
+# single-batch PP (vLLM semantics) does not overlap the hop with compute.
+PP_BOUNDARY_LATENCY_S = 3e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Static facts about a model needed to cost serving it.
+
+    ``params_active`` differs from ``params_total`` for MoE (top-k activated
+    experts); ``n_attn_layers`` differs from ``n_layers`` for hybrids (Jamba);
+    ``window`` bounds the KV context for sliding-window attention;
+    ``state_bytes`` is the constant recurrent state (SSM/xLSTM) per sequence.
+    """
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_kv_heads: int
+    head_dim: int
+    params_total: float
+    params_active: float
+    n_attn_layers: int = -1           # -1 → == n_layers
+    window: int = 0                   # 0 → full attention
+    state_bytes_per_seq: float = 0.0  # SSM/recurrent state
+    vocab: int = 32000
+
+    @property
+    def attn_layers(self) -> int:
+        return self.n_layers if self.n_attn_layers < 0 else self.n_attn_layers
+
+    @property
+    def weight_bytes(self) -> float:
+        return self.params_total * BYTES_PER_PARAM
+
+    @property
+    def active_weight_bytes(self) -> float:
+        return self.params_active * BYTES_PER_PARAM
+
+    @property
+    def kv_bytes_per_token(self) -> float:
+        """KV-cache bytes appended per generated/prefilled token (all layers)."""
+        return 2 * self.attn_layers * self.n_kv_heads * self.head_dim * BYTES_PER_PARAM
+
+    def kv_context(self, context_len: int) -> float:
+        """Effective KV length actually attended to / held."""
+        if self.window and self.window < context_len:
+            return float(self.window)
+        return float(context_len)
+
+    def min_memory_bytes(self) -> float:
+        """M_r in the paper's App-D memory check (weights + one request's KV)."""
+        return self.weight_bytes * 1.2
+
+
+# The paper's evaluation models.
+LLAMA3_8B = ModelProfile(
+    name="llama3-8b", n_layers=32, d_model=4096, n_kv_heads=8, head_dim=128,
+    params_total=8.03e9, params_active=8.03e9, vocab=128256)
+LLAMA3_70B = ModelProfile(
+    name="llama3-70b", n_layers=80, d_model=8192, n_kv_heads=8, head_dim=128,
+    params_total=70.6e9, params_active=70.6e9, vocab=128256)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One pipeline stage: ``tp`` devices of one type within one machine."""
+
+    device: DeviceType
+    tp: int
+    layer_frac: float  # fraction of layers on this stage (App-D non-uniform split)
+
+    @property
+    def price(self) -> float:
+        return self.tp * self.device.price_per_hour
+
+    @property
+    def memory(self) -> float:
+        return self.tp * self.device.memory_bytes
+
+
+def _tp_allreduce_time(stage: Stage, act_bytes: float, n_layers: float) -> float:
+    """Per-layer tensor-parallel all-reduce cost (2 all-reduces per layer)."""
+    if stage.tp == 1:
+        return 0.0
+    ring_factor = 2.0 * (stage.tp - 1) / stage.tp
+    return 2.0 * n_layers * act_bytes * ring_factor / stage.device.intra_bw
+
+
+def _stage_prefill_time(stage: Stage, model: ModelProfile, s_in: int) -> float:
+    frac = stage.layer_frac
+    # Dense matmul FLOPs ≈ 2·P_active·S, plus quadratic attention term.
+    attn_ctx = model.kv_context(s_in)
+    flops = (2.0 * model.params_active * s_in
+             + 4.0 * model.attn_layers * s_in * attn_ctx * model.n_kv_heads * model.head_dim) * frac
+    compute = stage.tp * stage.device.dense_peak_flops * PREFILL_MFU
+    t_compute = flops / compute
+    # Weight read (matters for tiny prompts / huge models).
+    t_mem = frac * model.active_weight_bytes / stage.tp / (stage.device.hbm_bandwidth * DECODE_BW_UTIL)
+    act_bytes = s_in * model.d_model * BYTES_PER_PARAM
+    t_comm = _tp_allreduce_time(stage, act_bytes, model.n_layers * frac)
+    return max(t_compute, t_mem) + t_comm
+
+
+def _stage_decode_step_time(stage: Stage, model: ModelProfile, batch: float,
+                            context: float) -> float:
+    frac = stage.layer_frac
+    kv_read = batch * model.kv_context(context) * model.kv_bytes_per_token * frac
+    state_read = batch * model.state_bytes_per_seq * frac
+    bytes_read = frac * model.active_weight_bytes / stage.tp + (kv_read + state_read) / stage.tp
+    t_mem = bytes_read / (stage.device.hbm_bandwidth * DECODE_BW_UTIL)
+    flops = 2.0 * model.params_active * batch * frac
+    t_compute = flops / (stage.tp * stage.device.dense_peak_flops * PREFILL_MFU)
+    act_bytes = batch * model.d_model * BYTES_PER_PARAM
+    t_comm = _tp_allreduce_time(stage, act_bytes, model.n_layers * frac)
+    return max(t_mem, t_compute) + t_comm
+
+
+def max_batch_size(stages: Sequence[Stage], model: ModelProfile,
+                   workload: WorkloadType) -> float:
+    """KV-memory-capped concurrent batch size for this config."""
+    total_mem = sum(st.memory for st in stages)
+    n_devices = sum(st.tp for st in stages)
+    free = (MEMORY_UTIL * total_mem - model.weight_bytes
+            - RUNTIME_OVERHEAD_BYTES * n_devices)
+    if free <= 0:
+        return 0.0
+    ctx = model.kv_context(workload.input_len + workload.output_len)
+    per_seq = ctx * model.kv_bytes_per_token + model.state_bytes_per_seq
+    if per_seq <= 0:
+        return float(MAX_BATCH)
+    return float(min(MAX_BATCH, max(1.0, free / per_seq)))
+
+
+def config_throughput(stages: Sequence[Stage], model: ModelProfile,
+                      workload: WorkloadType) -> float:
+    """h_{c,w}: steady-state requests/second of one replica.
+
+    A request costs one prefill plus ``output_len`` amortized decode-step
+    shares; with PP the bottleneck stage gates throughput and activations
+    cross the inter-machine link between stages.
+    """
+    batch = max_batch_size(stages, model, workload)
+    if batch < 1.0:
+        return 0.0
+    avg_ctx = workload.input_len + workload.output_len / 2.0
+    n_stages = len(stages)
+
+    # Throughput is gated by the slowest stage (pipeline steady state).
+    prefill_bottleneck = max(_stage_prefill_time(st, model, workload.input_len) for st in stages)
+    decode_bottleneck = max(_stage_decode_step_time(st, model, batch, avg_ctx) for st in stages)
+
+    if n_stages > 1:
+        inter_bw = min(st.device.inter_bw for st in stages)
+        boundary = n_stages - 1
+        prefill_bottleneck += boundary * (
+            workload.input_len * model.d_model * BYTES_PER_PARAM / inter_bw
+            + PP_BOUNDARY_LATENCY_S)
+        decode_bottleneck += boundary * (
+            batch * model.d_model * BYTES_PER_PARAM / inter_bw
+            + PP_BOUNDARY_LATENCY_S)
+
+    time_per_request = prefill_bottleneck + workload.output_len * decode_bottleneck / batch
+    return 1.0 / time_per_request
+
+
+class ProfiledThroughput:
+    """Drop-in replacement for the analytical model: a profiled h-table.
+
+    ``table[(config_key, workload_index)] -> req/s`` — the exact artifact the
+    paper's one-time profiling step produces.
+    """
+
+    def __init__(self, table: Mapping[Tuple[str, int], float]):
+        self._table = dict(table)
+
+    def __call__(self, config_key: str, workload_index: int) -> float:
+        return self._table[(config_key, workload_index)]

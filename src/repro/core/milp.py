@@ -1,0 +1,307 @@
+"""The paper's scheduling MILP (§4.3) over scipy/HiGHS.
+
+    arg min T
+    s.t.  Σ_c x_{c,w} = 1                       ∀w   (assignment)
+          Σ_w x_{c,w}·λ_w/(y_c·h_{c,w}) ≤ T     ∀c   (makespan)
+          x_{c,w} ≤ y_c                         ∀c,w (activation coupling)
+          Σ_c o_c·y_c ≤ B                            (budget)
+          Σ_c d_n(c)·y_c ≤ a_n                  ∀n   (availability)
+          y_c ∈ {0,1,2,...}
+
+The makespan constraint is bilinear in (T, y_c).  We linearize it exactly:
+multiply through by y_c, expand y_c = Σ_k k·u_{c,k} with binaries u_{c,k}
+(Σ_k u_{c,k} ≤ 1), and introduce v_{c,k} ⩬ T·u_{c,k} via its upper McCormick
+envelope (v ≤ T, v ≤ T_ub·u) — upper envelope suffices because the solver
+*wants* v large (it relaxes the makespan constraint), so at optimum
+v_{c,k} = min(T, T_ub·u_{c,k}) = T·u_{c,k} exactly:
+
+          Σ_w x_{c,w}·λ_w/h_{c,w} ≤ Σ_k k·v_{c,k}   ∀c.
+
+The multi-model extension (App E) is handled by generalizing workload columns
+to *demands* d = (model m, workload w, volume λ): configs built for model m
+have h_{c,d} = 0 for demands of other models, and budget/availability couple
+all models — exactly Eqs. (8)-(12).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from repro.core.plan import Config, ServingPlan
+
+MAX_COPIES = 64  # hard cap on y_c (availability usually binds first)
+
+
+@dataclasses.dataclass
+class SchedulingProblem:
+    """Inputs to the scheduler, after config enumeration and costing."""
+
+    configs: List[Config]
+    h: np.ndarray                       # (C, D) req/s; 0 = config can't serve demand
+    demands: List[Tuple[int, int, float]]  # (model, workload, λ) with λ > 0
+    budget: float
+    availability: Mapping[str, int]
+
+    def __post_init__(self):
+        assert self.h.shape == (len(self.configs), len(self.demands))
+
+    @property
+    def lam(self) -> np.ndarray:
+        return np.array([d[2] for d in self.demands], dtype=float)
+
+    def y_max(self, c: int) -> int:
+        """Copies of config c that availability and budget allow."""
+        cfg = self.configs[c]
+        k = MAX_COPIES
+        for name, n in cfg.device_counts().items():
+            k = min(k, self.availability.get(name, 0) // n)
+        if cfg.cost > 0:
+            k = min(k, int(self.budget // cfg.cost))
+        return max(k, 0)
+
+    def makespan_upper_bound(self) -> float:
+        """T_ub: serve each model's whole demand serially on its cheapest
+        single usable config (App G's worst-case bound)."""
+        total = 0.0
+        models = sorted({m for (m, _, _) in self.demands})
+        for m in models:
+            d_idx = [i for i, (mm, _, _) in enumerate(self.demands) if mm == m]
+            best: Optional[float] = None
+            for c, cfg in enumerate(self.configs):
+                if cfg.model_index != m or self.y_max(c) < 1:
+                    continue
+                if any(self.h[c, d] <= 0 for d in d_idx):
+                    continue
+                t = sum(self.lam[d] / self.h[c, d] for d in d_idx)
+                best = t if best is None else min(best, t)
+            if best is None:
+                raise ValueError(f"no feasible single config for model {m}")
+            total += best
+        return 2.0 * total
+
+
+def _plan_from_solution(problem: SchedulingProblem, y: np.ndarray, x: np.ndarray,
+                        info: Dict[str, float]) -> ServingPlan:
+    """Expand (y_c, x_{c,d}) into per-replica rows (copies split x evenly)."""
+    replicas: List[Config] = []
+    rows: List[np.ndarray] = []
+    for c, cfg in enumerate(problem.configs):
+        copies = int(round(y[c]))
+        for _ in range(copies):
+            replicas.append(cfg)
+            rows.append(x[c] / copies)
+    assignment = np.array(rows) if rows else np.zeros((0, len(problem.demands)))
+    makespan = plan_makespan(problem, y, x)
+    cost = float(sum(cfg.cost * int(round(y[c])) for c, cfg in enumerate(problem.configs)))
+    return ServingPlan(replicas=replicas, assignment=assignment,
+                       demands=list(problem.demands), makespan=makespan,
+                       cost=cost, solver_info=info)
+
+
+def plan_makespan(problem: SchedulingProblem, y: np.ndarray, x: np.ndarray) -> float:
+    """max_c Σ_d x_{c,d}·λ_d / (y_c·h_{c,d})."""
+    t = 0.0
+    lam = problem.lam
+    for c in range(len(problem.configs)):
+        if round(y[c]) < 1:
+            continue
+        tc = 0.0
+        for d in range(len(problem.demands)):
+            if x[c, d] > 1e-9:
+                tc += x[c, d] * lam[d] / (round(y[c]) * problem.h[c, d])
+        t = max(t, tc)
+    return t
+
+
+def solve_milp(problem: SchedulingProblem, *, time_limit: float = 120.0,
+               mip_rel_gap: float = 1e-3) -> ServingPlan:
+    """Direct min-makespan MILP with the exact linearization above."""
+    C, D = problem.h.shape
+    lam = problem.lam
+    T_ub = problem.makespan_upper_bound()
+    kmax = [problem.y_max(c) for c in range(C)]
+    usable = [c for c in range(C) if kmax[c] >= 1]
+
+    # Variable layout: [T | x (C*D) | u (Σ kmax) | v (Σ kmax)]
+    n_x = C * D
+    u_off: Dict[int, int] = {}
+    off = 1 + n_x
+    for c in usable:
+        u_off[c] = off
+        off += kmax[c]
+    n_u = off - (1 + n_x)
+    v_off = {c: u_off[c] + n_u for c in usable}
+    n_var = 1 + n_x + 2 * n_u
+
+    def xi(c: int, d: int) -> int:
+        return 1 + c * D + d
+
+    lb = np.zeros(n_var)
+    ub = np.full(n_var, np.inf)
+    ub[0] = T_ub
+    for c in range(C):
+        for d in range(D):
+            ub[xi(c, d)] = 1.0 if (c in u_off and problem.h[c, d] > 0) else 0.0
+    for c in usable:
+        ub[u_off[c]: u_off[c] + kmax[c]] = 1.0      # binaries
+        ub[v_off[c]: v_off[c] + kmax[c]] = T_ub      # v = T·u
+    integrality = np.zeros(n_var)
+    for c in usable:
+        integrality[u_off[c]: u_off[c] + kmax[c]] = 1
+
+    rows, cols, vals, c_lb, c_ub = [], [], [], [], []
+    r = 0
+
+    def add(entries, lo, hi):
+        nonlocal r
+        for col, val in entries:
+            rows.append(r); cols.append(col); vals.append(val)
+        c_lb.append(lo); c_ub.append(hi)
+        r += 1
+
+    # (2) assignment: Σ_c x_{c,d} = 1
+    for d in range(D):
+        add([(xi(c, d), 1.0) for c in range(C)], 1.0, 1.0)
+    # (3) makespan: Σ_d x λ/h − Σ_k k·v_{c,k} ≤ 0
+    for c in usable:
+        ent = [(xi(c, d), lam[d] / problem.h[c, d])
+               for d in range(D) if problem.h[c, d] > 0]
+        ent += [(v_off[c] + k, -(k + 1.0)) for k in range(kmax[c])]
+        add(ent, -np.inf, 0.0)
+    # McCormick: v − T ≤ 0 ; v − T_ub·u ≤ 0
+    for c in usable:
+        for k in range(kmax[c]):
+            add([(v_off[c] + k, 1.0), (0, -1.0)], -np.inf, 0.0)
+            add([(v_off[c] + k, 1.0), (u_off[c] + k, -T_ub)], -np.inf, 0.0)
+    # SOS-ish: Σ_k u_{c,k} ≤ 1
+    for c in usable:
+        add([(u_off[c] + k, 1.0) for k in range(kmax[c])], 0.0, 1.0)
+    # (4) activation: x_{c,d} − y_c ≤ 0
+    for c in usable:
+        for d in range(D):
+            if problem.h[c, d] > 0:
+                ent = [(xi(c, d), 1.0)]
+                ent += [(u_off[c] + k, -(k + 1.0)) for k in range(kmax[c])]
+                add(ent, -np.inf, 0.0)
+    # (5) budget: Σ_c o_c Σ_k k·u ≤ B
+    ent = []
+    for c in usable:
+        ent += [(u_off[c] + k, problem.configs[c].cost * (k + 1.0)) for k in range(kmax[c])]
+    add(ent, 0.0, problem.budget)
+    # (6) availability per device type
+    names = sorted({n for c in usable for n in problem.configs[c].device_counts()})
+    for name in names:
+        ent = []
+        for c in usable:
+            dn = problem.configs[c].device_counts().get(name, 0)
+            if dn:
+                ent += [(u_off[c] + k, dn * (k + 1.0)) for k in range(kmax[c])]
+        add(ent, 0.0, float(problem.availability.get(name, 0)))
+
+    A = sp.csr_matrix((vals, (rows, cols)), shape=(r, n_var))
+    obj = np.zeros(n_var)
+    obj[0] = 1.0
+
+    t0 = time.perf_counter()
+    res = milp(c=obj, constraints=LinearConstraint(A, c_lb, c_ub),
+               integrality=integrality, bounds=Bounds(lb, ub),
+               options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap})
+    elapsed = time.perf_counter() - t0
+    if res.status not in (0, 1) or res.x is None:
+        raise RuntimeError(f"MILP failed: status={res.status} {res.message}")
+
+    sol = res.x
+    y = np.zeros(C)
+    for c in usable:
+        u = sol[u_off[c]: u_off[c] + kmax[c]]
+        y[c] = float(np.round(u).dot(np.arange(1, kmax[c] + 1)))
+    x = np.zeros((C, D))
+    for c in range(C):
+        for d in range(D):
+            x[c, d] = max(0.0, sol[xi(c, d)])
+    info = {"solver": 0.0, "solve_time_s": elapsed, "objective_T": float(sol[0]),
+            "mip_gap": float(getattr(res, "mip_gap", 0.0) or 0.0)}
+    return _plan_from_solution(problem, y, x, info)
+
+
+def solve_feasibility(problem: SchedulingProblem, t_hat: float, *,
+                      time_limit: float = 30.0,
+                      minimize_cost: bool = True
+                      ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """App-F feasibility check: is there a plan with makespan ≤ T̂?
+
+    For fixed T̂ the makespan constraint Σ_d x·λ/h ≤ T̂·y_c is *linear*, so
+    this is a plain MILP with integer y — no linearization needed.  Returns
+    (y, x) or None.
+    """
+    C, D = problem.h.shape
+    lam = problem.lam
+    kmax = [problem.y_max(c) for c in range(C)]
+
+    # Layout: [x (C*D) | y (C)]
+    n_var = C * D + C
+
+    def xi(c: int, d: int) -> int:
+        return c * D + d
+
+    def yi(c: int) -> int:
+        return C * D + c
+
+    lb = np.zeros(n_var)
+    ub = np.zeros(n_var)
+    for c in range(C):
+        ub[yi(c)] = kmax[c]
+        for d in range(D):
+            ub[xi(c, d)] = 1.0 if (kmax[c] >= 1 and problem.h[c, d] > 0) else 0.0
+    integrality = np.zeros(n_var)
+    integrality[C * D:] = 1
+
+    rows, cols, vals, c_lb, c_ub = [], [], [], [], []
+    r = 0
+
+    def add(entries, lo, hi):
+        nonlocal r
+        for col, val in entries:
+            rows.append(r); cols.append(col); vals.append(val)
+        c_lb.append(lo); c_ub.append(hi)
+        r += 1
+
+    for d in range(D):
+        add([(xi(c, d), 1.0) for c in range(C)], 1.0, 1.0)
+    for c in range(C):
+        if kmax[c] < 1:
+            continue
+        ent = [(xi(c, d), lam[d] / problem.h[c, d])
+               for d in range(D) if problem.h[c, d] > 0]
+        ent.append((yi(c), -t_hat))
+        add(ent, -np.inf, 0.0)
+        for d in range(D):
+            if problem.h[c, d] > 0:
+                add([(xi(c, d), 1.0), (yi(c), -1.0)], -np.inf, 0.0)
+    add([(yi(c), problem.configs[c].cost) for c in range(C)], 0.0, problem.budget)
+    names = sorted({n for cfg in problem.configs for n in cfg.device_counts()})
+    for name in names:
+        ent = [(yi(c), float(problem.configs[c].device_counts().get(name, 0)))
+               for c in range(C)]
+        add(ent, 0.0, float(problem.availability.get(name, 0)))
+
+    A = sp.csr_matrix((vals, (rows, cols)), shape=(r, n_var))
+    obj = np.zeros(n_var)
+    if minimize_cost:
+        for c in range(C):
+            obj[yi(c)] = problem.configs[c].cost
+
+    res = milp(c=obj, constraints=LinearConstraint(A, c_lb, c_ub),
+               integrality=integrality, bounds=Bounds(lb, ub),
+               options={"time_limit": time_limit})
+    if res.status not in (0,) or res.x is None:
+        return None
+    sol = res.x
+    y = np.array([round(sol[yi(c)]) for c in range(C)], dtype=float)
+    x = np.array([[max(0.0, sol[xi(c, d)]) for d in range(D)] for c in range(C)])
+    return y, x

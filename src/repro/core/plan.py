@@ -1,0 +1,86 @@
+"""Serving-plan datatypes shared by the scheduler, simulator, and runtime."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """One feasible deployment configuration c (a single model replica).
+
+    Mirrors §4.3: v_c (GPU counts per type), s_c (parallelism strategy: TP
+    degree per pipeline stage), o_c (price), and h_{c,w} (throughput row,
+    filled by the cost model).
+    """
+
+    stages: Tuple[Stage, ...]
+    model_index: int
+    model: ModelProfile
+
+    @property
+    def key(self) -> str:
+        s = "+".join(f"{st.device.name}x{st.tp}" for st in self.stages)
+        return f"{self.model.name}:{s}"
+
+    @property
+    def strategy(self) -> Tuple[int, ...]:
+        """s_c: TP degree of each pipeline stage."""
+        return tuple(st.tp for st in self.stages)
+
+    @property
+    def cost(self) -> float:
+        """o_c in $/h."""
+        return sum(st.price for st in self.stages)
+
+    def device_counts(self) -> Dict[str, int]:
+        """v_c: devices used per type."""
+        counts: Dict[str, int] = {}
+        for st in self.stages:
+            counts[st.device.name] = counts.get(st.device.name, 0) + st.tp
+        return counts
+
+    @property
+    def num_devices(self) -> int:
+        return sum(st.tp for st in self.stages)
+
+
+@dataclasses.dataclass
+class ServingPlan:
+    """The scheduler's output: composition + configurations + assignment.
+
+    ``replicas[i]`` is a chosen Config (each copy listed separately, i.e. a
+    config with y_c = 3 appears three times); ``assignment[i, d]`` is the
+    fraction of demand d routed to replica i (columns sum to 1 over replicas).
+    ``demands`` are (model_index, workload_index, λ) triples.
+    """
+
+    replicas: Sequence[Config]
+    assignment: np.ndarray
+    demands: Sequence[Tuple[int, int, float]]
+    makespan: float
+    cost: float
+    solver_info: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def composition(self) -> Dict[str, int]:
+        total: Dict[str, int] = {}
+        for c in self.replicas:
+            for name, n in c.device_counts().items():
+                total[name] = total.get(name, 0) + n
+        return total
+
+    def summary(self) -> str:
+        lines = [f"ServingPlan: {len(self.replicas)} replicas, "
+                 f"cost {self.cost:.2f} $/h, makespan {self.makespan:.2f} s"]
+        lines.append(f"  composition: {self.composition()}")
+        for i, c in enumerate(self.replicas):
+            frac = ", ".join(
+                f"w{d}:{self.assignment[i, d]:.2f}"
+                for d in range(self.assignment.shape[1]) if self.assignment[i, d] > 1e-6)
+            lines.append(f"  [{i}] {c.key} (${c.cost:.2f}/h) <- {frac}")
+        return "\n".join(lines)

@@ -1,0 +1,218 @@
+"""Top-level scheduler: trace + budget + availability → ServingPlan.
+
+Also provides the paper's baselines:
+
+* homogeneous(type): rent only one GPU type (availability unconstrained, as
+  the paper assumes for homogeneous baselines), deployment configs and
+  workload assignment still optimized by our algorithm — exactly the paper's
+  "fine-tune ... using our scheduling algorithm" setup;
+* uniform-composition (ablation i / HexGen-uniform): spend the budget evenly
+  across available types, then optimize deployment+assignment within that
+  fixed composition;
+* round-robin assignment (ablation iii): workload fractions forced
+  proportional to replica throughput (workload-unaware);
+* uniform-deployment (ablation ii): a single TP-only config shape for all
+  replicas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import configspace
+from repro.core.binsearch import solve_binary_search
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, config_throughput
+from repro.core.milp import SchedulingProblem, solve_milp, _plan_from_solution
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import WORKLOAD_TYPES, Trace, WorkloadType, workload_demand
+
+
+def build_problem(
+    models: Sequence[ModelProfile],
+    trace: Trace,
+    catalog: Mapping[str, DeviceType],
+    availability: Mapping[str, int],
+    budget: float,
+    *,
+    workloads: Sequence[WorkloadType] = WORKLOAD_TYPES,
+    throughput_fn: Optional[Callable] = None,
+    include_mixed: bool = True,
+    max_stages: int = configspace.MAX_STAGES,
+    prune: bool = True,
+) -> SchedulingProblem:
+    """Enumerate configs for every model and assemble the demand matrix."""
+    lam = workload_demand(trace, num_models=len(models))
+    demands: List[Tuple[int, int, float]] = []
+    for m in range(len(models)):
+        for w in range(len(workloads)):
+            if lam[m, w] > 0:
+                demands.append((m, w, float(lam[m, w])))
+
+    all_configs: List[Config] = []
+    h_rows: List[np.ndarray] = []
+    for m, model in enumerate(models):
+        cfgs = configspace.enumerate_configs(
+            model, catalog, availability, model_index=m,
+            include_mixed=include_mixed, max_stages=max_stages)
+        hw = configspace.throughput_table(cfgs, workloads, throughput_fn)
+        if prune and len(cfgs):
+            cfgs, hw = configspace.prune_dominated(cfgs, hw)
+        for i, cfg in enumerate(cfgs):
+            all_configs.append(cfg)
+            row = np.zeros(len(demands))
+            for j, (md, wd, _) in enumerate(demands):
+                row[j] = hw[i, wd] if md == m else 0.0
+            h_rows.append(row)
+    h = np.array(h_rows) if h_rows else np.zeros((0, len(demands)))
+    return SchedulingProblem(configs=all_configs, h=h, demands=demands,
+                             budget=budget, availability=availability)
+
+
+def solve(
+    models: Sequence[ModelProfile],
+    trace: Trace,
+    catalog: Mapping[str, DeviceType],
+    availability: Mapping[str, int],
+    budget: float,
+    *,
+    method: str = "binary_search",
+    workloads: Sequence[WorkloadType] = WORKLOAD_TYPES,
+    throughput_fn: Optional[Callable] = None,
+    include_mixed: bool = True,
+    tol: float = 1.0,
+    time_limit: float = 120.0,
+) -> ServingPlan:
+    problem = build_problem(models, trace, catalog, availability, budget,
+                            workloads=workloads, throughput_fn=throughput_fn,
+                            include_mixed=include_mixed)
+    if method == "milp":
+        return solve_milp(problem, time_limit=time_limit)
+    if method == "binary_search":
+        return solve_binary_search(problem, tol=tol,
+                                   time_limit_per_check=time_limit / 4)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def solve_min_cost(
+    models: Sequence[ModelProfile],
+    trace: Trace,
+    catalog: Mapping[str, DeviceType],
+    availability: Mapping[str, int],
+    budget: float,
+    slo_makespan: float,
+    *,
+    workloads: Sequence[WorkloadType] = WORKLOAD_TYPES,
+    throughput_fn: Optional[Callable] = None,
+    time_limit: float = 60.0,
+) -> ServingPlan:
+    """Beyond-paper dual formulation: given a makespan SLO, rent the
+    *cheapest* feasible composition (the paper minimizes T under a budget;
+    operators often want min-$ under a deadline).  One feasibility MILP at
+    T̂ = SLO with a cost objective."""
+    from repro.core.milp import solve_feasibility, _plan_from_solution
+    problem = build_problem(models, trace, catalog, availability, budget,
+                            workloads=workloads, throughput_fn=throughput_fn)
+    witness = solve_feasibility(problem, slo_makespan, time_limit=time_limit,
+                                minimize_cost=True)
+    if witness is None:
+        raise RuntimeError(
+            f"no plan meets makespan SLO {slo_makespan}s within budget")
+    y, x = witness
+    return _plan_from_solution(problem, y, x,
+                               {"solver": 2.0, "slo_s": slo_makespan})
+
+
+def replan(
+    plan: ServingPlan,
+    models: Sequence[ModelProfile],
+    trace: Trace,
+    catalog: Mapping[str, DeviceType],
+    new_availability: Mapping[str, int],
+    budget: float,
+    **kw,
+) -> ServingPlan:
+    """Availability changed mid-serving (Fig 2: cloud pools fluctuate):
+    re-solve against the new pool.  Replicas whose devices survive keep
+    their identity (the runtime can keep them warm); the rest are re-rented.
+    """
+    new_plan = solve(models, trace, catalog, new_availability, budget, **kw)
+    kept = sum(1 for c in new_plan.replicas
+               if any(c.key == o.key for o in plan.replicas))
+    new_plan.solver_info["replicas_kept"] = float(kept)
+    return new_plan
+
+
+# ---------------------------------------------------------------- baselines
+
+def homogeneous_availability(catalog: Mapping[str, DeviceType], gpu_type: str,
+                             budget: float) -> Dict[str, int]:
+    """Paper baseline: unlimited single-type pool (budget is the binding cap)."""
+    dev = catalog[gpu_type]
+    return {gpu_type: int(budget // dev.price_per_hour)}
+
+
+def solve_homogeneous(models, trace, catalog, gpu_type: str, budget: float,
+                      **kw) -> ServingPlan:
+    avail = homogeneous_availability(catalog, gpu_type, budget)
+    sub = {gpu_type: catalog[gpu_type]}
+    return solve(models, trace, sub, avail, budget, **kw)
+
+
+def uniform_composition(catalog: Mapping[str, DeviceType],
+                        availability: Mapping[str, int],
+                        budget: float) -> Dict[str, int]:
+    """Ablation (i): spread the budget evenly across available GPU types."""
+    types = [t for t in availability if availability[t] > 0 and t in catalog]
+    per_type = budget / max(len(types), 1)
+    comp = {}
+    for t in types:
+        comp[t] = min(availability[t], int(per_type // catalog[t].price_per_hour))
+    return comp
+
+
+def solve_fixed_composition(models, trace, catalog, composition: Mapping[str, int],
+                            budget: float, **kw) -> ServingPlan:
+    """Optimize deployment+assignment inside a *given* composition (HexGen
+    setting: scheduling over a predefined heterogeneous cluster)."""
+    return solve(models, trace, catalog, composition, budget, **kw)
+
+
+def apply_round_robin_assignment(plan: ServingPlan, h_fn: Callable) -> ServingPlan:
+    """Ablation (iii): replace the optimized x with throughput-proportional
+    (workload-unaware) dispatch across the plan's replicas."""
+    R = len(plan.replicas)
+    D = len(plan.demands)
+    x = np.zeros((R, D))
+    for d, (m, w, lam) in enumerate(plan.demands):
+        rates = np.array([
+            h_fn(cfg, w) if cfg.model_index == m else 0.0 for cfg in plan.replicas])
+        total = rates.sum()
+        if total > 0:
+            x[:, d] = rates / total
+    makespan = 0.0
+    for i, cfg in enumerate(plan.replicas):
+        t = sum(x[i, d] * plan.demands[d][2] / h_fn(cfg, plan.demands[d][1])
+                for d in range(D) if x[i, d] > 0)
+        makespan = max(makespan, t)
+    return ServingPlan(replicas=plan.replicas, assignment=x, demands=plan.demands,
+                       makespan=makespan, cost=plan.cost,
+                       solver_info=dict(plan.solver_info, round_robin=1.0))
+
+
+def solve_uniform_deployment(models, trace, catalog, availability, budget,
+                             tp: int = 4, **kw) -> ServingPlan:
+    """Ablation (ii): all replicas use one fixed TP-only config shape."""
+    return solve(models, trace, catalog, availability, budget,
+                 include_mixed=False, **kw,
+                 throughput_fn=None if tp is None else _only_tp(tp))
+
+
+def _only_tp(tp: int) -> Callable:
+    def fn(cfg: Config, w: WorkloadType) -> float:
+        if len(cfg.stages) != 1 or cfg.stages[0].tp != tp:
+            return 0.0
+        return config_throughput(cfg.stages, cfg.model, w)
+    return fn

@@ -1,0 +1,132 @@
+"""Workload types and trace generation.
+
+The paper characterizes requests by (avg input tokens, avg output tokens) and
+subsamples nine workload types from ShareGPT / WildGPT / Azure-Trace with input
+lengths {2455, 824, 496} x output lengths {510, 253, 18} (§3).  A *trace* is a
+mixture over the nine types (Table 4) plus arrival times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+INPUT_LENGTHS = (2455, 824, 496)
+OUTPUT_LENGTHS = (510, 253, 18)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadType:
+    """A request class: average input/output token lengths."""
+
+    input_len: int
+    output_len: int
+
+    @property
+    def name(self) -> str:
+        return f"in{self.input_len}_out{self.output_len}"
+
+    @property
+    def kind(self) -> str:
+        """Fig-1 style categorization (long input > 512, long output > 128)."""
+        i = "long" if self.input_len > 512 else "short"
+        o = "long" if self.output_len > 128 else "short"
+        return f"{i}_input_{o}_output"
+
+
+# Workloads 1..9 "shown in Figure 4 from left to right": row-major over
+# (input, output) grids used throughout §3.
+WORKLOAD_TYPES: Tuple[WorkloadType, ...] = tuple(
+    WorkloadType(i, o) for i in INPUT_LENGTHS for o in OUTPUT_LENGTHS
+)
+
+# Table 4: workload-type ratios (%) for the three traces.
+TRACE_MIXES: Dict[str, Tuple[float, ...]] = {
+    "trace1": (33, 7, 8, 7, 27, 6, 6, 3, 3),     # Swiss AI Center
+    "trace2": (22, 5, 5, 21, 5, 5, 19, 6, 12),   # Azure-Trace
+    "trace3": (4, 1, 4, 3, 20, 27, 1, 25, 15),   # WildGPT
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request in a trace."""
+
+    req_id: int
+    workload: int          # index into WORKLOAD_TYPES
+    input_len: int
+    output_len: int
+    arrival: float         # seconds since trace start
+    model: int = 0         # model index (multi-model serving)
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    name: str
+    requests: Tuple[Request, ...]
+
+    def counts_by_type(self, num_types: int = len(WORKLOAD_TYPES),
+                       model: int | None = None) -> np.ndarray:
+        counts = np.zeros(num_types, dtype=np.int64)
+        for r in self.requests:
+            if model is None or r.model == model:
+                counts[r.workload] += 1
+        return counts
+
+    @property
+    def num_requests(self) -> int:
+        return len(self.requests)
+
+
+def make_trace(
+    name: str,
+    num_requests: int = 1000,
+    *,
+    mix: Sequence[float] | None = None,
+    arrival_rate: float | None = None,
+    length_jitter: float = 0.0,
+    model_mix: Sequence[float] = (1.0,),
+    seed: int = 0,
+) -> Trace:
+    """Generate a synthetic trace following a Table-4 mixture.
+
+    Args:
+      name: one of TRACE_MIXES keys (mixture looked up) or any label when
+        ``mix`` is given explicitly.
+      num_requests: total requests.
+      mix: optional explicit 9-way mixture (need not be normalized).
+      arrival_rate: Poisson arrival rate (req/s).  None = all arrive at t=0
+        (the paper's makespan setting, §4.1).
+      length_jitter: relative stddev on token lengths (0 = exact averages).
+      model_mix: probability per model index (multi-model, §4.3 ext).
+      seed: RNG seed (deterministic).
+    """
+    rng = np.random.default_rng(seed)
+    probs = np.asarray(mix if mix is not None else TRACE_MIXES[name], dtype=np.float64)
+    probs = probs / probs.sum()
+    types = rng.choice(len(WORKLOAD_TYPES), size=num_requests, p=probs)
+    models = rng.choice(len(model_mix), size=num_requests,
+                        p=np.asarray(model_mix) / np.sum(model_mix))
+    if arrival_rate is None:
+        arrivals = np.zeros(num_requests)
+    else:
+        arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=num_requests))
+    reqs = []
+    for i in range(num_requests):
+        w = WORKLOAD_TYPES[types[i]]
+        if length_jitter > 0:
+            ilen = max(1, int(rng.normal(w.input_len, length_jitter * w.input_len)))
+            olen = max(1, int(rng.normal(w.output_len, length_jitter * w.output_len)))
+        else:
+            ilen, olen = w.input_len, w.output_len
+        reqs.append(Request(i, int(types[i]), ilen, olen, float(arrivals[i]), int(models[i])))
+    return Trace(name, tuple(reqs))
+
+
+def workload_demand(trace: Trace, num_models: int = 1) -> np.ndarray:
+    """λ_{m,w}: request counts per (model, workload type)."""
+    lam = np.zeros((num_models, len(WORKLOAD_TYPES)), dtype=np.float64)
+    for r in trace.requests:
+        lam[r.model, r.workload] += 1
+    return lam

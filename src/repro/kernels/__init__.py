@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for serving's compute hot spots (validated in
+interpret mode on CPU against pure-jnp oracles in each ref.py)."""
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.decode_attention.ops import decode_attention_op

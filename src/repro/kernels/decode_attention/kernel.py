@@ -1,0 +1,112 @@
+"""Pallas TPU flash-decode: one query token per sequence against a KV cache.
+
+Decode attention is memory-bound — the whole KV cache streams through VMEM
+once per step — so the kernel is organized around that stream:
+
+* grid = (batch, kv_heads, num_kv_blocks), kv innermost with the online
+  softmax state ((G, D) acc, (G,) m/l) in VMEM scratch.
+* All G = H/KV query heads of one kv head are processed together: the logits
+  tile is (G, BLOCK_K) and the weighted-value accumulation is (G, D) — this
+  turns GQA's head grouping into an MXU-shaped matmul instead of G separate
+  vector dots (the TPU-native answer to CUDA's per-warp q-head splits).
+* ``lengths`` masks slots beyond each sequence's current cache fill (ring
+  buffers pass their window size once full).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, block_k: int, scale: float, softcap: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[pl.program_id(0)]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)                # (BK, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (G, BK)
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(kpos < length, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, softcap: float = 0.0,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B, H, D) one token per sequence; k/v_cache: (B, T, KV, D);
+    lengths: (B,) valid cache entries.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    assert h % kv == 0
+    g = h // kv
+    block_k = min(block_k, t)
+    nk = pl.cdiv(t, block_k)
+    scale = 1.0 / math.sqrt(d)
+
+    q_g = q.reshape(b, kv, g, d)
+    kc = k_cache.transpose(0, 2, 1, 3)   # (B, KV, T, D)
+    vc = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale,
+                               softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths, whole array
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, ki: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, ki: (b_, h_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q_g, kc, vc)
+    return out.reshape(b, h, d)

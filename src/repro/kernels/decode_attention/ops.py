@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_k"))
+def decode_attention_op(q, k_cache, v_cache, lengths, *, softcap: float = 0.0,
+                        block_k: int = 512):
+    """q: (B,H,D); caches: (B,T,KV,D); lengths: (B,) -> (B,H,D)."""
+    return decode_attention(q, k_cache, v_cache, lengths, softcap=softcap,
+                            block_k=block_k, interpret=not _on_tpu())

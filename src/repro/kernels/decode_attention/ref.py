@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, *, softcap: float = 0.0
+                         ) -> jax.Array:
+    """q: (B,H,D); k/v_cache: (B,T,KV,D); lengths: (B,) -> (B,H,D)."""
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, kc) / math.sqrt(d)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = jnp.arange(t)[None, :] < lengths[:, None]          # (B,T)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, vc)
+    return out.reshape(b, h, d).astype(q.dtype)

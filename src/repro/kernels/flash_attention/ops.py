@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On TPU backends the Pallas kernel compiles natively; elsewhere it runs in
+interpret mode (Python emulation of the kernel body) so correctness is
+validated on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       softcap: float = 0.0, block_q: int = 256,
+                       block_k: int = 256):
+    """q: (B,H,S,D); k/v: (B,KV,S,D) -> (B,H,S,D)."""
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, block_q=block_q, block_k=block_k,
+                           interpret=not _on_tpu())

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the production meshes need 512
+# placeholder host devices (2 pods x 16 x 16).
+
+import argparse          # noqa: E402
+import functools         # noqa: E402
+import gc                # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, get_config      # noqa: E402
+from repro.launch.mesh import dp_axes, make_production_mesh  # noqa: E402
+from repro.launch.shapes import INPUT_SHAPES, InputShape, input_specs  # noqa: E402
+from repro.models import model as M                       # noqa: E402
+from repro.models import sharding as SH                   # noqa: E402
+from repro.models import transformer as T                 # noqa: E402
+from repro.training.optimizer import AdamW                # noqa: E402
+
+"""Multi-pod dry-run: for every (architecture x input shape x mesh), lower
+and compile the real step function against ShapeDtypeStruct stand-ins (no
+allocation), then extract the roofline terms:
+
+  compute   = HLO FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory    = HLO bytes / (chips x 819e9 B/s HBM)
+  collective= collective bytes / (chips x 50e9 B/s ICI link)
+
+FLOPs/bytes come from compiled.cost_analysis(); collective bytes are parsed
+from the partitioned HLO (sum of operand bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, scaled back to global).
+"""
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 1024**3
+
+_COLLECTIVE_LINE_RE = re.compile(
+    r"=\s+(?P<result>[^=]*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str) -> Dict[str, float]:
+    """Per-device *operand* bytes of every collective in the partitioned
+    module.  HLO operands aren't typed inline, so operand sizes are
+    reconstructed from result shapes + group sizes:
+
+      all-reduce / all-to-all / collective-permute : operand == result
+      all-gather    : operand == result / group_size
+      reduce-scatter: operand == result * group_size
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        result_bytes = _shape_bytes(m.group("result"))
+        gm = _GROUPS_RE.search(line)
+        group = int(gm.group(2)) if gm else 1
+        if op == "all-gather" and group > 1:
+            operand_bytes = result_bytes / group
+        elif op == "reduce-scatter":
+            operand_bytes = result_bytes * group
+        else:
+            operand_bytes = result_bytes
+        out[op] = out.get(op, 0.0) + operand_bytes
+    return out
+
+
+def _leaf_device_bytes(sds, spec, mesh) -> float:
+    """Per-device bytes of one sharded array."""
+    shards = 1
+    for entry in (spec or P()):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            shards *= mesh.shape[a]
+    return float(np.prod(sds.shape)) * sds.dtype.itemsize / shards if sds.shape else sds.dtype.itemsize
+
+
+def tree_device_bytes(sds_tree, spec_tree, mesh) -> float:
+    leaves_sds = jax.tree.leaves(sds_tree)
+    leaves_spec = jax.tree.leaves(spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_sds) == len(leaves_spec), \
+        (len(leaves_sds), len(leaves_spec))
+    return sum(_leaf_device_bytes(s, p, mesh)
+               for s, p in zip(leaves_sds, leaves_spec))
+
+
+def build_step(cfg, spec, mesh, include_optimizer: bool):
+    """Returns (fn, arg_sds, in_shardings, out_shardings)."""
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    axes = SH.MeshAxes(dp=dp_axes(mesh), tp="model")
+
+    if spec["kind"] == "train":
+        opt = AdamW()
+        if include_optimizer:
+            def step(params, opt_m, opt_v, batch):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+                from repro.training.optimizer import AdamWState
+                state = AdamWState(jnp.zeros((), jnp.int32), opt_m, opt_v)
+                new_p, new_s = opt.update(grads, state, params)
+                return loss, new_p, new_s.m, new_s.v
+            p_sds = spec["params"]
+            f32 = lambda t: jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+            arg_sds = (p_sds, f32(p_sds), f32(p_sds), spec["args"][0])
+            ps = spec["params_spec"]
+            in_spec = (ps, ps, ps, spec["args_spec"][0])
+            out_spec = (P(), ps, ps, ps)
+            return step, arg_sds, ns(in_spec), ns(out_spec)
+        def step(params, batch):
+            loss, _ = M.loss_fn(cfg, params, batch)
+            return loss
+        arg_sds = (spec["params"], spec["args"][0])
+        in_spec = (spec["params_spec"], spec["args_spec"][0])
+        return step, arg_sds, ns(in_spec), ns(P())
+
+    if spec["kind"] == "prefill":
+        t_max = spec["t_max"]
+        has_prefix = len(spec["args"]) > 1
+        if has_prefix:
+            def step(params, tokens, prefix):
+                return T.prefill(cfg, params, tokens, prefix, t_max=t_max)
+        else:
+            def step(params, tokens):
+                return T.prefill(cfg, params, tokens, t_max=t_max)
+        arg_sds = (spec["params"],) + spec["args"]
+        in_spec = (spec["params_spec"],) + spec["args_spec"]
+        b_ax = spec["args_spec"][0][0]
+        out_spec = (P(b_ax, None, None), spec["cache_spec"])
+        return step, arg_sds, ns(in_spec), ns(out_spec)
+
+    # decode
+    long_mode = spec["long_mode"]
+
+    def step(params, caches, token, pos):
+        logits, new_caches = T.decode_step(cfg, params, caches, token, pos,
+                                           long_mode=long_mode)
+        return logits, new_caches
+
+    arg_sds = (spec["params"],) + spec["args"]
+    in_spec = (spec["params_spec"],) + spec["args_spec"]
+    b_ax = spec["args_spec"][1]
+    out_spec = (P(b_ax[0] if isinstance(b_ax, P) else None, None),
+                spec["args_spec"][0])
+    return step, arg_sds, ns(in_spec), ns(out_spec)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            include_optimizer: bool = True, unroll: bool = False,
+            opts: str = "") -> Dict[str, Any]:
+    from repro.models import transformer as _T
+    from repro.models import runtime_flags as RF
+    _T.UNROLL_PERIODS = unroll
+    RF.reset()
+    cfg = get_config(arch)
+    opt_pre = {o for o in opts.split(",") if o}
+    if "moe_split2" in opt_pre and cfg.n_experts:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_expert_shards=2)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    opt_set = {o for o in opts.split(",") if o}
+    RF.configure(
+        mesh=mesh,
+        dp_axes=dp_axes(mesh),
+        tp_axis="model",
+        act_seq_shard="act_seq_shard" in opt_set,
+        moe_ep_shard_map="moe_ep" in opt_set,
+        decode_cache_donate="cache_donate" in opt_set,
+        kv_cache_int8="kv_int8" in opt_set,
+    )
+    spec = input_specs(cfg, shape, mesh)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": chips, "kind": spec["kind"], "unrolled": unroll,
+        "opts": sorted(opt_set),
+    }
+    t0 = time.perf_counter()
+    with mesh:
+        fn, arg_sds, in_shardings, out_shardings = build_step(
+            cfg, spec, mesh, include_optimizer)
+        donate = ()
+        if spec["kind"] == "decode" and "cache_donate" in opt_set:
+            donate = (1,)
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*arg_sds)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception:
+        record["memory_analysis"] = None
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_per_device(hlo)
+    coll_total_dev = sum(coll.values())
+
+    # Analytic per-device residency (sharded args): weights + caches + opt.
+    arg_bytes = tree_device_bytes(arg_sds, jax.tree.map(
+        lambda s: s.spec, in_shardings,
+        is_leaf=lambda x: isinstance(x, NamedSharding)), mesh)
+
+    # cost_analysis flops on the partitioned module are per-device.
+    model_flops_token = 6 * cfg.active_param_count()
+    if spec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 3 * 2 * cfg.active_param_count() * tokens  # fwd+bwd
+    elif spec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * cfg.active_param_count() * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * cfg.active_param_count() * tokens
+
+    flops_global = flops * chips
+    bytes_global = bytes_accessed * chips
+    coll_global = coll_total_dev * chips
+    record.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_total_dev,
+        "collectives": coll,
+        "arg_bytes_per_device": arg_bytes,
+        "compute_term_s": flops_global / (chips * PEAK_FLOPS),
+        "memory_term_s": bytes_global / (chips * HBM_BW),
+        "collective_term_s": coll_global / (chips * ICI_BW),
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / flops_global if flops_global else 0.0,
+        "fits_hbm": arg_bytes <= HBM_PER_CHIP,
+    })
+    terms = {"compute": record["compute_term_s"],
+             "memory": record["memory_term_s"],
+             "collective": record["collective_term_s"]}
+    record["bottleneck"] = max(terms, key=terms.get)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned 10)")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(INPUT_SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-optimizer", action="store_true",
+                    help="lower train loss only (no AdamW update)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the period scan for exact cost_analysis "
+                         "(slower compiles; used for the roofline table)")
+    ap.add_argument("--opt", default="",
+                    help="comma list of perf levers: act_seq_shard, moe_ep, "
+                         "cache_donate (default: paper-faithful baseline)")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                    try:
+                        rec = run_one(arch, shape, mp,
+                                      include_optimizer=not args.no_optimizer,
+                                      unroll=args.unroll, opts=args.opt)
+                        print(f"[ok] {tag}: bottleneck={rec['bottleneck']} "
+                              f"compute={rec['compute_term_s']:.4f}s "
+                              f"memory={rec['memory_term_s']:.4f}s "
+                              f"collective={rec['collective_term_s']:.4f}s "
+                              f"args/dev={rec['arg_bytes_per_device']/2**30:.2f}GiB "
+                              f"compile={rec['compile_s']:.0f}s", flush=True)
+                    except Exception as e:
+                        n_fail += 1
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-2000:]}
+                        print(f"[FAIL] {tag}: {type(e).__name__}: {e}",
+                              flush=True)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    gc.collect()
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

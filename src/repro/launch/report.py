@@ -1,0 +1,93 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSONL records.
+
+    PYTHONPATH=src python -m repro.launch.report \
+        --baseline results/dryrun_baseline.jsonl \
+        --unrolled results/dryrun_unrolled.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.launch.roofline import enrich
+
+
+def load(path: str) -> List[dict]:
+    try:
+        with open(path) as f:
+            return [json.loads(l) for l in f if l.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def merge(baseline: List[dict], unrolled: List[dict]) -> Dict[tuple, dict]:
+    """Prefer unrolled (exact cost_analysis) records for the single-pod
+    roofline; baseline records prove multi-pod lowering."""
+    recs = {}
+    for r in baseline:
+        if "error" not in r:
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    for r in unrolled:
+        if "error" not in r:
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def roofline_table(recs: Dict[tuple, dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s (analytic) | collective s | "
+        "bottleneck | MODEL/HLO flops | GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "16x16":
+            continue
+        r = enrich(r)
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_term_s']:.4f} | "
+            f"{r['memory_term_analytic_s']:.4f} | "
+            f"{r['collective_term_wire_s']:.4f} | {r['bottleneck_analytic']} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['arg_bytes_per_device']/2**30:.2f} | "
+            f"{'y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def multipod_table(recs: Dict[tuple, dict]) -> str:
+    lines = ["| arch | shape | 16x16 | 2x16x16 | collective bytes/dev (multi) |",
+             "|---|---|---|---|---|"]
+    archs = sorted({k[0] for k in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for arch in archs:
+        for shape in shapes:
+            single = (arch, shape, "16x16") in recs
+            multi = (arch, shape, "2x16x16") in recs
+            cb = recs.get((arch, shape, "2x16x16"), {}).get(
+                "collective_bytes_per_device", 0)
+            lines.append(f"| {arch} | {shape} | "
+                         f"{'ok' if single else 'FAIL'} | "
+                         f"{'ok' if multi else 'FAIL'} | {cb/2**20:.1f} MiB |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="results/dryrun_baseline.jsonl")
+    ap.add_argument("--unrolled", default="results/dryrun_unrolled.jsonl")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = merge(load(args.baseline), load(args.unrolled))
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod 16x16, 256 x v5e)\n")
+        print(roofline_table(recs))
+        print()
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run lowering matrix\n")
+        print(multipod_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline post-processing.
+
+``cost_analysis()`` FLOPs (with --unroll) and the parsed collective bytes are
+trustworthy; the CPU backend's "bytes accessed", however, counts every
+unfused pass-through op (parameter/get-tuple-element/convert re-listings
+inside while bodies), inflating HBM traffic by 10-40x vs what a fusing TPU
+backend executes.  This module derives an *analytic* per-device HBM-traffic
+estimate from first principles for each (arch x shape), used alongside the
+raw HLO number:
+
+  decode : active weights read + KV/state cache read+write
+  prefill: weights read + ~12 activation passes/layer + attention score traffic
+  train  : fwd+bwd weight reads + grad + fp32 Adam moments r/w (~12x weights)
+           + 3x the prefill activation traffic (fwd, recompute, bwd)
+
+All terms are per-device (sharded) bytes; divide by 819 GB/s for seconds.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import get_config
+from repro.launch.shapes import INPUT_SHAPES
+from repro.models.config import ATTN, ATTN_LOCAL, ArchConfig
+
+HBM_BW = 819e9
+BYTES = 2  # bf16
+ACT_PASSES = 12  # reads+writes of the (tokens, d_model) activation per layer
+
+
+def _chips(mesh: str) -> int:
+    n = 1
+    for p in mesh.split("x"):
+        n *= int(p)
+    return n
+
+
+def _cache_bytes_per_device(cfg: ArchConfig, batch: int, t_max: int,
+                            long_mode: bool, chips: int) -> float:
+    """Total decode-cache bytes (all layers), already divided by chips —
+    caches shard over either batch, kv-heads, or sequence (sharding.py
+    guarantees one of these covers each mesh axis)."""
+    from repro.models import transformer as T
+    total = 0.0
+    per = len(cfg.period)
+    for desc in cfg.period:
+        n_layers = cfg.n_periods
+        if desc.mixer in (ATTN, ATTN_LOCAL):
+            t = T._cache_len(cfg, desc, t_max, long_mode)
+            total += n_layers * 2 * batch * t * cfg.n_kv_heads * cfg.head_dim * BYTES
+        elif desc.mixer == "mamba":
+            total += n_layers * batch * cfg.d_inner * (cfg.ssm_state_dim * 4 + 3 * BYTES)
+        elif desc.mixer == "mlstm":
+            di = 2 * cfg.d_model
+            total += n_layers * batch * cfg.n_heads * ((di // cfg.n_heads) ** 2 + di // cfg.n_heads) * 4
+        elif desc.mixer == "slstm":
+            total += n_layers * batch * cfg.d_model * 4 * 4
+    return total / chips
+
+
+def analytic_memory_term(arch: str, shape_name: str, mesh: str) -> Dict[str, float]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    chips = _chips(mesh)
+    long_mode = shape_name == "long_500k"
+    weights_dev = cfg.param_count() * BYTES / chips
+    active_dev = cfg.active_param_count() * BYTES / chips
+
+    if shape.kind == "decode":
+        cache_dev = _cache_bytes_per_device(cfg, shape.global_batch,
+                                            shape.seq_len, long_mode, chips)
+        traffic = active_dev + 2 * cache_dev
+    else:
+        tokens_dev = shape.global_batch * shape.seq_len / chips
+        act = cfg.n_layers * tokens_dev * cfg.d_model * BYTES * ACT_PASSES
+        # attention score traffic (fp32 logits+probs, ~2 passes), windowed
+        ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        attn = (cfg.n_periods * cfg.attn_layers_per_period * 2 * 4
+                * tokens_dev * ctx * cfg.n_kv_heads / max(cfg.n_kv_heads, 1))
+        if shape.kind == "train":
+            traffic = 12 * weights_dev + 3 * (act + attn)
+        else:
+            cache_dev = _cache_bytes_per_device(cfg, shape.global_batch,
+                                                shape.seq_len, False, chips)
+            traffic = weights_dev + act + attn + cache_dev
+    return {"analytic_bytes_per_device": traffic,
+            "memory_term_analytic_s": traffic / HBM_BW}
+
+
+ICI_BW = 50e9
+
+# Ring-algorithm wire cost per device, as a multiple of the operand bytes:
+# all-reduce moves ~2x (reduce-scatter phase + all-gather phase); the others
+# move ~1x.
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def wire_collective_term(record: Dict) -> float:
+    coll = record.get("collectives", {})
+    wire = sum(WIRE_FACTOR.get(op, 1.0) * b for op, b in coll.items())
+    return wire / ICI_BW
+
+
+def enrich(record: Dict) -> Dict:
+    """Add analytic memory + wire-weighted collective term + re-derive the
+    bottleneck with them."""
+    extra = analytic_memory_term(record["arch"], record["shape"],
+                                 record["mesh"])
+    record = dict(record, **extra)
+    record["collective_term_wire_s"] = wire_collective_term(record)
+    terms = {"compute": record["compute_term_s"],
+             "memory": record["memory_term_analytic_s"],
+             "collective": record["collective_term_wire_s"]}
+    record["bottleneck_analytic"] = max(terms, key=terms.get)
+    return record

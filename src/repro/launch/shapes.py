@@ -1,0 +1,105 @@
+"""The four assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+``input_specs(arch, shape, mesh)`` returns everything a dry-run needs:
+the step kind (train / prefill / serve), argument ShapeDtypeStructs, and
+in/out sharding specs — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.models.config import ATTN, ATTN_LOCAL, ArchConfig
+from repro.launch.mesh import dp_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _params_sds(cfg: ArchConfig) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _cache_sds(cfg: ArchConfig, batch: int, t_max: int, long_mode: bool):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, t_max, long_mode))
+
+
+def long_mode_for(cfg: ArchConfig, shape: InputShape) -> bool:
+    """long_500k runs in long-context mode (serve-time SWA on full-attn
+    archs, native windows/states elsewhere)."""
+    return shape.name == "long_500k"
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                axes: SH.MeshAxes | None = None) -> Dict[str, Any]:
+    """Returns dict(kind, args=(SDS...), in_specs, out_specs, t_max)."""
+    axes = axes or SH.MeshAxes(dp=dp_axes(mesh), tp="model")
+    b, s = shape.global_batch, shape.seq_len
+    p_sds = _params_sds(cfg)
+    p_spec = SH.param_specs(cfg, mesh, axes)
+    long_mode = long_mode_for(cfg, shape)
+    n_prefix = cfg.num_patches if cfg.frontend != "none" else 0
+    b_ax = SH._div(b, mesh, axes.dp)
+
+    if shape.kind == "train":
+        batch_sds = {
+            "tokens": _sds((b, s - n_prefix), jnp.int32),
+            "labels": _sds((b, s - n_prefix), jnp.int32),
+        }
+        batch_spec = {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+        if n_prefix:
+            batch_sds["prefix_embeds"] = _sds((b, n_prefix, cfg.d_model),
+                                              jnp.bfloat16)
+            batch_spec["prefix_embeds"] = P(b_ax, None, None)
+        return dict(kind="train", cfg=cfg, params=p_sds, params_spec=p_spec,
+                    args=(batch_sds,), args_spec=(batch_spec,),
+                    long_mode=False, t_max=s)
+
+    if shape.kind == "prefill":
+        t_max = s
+        tokens = _sds((b, s - n_prefix), jnp.int32)
+        args = [tokens]
+        args_spec = [P(b_ax, None)]
+        if n_prefix:
+            args.append(_sds((b, n_prefix, cfg.d_model), jnp.bfloat16))
+            args_spec.append(P(b_ax, None, None))
+        cache_spec = SH.cache_specs(cfg, mesh, b, long_mode=False, t_max=t_max, axes=axes)
+        return dict(kind="prefill", cfg=cfg, params=p_sds, params_spec=p_spec,
+                    args=tuple(args), args_spec=tuple(args_spec),
+                    cache_spec=cache_spec, long_mode=False, t_max=t_max)
+
+    # decode: ONE new token against a cache of seq_len.
+    t_max = s
+    cache_sds = _cache_sds(cfg, b, t_max, long_mode)
+    cache_spec = SH.cache_specs(cfg, mesh, b, long_mode=long_mode, t_max=t_max, axes=axes)
+    token = _sds((b,), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return dict(kind="decode", cfg=cfg, params=p_sds, params_spec=p_spec,
+                args=(cache_sds, token, pos),
+                args_spec=(cache_spec, P(b_ax), P()),
+                long_mode=long_mode, t_max=t_max)

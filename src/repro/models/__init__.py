@@ -1,0 +1,6 @@
+"""JAX model zoo: composable decoder covering dense / MoE / hybrid(Mamba) /
+xLSTM / audio / VLM backbones."""
+from repro.models.config import ArchConfig, LayerDesc
+from repro.models.model import (decode_step, greedy_sample, init_cache,
+                                init_params, loss_fn, make_batch_spec,
+                                param_count, prefill, synthetic_batch)

@@ -1,0 +1,199 @@
+"""Architecture configuration.
+
+One ``ArchConfig`` describes any model in the zoo (dense / MoE / hybrid /
+SSM / audio / VLM).  Layers are organized into a repeating *period* — a short
+list of ``LayerDesc`` — so heterogeneous stacks (Jamba's 1:7 Mamba:attention
+interleave, Gemma-2's local/global alternation, xLSTM's mLSTM/sLSTM mix) scan
+over periods with per-position parameter stacks, keeping the lowered HLO
+small and compile times flat in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Mixer kinds.
+ATTN = "attn"            # full causal attention
+ATTN_LOCAL = "attn_local"  # sliding-window attention
+MAMBA = "mamba"
+MLSTM = "mlstm"
+SLSTM = "slstm"
+
+# FFN kinds.
+MLP = "mlp"
+MOE = "moe"
+NONE = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    """One layer position inside the repeating period."""
+
+    mixer: str = ATTN
+    ffn: str = MLP
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                 # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    period: Tuple[LayerDesc, ...] = (LayerDesc(),)
+
+    # Attention options.
+    use_rope: bool = True          # jamba: no positional encoding
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0     # chatglm3: rotary on half the head dims
+    attn_softcap: float = 0.0      # gemma2
+    logit_softcap: float = 0.0     # gemma2 (final logits)
+    sliding_window: int = 0        # window for ATTN_LOCAL mixers
+    qkv_bias: bool = False         # qwen1.5 family
+    qk_norm: bool = False          # qwen3 family
+
+    # FFN options.
+    mlp_act: str = "silu"          # silu | gelu
+    mlp_gated: bool = True         # False: plain 2-matrix MLP (starcoder2)
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+
+    # MoE options.
+    n_experts: int = 0
+    n_experts_active: int = 0
+    moe_d_ff: int = 0              # per-expert hidden dim (if != d_ff)
+    # Store each expert as `s` ff-slices ("virtual experts", E*s total) so
+    # small expert counts still shard over a 16-way mesh axis; the slices'
+    # partial outputs recombine in the weighted token-return sum.
+    moe_expert_shards: int = 1
+
+    # SSM (Mamba) options.
+    ssm_state_dim: int = 16
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+
+    scale_embed: bool = False      # gemma2: embeddings scaled by sqrt(d)
+
+    # Modality frontend: audio/vlm backbones consume precomputed embeddings.
+    frontend: str = "none"         # none | audio_stub | vision_stub
+    num_patches: int = 0           # vlm: visual tokens prepended to text
+
+    # Serving options.
+    long_context_mode: str = "full"   # "sliding_window": serve-time SWA for
+    long_context_window: int = 8192   # long_500k on full-attention archs
+    tie_embeddings: bool = False
+
+    # Citation for the public-pool assignment.
+    source: str = ""
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.period) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not a multiple of "
+            f"period length {len(self.period)}")
+        assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period)
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(d.mixer in (ATTN, ATTN_LOCAL) for d in self.period)
+
+    @property
+    def attn_layers_per_period(self) -> int:
+        return sum(d.mixer in (ATTN, ATTN_LOCAL) for d in self.period)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no mixer does *unbounded* full attention (SSM/SWA only)."""
+        return all(d.mixer != ATTN for d in self.period)
+
+    def param_count(self) -> int:
+        """Exact parameter count from the layer layout (used by the cost
+        model, the memory checks, and the roofline MODEL_FLOPS term)."""
+        d, h, kv, dh = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        per_pos = {}
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total += d  # final norm
+        for desc in self.period:
+            n = total * 0  # per-layer params
+            if desc.mixer in (ATTN, ATTN_LOCAL):
+                n += d * (h * dh) + 2 * d * (kv * dh) + (h * dh) * d
+                if self.qkv_bias:
+                    n += h * dh + 2 * kv * dh
+                if self.qk_norm:
+                    n += 2 * dh
+            elif desc.mixer == MAMBA:
+                di, ds, k = self.d_inner, self.ssm_state_dim, self.ssm_conv_width
+                n += d * 2 * di          # in_proj (x, z)
+                n += di * k + di         # conv + bias
+                n += di * (2 * ds + 1)   # B, C, dt projections (x_proj)
+                n += di + di * ds        # dt_bias(+proj), A_log
+                n += di                  # D
+                n += di * d              # out_proj
+            elif desc.mixer == MLSTM:
+                di = 2 * d
+                n += d * 2 * di          # up proj (x, z)
+                n += 3 * di * di // max(self.n_heads, 1) * 0 + 3 * di * di  # q,k,v
+                n += 2 * di              # i,f gate projections (per-dim)
+                n += di * d              # down proj
+            elif desc.mixer == SLSTM:
+                n += 4 * d * d * 2       # i,f,z,o projections + recurrent
+                n += 4 * d
+                n += d * (d * 4 // 3) * 2  # gated FFN ~4/3
+            n += d  # mixer norm
+            if desc.ffn == MLP:
+                n += (3 if self.mlp_gated else 2) * d * self.d_ff + d
+            elif desc.ffn == MOE:
+                ff = self.moe_d_ff or self.d_ff
+                n += self.n_experts * 3 * d * ff + d * self.n_experts + d
+            per_pos[desc] = n
+            total += n * self.n_periods
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        ff = self.moe_d_ff or self.d_ff
+        moe_layers = self.n_periods * sum(d.ffn == MOE for d in self.period)
+        inactive = (self.n_experts - self.n_experts_active) * 3 * self.d_model * ff
+        return int(self.param_count() - moe_layers * inactive)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: ≤2 periods, d_model ≤ 512, ≤4 experts."""
+        d = min(self.d_model, 256)
+        dh = 64
+        heads = max(2, min(self.n_heads, 4))
+        kv = max(1, min(self.n_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        n_layers = len(self.period)  # one period (jamba: 8 reduced layers)
+        if n_layers < 2:
+            n_layers = 2
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=d,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=dh,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            n_experts_active=min(self.n_experts_active, 2) if self.n_experts else 0,
+            moe_d_ff=min(self.moe_d_ff, 256) if self.moe_d_ff else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            long_context_window=256,
+            num_patches=min(self.num_patches, 16) if self.num_patches else 0,
+        )

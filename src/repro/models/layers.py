@@ -1,0 +1,232 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (all paper-pool
+variants), and gated MLPs.  Pure-functional JAX over parameter pytrees.
+
+Compute is bf16 with fp32 softmax/normalization statistics.  Attention here
+is the XLA path used by training, the dry-run, and CPU validation; the Pallas
+flash kernels in ``repro.kernels`` implement the same math for TPU and are
+validated against these references.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- norms
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_freqs(head_dim: int, theta: float, fraction: float) -> jax.Array:
+    rot = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S).  ``fraction < 1`` rotates only
+    the leading dims (ChatGLM-style partial / 2d RoPE)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta, fraction)
+    rot = freqs.shape[0] * 2
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y, x_pass], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+
+class AttnParams(NamedTuple):
+    wq: jax.Array  # (d_model, n_heads, head_dim)
+    wk: jax.Array  # (d_model, n_kv, head_dim)
+    wv: jax.Array  # (d_model, n_kv, head_dim)
+    wo: jax.Array  # (n_heads, head_dim, d_model)
+    bq: Optional[jax.Array] = None
+    bk: Optional[jax.Array] = None
+    bv: Optional[jax.Array] = None
+    q_norm: Optional[jax.Array] = None
+    k_norm: Optional[jax.Array] = None
+
+
+def _soft_cap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """q: (B,S,H,Dh); k,v: (B,T,KV,Dh); mask: (B,S,T) or (S,T) bool.
+
+    GQA: query heads grouped over KV heads via reshape.
+    """
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    logits *= dh ** -0.5
+    logits = _soft_cap(logits, softcap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+# Above this sequence length, full-sequence attention switches to a scan
+# over query chunks so the (S, T) score matrix never materializes whole —
+# the XLA analogue of the Pallas flash kernel's blocking (the kernel itself
+# is the TPU fast path; this bounds memory for lowering/training/CPU).
+CHUNKED_ATTN_THRESHOLD = 2048
+ATTN_Q_CHUNK = 1024
+
+
+def _attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                       offset_mask_fn, softcap: float) -> jax.Array:
+    """Scan over query chunks; each chunk does full-row softmax.
+
+    q: (B,S,H,Dh); k,v: (B,T,KV,Dh).  ``offset_mask_fn(q_start, s_chunk)``
+    returns the (s_chunk, T) bool mask for that chunk.
+    """
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    c = min(ATTN_Q_CHUNK, s)
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // c
+    qc = q.reshape(b, nc, c, kv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, inp):
+        qi, idx = inp                                  # (B,c,KV,G,Dh), scalar
+        logits = jnp.einsum("bskgd,btkd->bkgst", qi, k).astype(jnp.float32)
+        logits *= dh ** -0.5
+        logits = _soft_cap(logits, softcap)
+        mask = offset_mask_fn(idx * c, c)              # (c, T)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nc * c, h, dh)
+    return out[:, :s]
+
+
+def causal_mask(s: int, t: int, offset: int = 0, window: int = 0) -> jax.Array:
+    """(s, t) bool mask; query i sits at absolute position offset+i, keys at
+    0..t-1.  ``window > 0`` additionally bounds the lookback (SWA)."""
+    qpos = offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_block(cfg: ArchConfig, p: dict, x: jax.Array,
+                    positions: jax.Array, *, window: int = 0,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
+    """Full attention sublayer (projections + RoPE + scores + output).
+
+    ``kv_override``: decode path passes the (gathered) cache instead of the
+    keys/values computed from x.
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    if kv_override is not None:
+        k, v = kv_override
+    if mask is None and s >= CHUNKED_ATTN_THRESHOLD:
+        out = _attention_chunked(
+            q, k, v,
+            lambda off, sc: causal_mask(sc, k.shape[1], offset=off,
+                                        window=window),
+            cfg.attn_softcap)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if mask is None:
+        mask = causal_mask(s, k.shape[1], window=window)
+    out = attention_scores(q, k, v, mask, cfg.attn_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def project_qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """Decode-path helper: q/k/v for the new token(s), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def attention_output(p: dict, out: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ------------------------------------------------------------------- MLP
+
+def mlp_block(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Gated MLP (SwiGLU / GeGLU) or plain 2-matrix MLP."""
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, p["w_up"])
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,144 @@
+"""Mamba-1 selective SSM block (for Jamba), TPU-adapted.
+
+Hardware adaptation: the CUDA reference fuses the sequential scan into a
+single kernel holding state in SRAM.  On TPU we instead exploit that the
+selective recurrence h_t = Ā_t·h_{t-1} + B̄_t x_t is *linear*, so it maps to
+``jax.lax.associative_scan`` (parallel, O(log S) depth, shardable).  To keep
+the (B, S, d_inner, d_state) discretized tensors out of HBM we scan over
+fixed-size chunks: within a chunk, associative scan; across chunks, a small
+(B, d_inner, d_state) carry — the same blocking structure the official
+Mamba-2 "chunked" algorithm uses.
+
+``mamba_prefill`` processes a full sequence and returns the final state for
+decode; ``mamba_step`` advances one token against the recurrent state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+CHUNK = 256
+
+
+def _ssm_scan_chunked(a: jax.Array, bx: jax.Array, h0: jax.Array,
+                      chunk: int = CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + bx_t along axis 1.
+
+    a, bx: (B, S, D, N) fp32; h0: (B, D, N).  Returns (h all t, final h).
+    """
+    b, s, d, n = a.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = a.shape[1] // chunk
+    a_c = a.reshape(b, nc, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    bx_c = bx.reshape(b, nc, chunk, d, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_body(h, inputs):
+        ac, bxc = inputs                       # (B, chunk, D, N)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bxc), axis=1)
+        h_all = aa * h[:, None] + bb           # inject carry
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(chunk_body, h0, (a_c, bx_c))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, -1, d, n)[:, :s]
+    return h_all, h_last
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B,S,D); w: (K,D); state: (B,K-1,D)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)            # (B, S+K-1, D)
+    out = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(k)) + bias
+    new_state = xx[:, -(k - 1):] if k > 1 else jnp.zeros_like(state)
+    return out, new_state
+
+
+def _ssm_inner(cfg: ArchConfig, p: dict, xc: jax.Array, h0: jax.Array):
+    """Shared selective-SSM math after the conv.  xc: (B,S,D_inner)."""
+    ds = cfg.ssm_state_dim
+    proj = jnp.einsum("bsd,dk->bsk", xc, p["x_proj"]).astype(jnp.float32)
+    dt_rank = p["dt_proj"].shape[0]
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"])
+                         + p["dt_bias"])                       # (B,S,D)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (D,N)
+    a_bar = jnp.exp(dt[..., None] * a)                         # (B,S,D,N)
+    bx = (dt[..., None] * b_ssm[:, :, None, :]
+          * xc.astype(jnp.float32)[..., None])                 # (B,S,D,N)
+    h_all, h_last = _ssm_scan_chunked(a_bar, bx, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, c_ssm)
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    return y.astype(xc.dtype), h_last
+
+
+def mamba_prefill(cfg: ArchConfig, p: dict, x: jax.Array
+                  ) -> Tuple[jax.Array, dict]:
+    """x: (B,S,d_model) -> (y, state).  state = {conv, h}."""
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)                          # (B,S,Di)
+    xc, conv_state = _causal_conv(xc, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)
+    y, h_last = _ssm_inner(cfg, p, xc, h0)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "h": h_last}
+
+
+def mamba_step(cfg: ArchConfig, p: dict, x: jax.Array, state: dict
+               ) -> Tuple[jax.Array, dict]:
+    """One decode step.  x: (B,1,d_model)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xc, p["conv_w"], p["conv_b"], state["conv"])
+    xc = jax.nn.silu(xc)
+    y, h_last = _ssm_inner(cfg, p, xc, state["h"])
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "h": h_last}
+
+
+def mamba_ref(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Oracle: plain sequential jax.lax.scan over time (no chunking)."""
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xc, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    ds = cfg.ssm_state_dim
+    proj = jnp.einsum("bsd,dk->bsk", xc, p["x_proj"]).astype(jnp.float32)
+    dt_rank = p["dt_proj"].shape[0]
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"])
+                         + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a_bar = jnp.exp(dt[..., None] * a)
+    bx = dt[..., None] * b_ssm[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+    def step(h, inp):
+        ab, bxt, ct = inp
+        h = ab * h + bxt
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    h0 = jnp.zeros((b, cfg.d_inner, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a_bar.transpose(1, 0, 2, 3),
+                                    bx.transpose(1, 0, 2, 3),
+                                    c_ssm.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])

@@ -1,0 +1,86 @@
+"""Model facade: wires ArchConfig + params into train / prefill / decode
+callables, including the modality-stub input handling for audio/VLM archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+PyTree = Any
+AUX_LOSS_WEIGHT = 0.01
+
+
+def make_batch_spec(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Shapes of one training batch (tokens + labels [+ prefix embeds])."""
+    n_prefix = cfg.num_patches if cfg.frontend != "none" else 0
+    spec = {
+        "tokens": ((batch, seq_len - n_prefix), jnp.int32),
+        "labels": ((batch, seq_len - n_prefix), jnp.int32),
+    }
+    if n_prefix:
+        spec["prefix_embeds"] = ((batch, n_prefix, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def synthetic_batch(cfg: ArchConfig, batch: int, seq_len: int,
+                    key: jax.Array) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    spec = make_batch_spec(cfg, batch, seq_len)
+    out = {
+        "tokens": jax.random.randint(k1, spec["tokens"][0], 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, spec["labels"][0], 0, cfg.vocab_size),
+    }
+    if "prefix_embeds" in spec:
+        out["prefix_embeds"] = (jax.random.normal(k3, spec["prefix_embeds"][0])
+                                * 0.02).astype(jnp.bfloat16)
+    return out
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    prefix = batch.get("prefix_embeds")
+    logits, aux = T.forward(cfg, params, batch["tokens"], prefix_embeds=prefix)
+    n_prefix = 0 if prefix is None else prefix.shape[1]
+    logits = logits[:, n_prefix:]                      # text positions only
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    return T.init_params(cfg, key)
+
+
+def prefill(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None, *, t_max: int,
+            long_mode: bool = False):
+    return T.prefill(cfg, params, tokens, prefix_embeds, t_max=t_max,
+                     long_mode=long_mode)
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, caches: PyTree,
+                token: jax.Array, pos: jax.Array, long_mode: bool = False):
+    return T.decode_step(cfg, params, caches, token, pos, long_mode=long_mode)
+
+
+def init_cache(cfg: ArchConfig, batch: int, t_max: int,
+               long_mode: bool = False) -> PyTree:
+    return T.init_cache(cfg, batch, t_max, long_mode)
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

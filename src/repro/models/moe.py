@@ -1,0 +1,190 @@
+"""Mixture-of-Experts layer.
+
+Top-k routing with capacity-based, sort-packed dispatch: tokens are argsorted
+by expert id and scattered into a fixed (E, C, d) buffer (no (tokens, E, C)
+one-hot dispatch tensor, which would dwarf the activations at 128 experts).
+FLOPs therefore scale with *activated* experts — exactly what the roofline's
+MODEL_FLOPS = 6·N_active·D accounting expects.
+
+Two entry points:
+  * ``moe_block``            — single-shard math (also the EP local compute).
+  * ``moe_block_ep``         — expert-parallel over a named mesh axis: tokens
+                               all-to-all to their experts' shards and back
+                               (used by shard_map'd model paths).
+  * ``moe_block_dense_ref``  — O(E) dense oracle for tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+CAPACITY_FACTOR = 1.25
+
+
+def router_topk(cfg: ArchConfig, router_w: jax.Array, x: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Softmax router with renormalized top-k weights.
+
+    Returns (weights (B,S,k) fp32, expert ids (B,S,k) int32).
+    """
+    logits = jnp.einsum("bsd,de->bse", x, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.n_experts_active)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    return top_w, top_i.astype(jnp.int32)
+
+
+def virtualize_routing(cfg: ArchConfig, top_w, top_i):
+    """Map routing over E real experts to E*s virtual ff-slices: each
+    chosen expert contributes s copies (same weight) whose partial outputs
+    sum back to the full expert output in the weighted combine."""
+    s = cfg.moe_expert_shards
+    if s == 1:
+        return top_w, top_i, cfg.n_experts, cfg.n_experts_active
+    import jax.numpy as _jnp
+    ids = (top_i[..., None] * s + _jnp.arange(s, dtype=top_i.dtype))
+    ids = ids.reshape(*top_i.shape[:-1], -1)
+    w = _jnp.repeat(top_w, s, axis=-1)
+    return w, ids, cfg.n_experts * s, cfg.n_experts_active * s
+
+
+def expert_capacity(cfg: ArchConfig, n_tokens: int,
+                    capacity_factor: float = CAPACITY_FACTOR) -> int:
+    c = int(n_tokens * cfg.n_experts_active * capacity_factor / cfg.n_experts)
+    # An expert can receive at most one copy of each token.
+    return min(max(c, cfg.n_experts_active), n_tokens)
+
+
+def _pack_dispatch(e_flat: jax.Array, n_experts: int, capacity: int):
+    """Sort-based packing: slot (expert, position) for every token copy.
+
+    Returns (sort_idx, expert_of_sorted, pos_in_expert, keep_mask) where
+    ``pos_in_expert`` < capacity for kept copies.
+    """
+    n = e_flat.shape[0]
+    sort_idx = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[sort_idx]
+    # start offset of each expert's segment in the sorted order
+    starts = jnp.searchsorted(e_sorted, jnp.arange(n_experts), side="left")
+    pos = jnp.arange(n) - starts[e_sorted]
+    keep = pos < capacity
+    # Writes use the raw pos: overflow lands out of bounds and is dropped by
+    # scatter mode="drop" (never collides with a valid slot).  Reads clip.
+    return sort_idx, e_sorted, pos, keep
+
+
+def _expert_ffn(cfg: ArchConfig, p: dict, xin: jax.Array) -> jax.Array:
+    """xin: (E, C, d) -> (E, C, d). Gated MLP per expert."""
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xin, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_block(cfg: ArchConfig, p: dict, x: jax.Array,
+              capacity_factor: float | None = None) -> jax.Array:
+    """Single-shard MoE: route, pack, run experts, combine."""
+    if capacity_factor is None:
+        capacity_factor = CAPACITY_FACTOR
+    b, s, d = x.shape
+    top_w, top_i = router_topk(cfg, p["router"], x)
+    top_w, top_i, e, k = virtualize_routing(cfg, top_w, top_i)
+
+    n = b * s * k
+    xk = jnp.repeat(x.reshape(b * s, d), k, axis=0)            # (N, d)
+    e_flat = top_i.reshape(-1)                                 # (N,)
+    w_flat = top_w.reshape(-1)                                 # (N,)
+    cap = expert_capacity(cfg, b * s, capacity_factor)
+
+    sort_idx, e_sorted, pos, keep = _pack_dispatch(e_flat, e, cap)
+    x_sorted = xk[sort_idx] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, cap, d), dtype=x.dtype)
+    buf = buf.at[e_sorted, pos].set(x_sorted, mode="drop")
+
+    out_buf = _expert_ffn(cfg, p, buf)                          # (E, C, d)
+
+    y_sorted = out_buf[e_sorted, jnp.clip(pos, 0, cap - 1)] * keep[:, None].astype(x.dtype)
+    y_flat = jnp.zeros((n, d), dtype=x.dtype).at[sort_idx].set(y_sorted)
+    y = (y_flat.reshape(b * s, k, d)
+         * w_flat.reshape(b * s, k, 1).astype(x.dtype)).sum(axis=1)
+    return y.reshape(b, s, d)
+
+
+def moe_block_ep(cfg: ArchConfig, p_local: dict, x_local: jax.Array,
+                 axis_name: str,
+                 capacity_factor: float | None = None) -> jax.Array:
+    """Expert-parallel MoE inside ``shard_map``: experts sharded over
+    ``axis_name``; tokens travel by all-to-all.
+
+    ``p_local`` holds this shard's experts: leaves (E_loc, ...), plus the
+    full router.  ``x_local``: this shard's tokens (b_loc, S, d).
+    """
+    if capacity_factor is None:
+        capacity_factor = CAPACITY_FACTOR
+    n_shards = jax.lax.axis_size(axis_name)
+    b, s, d = x_local.shape
+    top_w, top_i = router_topk(cfg, p_local["router"], x_local)
+    top_w, top_i, e, k = virtualize_routing(cfg, top_w, top_i)
+    e_loc = e // n_shards
+
+    n = b * s * k
+    xk = jnp.repeat(x_local.reshape(b * s, d), k, axis=0)
+    e_flat = top_i.reshape(-1)
+    w_flat = top_w.reshape(-1)
+    # Per-source-shard capacity for each *global* expert.
+    cap = max(expert_capacity(cfg, b * s, capacity_factor) // 1, 1)
+    cap_src = max(cap, 1)
+
+    sort_idx, e_sorted, pos, keep = _pack_dispatch(e_flat, e, cap_src)
+    x_sorted = xk[sort_idx] * keep[:, None].astype(x_local.dtype)
+    send = jnp.zeros((e, cap_src, d), dtype=x_local.dtype)
+    send = send.at[e_sorted, pos].set(x_sorted, mode="drop")
+
+    # (E, C, d) -> all-to-all over the expert axis (tiled: split axis 0 into
+    # n pieces, concatenate received pieces along axis 1): every shard ends
+    # up with its E_loc experts' slices from all sources, source-major.
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=1,
+                              tiled=True)              # (E_loc, C*n, d)
+
+    out_loc = _expert_ffn(cfg, {k_: p_local[k_] for k_ in
+                                ("w_gate", "w_up", "w_down")}, recv)
+
+    # exact inverse pair: split the source-major slots, concat experts back.
+    back = jax.lax.all_to_all(out_loc, axis_name, split_axis=1, concat_axis=0,
+                              tiled=True)              # (E, C, d)
+
+    y_sorted = back[e_sorted, jnp.clip(pos, 0, cap_src - 1)] * keep[:, None].astype(x_local.dtype)
+    y_flat = jnp.zeros((n, d), dtype=x_local.dtype).at[sort_idx].set(y_sorted)
+    y = (y_flat.reshape(b * s, k, d)
+         * w_flat.reshape(b * s, k, 1).astype(x_local.dtype)).sum(axis=1)
+    return y.reshape(b, s, d)
+
+
+def moe_block_dense_ref(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """O(E) oracle: run every expert on every token, weight by router."""
+    top_w, top_i = router_topk(cfg, p["router"], x)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("bsd,edf->bsef", x, p["w_gate"])) * jnp.einsum(
+        "bsd,edf->bsef", x, p["w_up"])
+    y_all = jnp.einsum("bsef,efd->bsed", h, p["w_down"])       # (B,S,E,d)
+    w_full = jnp.zeros(x.shape[:2] + (cfg.n_experts,), jnp.float32)
+    b_idx = jnp.arange(x.shape[0])[:, None, None]
+    s_idx = jnp.arange(x.shape[1])[None, :, None]
+    w_full = w_full.at[b_idx, s_idx, top_i].add(top_w)
+    return jnp.einsum("bsed,bse->bsd", y_all, w_full.astype(x.dtype))
+
+
+def aux_load_balance_loss(cfg: ArchConfig, router_w: jax.Array,
+                          x: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (f · P)."""
+    logits = jnp.einsum("bsd,de->bse", x, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_i = jax.lax.top_k(probs, cfg.n_experts_active)
+    onehot = jax.nn.one_hot(top_i, cfg.n_experts).sum(axis=2)  # (B,S,E)
+    f = onehot.mean(axis=(0, 1))
+    p_mean = probs.mean(axis=(0, 1))
+    return cfg.n_experts * jnp.sum(f * p_mean)

@@ -1,0 +1,61 @@
+"""Runtime distribution/perf flags (the §Perf hillclimbing levers).
+
+Defaults reproduce the paper-faithful BASELINE; the dry-run's --opt flag
+flips them for the optimized variants so both stay measurable side by side.
+
+  ACT_SEQ_SHARD   Megatron-SP style: constrain layer-boundary activations to
+                  shard the sequence over the TP axis, turning each TP
+                  all-reduce into a reduce-scatter + all-gather pair (half
+                  the bytes on the wire, sharded residuals in memory).
+  MOE_EP_SHARD_MAP
+                  MoE dispatch via shard_map expert parallelism (local
+                  capacity pack + all-to-all) instead of the global
+                  sort-and-scatter the XLA partitioner has to all-gather.
+  ATTN_Q_CHUNK    query-chunk length for long-sequence attention; smaller
+                  chunks shrink the fp32 logits transient (VMEM/HBM).
+  DECODE_CACHE_DONATE
+                  decode caches flow as scan carry with in-place
+                  dynamic-update-slice (buffer-donation friendly) instead of
+                  scan ys (whole-cache copy every step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass
+class Flags:
+    act_seq_shard: bool = False
+    moe_ep_shard_map: bool = False
+    decode_cache_donate: bool = False
+    # int8 KV cache (beyond-paper serving optimization): halves the
+    # cache-read traffic that dominates memory-bound decode; per-(slot,head)
+    # absmax scales stored alongside.
+    kv_cache_int8: bool = False
+    # Route attention through the Pallas TPU kernels (flash prefill /
+    # flash-decode).  Interpret-mode on CPU (slow, for validation); native on
+    # TPU backends.
+    use_pallas_attention: bool = False
+    # sharding context used by the flags above
+    dp_axes: Axis = None
+    tp_axis: Axis = "model"
+    mesh: Optional[object] = None
+
+
+FLAGS = Flags()
+
+
+def configure(**kw) -> Flags:
+    for k, v in kw.items():
+        setattr(FLAGS, k, v)
+    return FLAGS
+
+
+def reset() -> None:
+    global FLAGS
+    new = Flags()
+    for f in dataclasses.fields(Flags):
+        setattr(FLAGS, f.name, getattr(new, f.name))

@@ -1,0 +1,266 @@
+"""Sharding policy: PartitionSpecs for params, batches, and caches.
+
+Baseline policy (the §Perf iterations move these):
+  * TP over the ``model`` axis: attention heads, MLP hidden dim, vocab.
+  * DP over the ``data`` axis (× ``pod`` when multi-pod): batch.
+  * MoE expert parallelism: experts over ``data`` (EP), per-expert hidden dim
+    over ``model`` (TP inside the expert).  When E doesn't divide the data
+    axis (Mixtral's 8 experts on 16), the expert hidden dim shards over
+    (data, model) jointly instead — "tensor-parallel experts".
+  * Mamba/xLSTM: inner (expanded) dim over ``model``.
+  * Decode KV caches: batch over ``data``; kv-heads over ``model`` when
+    divisible.  For ``long_500k`` (batch=1) the cache *sequence* shards over
+    ``data`` (distributed flash-decode).
+
+Every rule degrades gracefully: a dim that doesn't divide its axis is left
+unsharded (GSPMD requires divisibility), so every (arch × mesh) pair lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import (ATTN, ATTN_LOCAL, MAMBA, MLP, MLSTM,
+                                 MOE as FFN_MOE, NONE, SLSTM, ArchConfig)
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis assignment for the current mesh."""
+
+    dp: Axis = "data"        # batch / experts
+    tp: Axis = "model"       # heads / hidden dims / vocab
+
+    def sizes(self, mesh: Mesh) -> Tuple[int, int]:
+        return _axis_size(mesh, self.dp), _axis_size(mesh, self.tp)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def _div(dim: int, mesh: Mesh, axis: Axis) -> Optional[Axis]:
+    """axis if dim divides evenly over it, else None (replicate)."""
+    if axis is None or dim == 0:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh,
+                axes: MeshAxes = MeshAxes()) -> Any:
+    """PartitionSpec pytree mirroring ``transformer.init_params``."""
+    dp, tp = axes.dp, axes.tp
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def norm_spec():
+        p = {"scale": P()}
+        if cfg.norm == "layernorm":
+            p["bias"] = P()
+        return p
+
+    def attn_spec():
+        h_ax = _div(h, mesh, tp)
+        kv_ax = _div(kv, mesh, tp)
+        d_ax = _div(d, mesh, tp)
+        p = {
+            # shard heads over TP; fall back to the contracting d_model dim
+            "wq": P(None, None, h_ax, None) if h_ax else P(None, d_ax, None, None),
+            "wk": P(None, None, kv_ax, None) if kv_ax else P(None, d_ax, None, None),
+            "wv": P(None, None, kv_ax, None) if kv_ax else P(None, d_ax, None, None),
+            "wo": P(None, h_ax, None, None) if h_ax else P(None, None, None, d_ax),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = P(None, h_ax, None) if h_ax else P()
+            p["bk"] = P(None, kv_ax, None) if kv_ax else P()
+            p["bv"] = P(None, kv_ax, None) if kv_ax else P()
+        if cfg.qk_norm:
+            p["q_norm"] = P()
+            p["k_norm"] = P()
+        return p
+
+    def mamba_spec():
+        di = cfg.d_inner
+        di_ax = _div(di, mesh, tp)
+        di2_ax = _div(2 * di, mesh, tp)
+        return {
+            "in_proj": P(None, None, di2_ax),
+            "conv_w": P(None, None, di_ax),
+            "conv_b": P(None, di_ax),
+            "x_proj": P(None, di_ax, None),
+            "dt_proj": P(None, None, di_ax),
+            "dt_bias": P(None, di_ax),
+            "a_log": P(None, di_ax, None),
+            "d_skip": P(None, di_ax),
+            "out_proj": P(None, di_ax, None),
+        }
+
+    def mlstm_spec():
+        di = 2 * d
+        di_ax = _div(di, mesh, tp)
+        di2_ax = _div(2 * di, mesh, tp)
+        return {
+            "up_proj": P(None, None, di2_ax),
+            "wq": P(None, di_ax, None, None),
+            "wk": P(None, di_ax, None, None),
+            "wv": P(None, di_ax, None, None),
+            "wi": P(None, di_ax, None),
+            "bi": P(),
+            "wf": P(None, di_ax, None),
+            "bf": P(),
+            "hnorm": P(None, di_ax),
+            "down_proj": P(None, di_ax, None),
+        }
+
+    def slstm_spec():
+        return {k: P() for k in ("w", "r", "b", "hnorm")} | {
+            "ffn_gate": P(None, None, _div(max(4 * d // 3, 8), mesh, tp)),
+            "ffn_up": P(None, None, _div(max(4 * d // 3, 8), mesh, tp)),
+            "ffn_down": P(None, _div(max(4 * d // 3, 8), mesh, tp), None),
+        }
+
+    def mlp_spec():
+        ff_ax = _div(cfg.d_ff, mesh, tp)
+        p = {"w_up": P(None, None, ff_ax), "w_down": P(None, ff_ax, None)}
+        if cfg.mlp_gated:
+            p["w_gate"] = P(None, None, ff_ax)
+        return p
+
+    def moe_spec():
+        ff = (cfg.moe_d_ff or cfg.d_ff) // cfg.moe_expert_shards
+        e_ax = _div(cfg.n_experts * cfg.moe_expert_shards, mesh, dp)
+        if e_ax is not None:
+            ff_ax = _div(ff, mesh, tp)
+            return {
+                "router": P(),
+                "w_gate": P(None, e_ax, None, ff_ax),
+                "w_up": P(None, e_ax, None, ff_ax),
+                "w_down": P(None, e_ax, ff_ax, None),
+            }
+        # tensor-parallel experts: hidden dim over (dp, tp) jointly
+        joint = _joint_axis(dp, tp)
+        ff_ax = _div(ff, mesh, joint)
+        return {
+            "router": P(),
+            "w_gate": P(None, None, None, ff_ax),
+            "w_up": P(None, None, None, ff_ax),
+            "w_down": P(None, None, ff_ax, None),
+        }
+
+    layer_specs = []
+    for desc in cfg.period:
+        sub = {"pre_norm": norm_spec()}
+        if desc.mixer in (ATTN, ATTN_LOCAL):
+            sub["mixer"] = attn_spec()
+        elif desc.mixer == MAMBA:
+            sub["mixer"] = mamba_spec()
+        elif desc.mixer == MLSTM:
+            sub["mixer"] = mlstm_spec()
+        elif desc.mixer == SLSTM:
+            sub["mixer"] = slstm_spec()
+        if desc.ffn != NONE:
+            sub["ffn_norm"] = norm_spec()
+            sub["ffn"] = mlp_spec() if desc.ffn == MLP else moe_spec()
+        layer_specs.append(sub)
+
+    specs = {
+        "embed": P(_div(cfg.vocab_size, mesh, tp), None),
+        "layers": layer_specs,
+        "final_norm": norm_spec(),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, _div(cfg.vocab_size, mesh, tp))
+    return specs
+
+
+def _joint_axis(dp: Axis, tp: Axis) -> Tuple[str, ...]:
+    out: Tuple[str, ...] = ()
+    for a in (dp, tp):
+        if isinstance(a, str):
+            out += (a,)
+        elif a:
+            out += tuple(a)
+    return out
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch: int,
+                axes: MeshAxes = MeshAxes()) -> Any:
+    """Training-batch specs (tokens/labels [+ prefix embeds])."""
+    b_ax = _div(batch, mesh, axes.dp)
+    spec = {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+    if cfg.frontend != "none":
+        spec["prefix_embeds"] = P(b_ax, None, None)
+    return spec
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, batch: int, *,
+                long_mode: bool = False, t_max: int = 0,
+                axes: MeshAxes = MeshAxes()) -> Any:
+    """Decode-cache specs.
+
+    Priority: batch over dp, kv-heads over tp.  Whatever can't shard moves
+    to the cache *sequence* dim (distributed flash-decode: the per-step
+    softmax reduces over the sequence shards with a psum — GSPMD emits it
+    automatically from the einsum/softmax pattern):
+      * kv-heads don't divide tp (GQA kv < 16)  -> sequence over tp
+      * batch doesn't divide dp (long_500k b=1) -> sequence over dp
+      * neither                                  -> sequence over (dp, tp)
+    """
+    from repro.models import transformer as _T
+    dp, tp = axes.dp, axes.tp
+    b_ax = _div(batch, mesh, dp)
+    kv_ax = _div(cfg.n_kv_heads, mesh, tp)
+    di_ax = _div(cfg.d_inner, mesh, tp)
+    specs = []
+    for desc in cfg.period:
+        if desc.mixer in (ATTN, ATTN_LOCAL):
+            t_len = _T._cache_len(cfg, desc, t_max, long_mode) if t_max else 0
+            if b_ax is not None and kv_ax is not None:
+                t_ax = None
+            elif b_ax is not None:
+                t_ax = _div(t_len, mesh, tp) if t_max else tp
+            elif kv_ax is not None:
+                t_ax = _div(t_len, mesh, dp) if t_max else dp
+            else:
+                joint = _joint_axis(dp, tp)
+                t_ax = _div(t_len, mesh, joint) if t_max else joint
+            entry = {
+                "k": P(None, b_ax, t_ax, kv_ax, None),
+                "v": P(None, b_ax, t_ax, kv_ax, None),
+            }
+            from repro.models import runtime_flags as _RF
+            if _RF.FLAGS.kv_cache_int8:
+                entry["k_scale"] = P(None, b_ax, t_ax, kv_ax)
+                entry["v_scale"] = P(None, b_ax, t_ax, kv_ax)
+            specs.append(entry)
+        elif desc.mixer == MAMBA:
+            specs.append({"conv": P(None, b_ax, None, di_ax),
+                          "h": P(None, b_ax, di_ax, None)})
+        elif desc.mixer == MLSTM:
+            specs.append({"c": P(None, b_ax, None, None, None),
+                          "n": P(None, b_ax, None, None),
+                          "m": P(None, b_ax, None)})
+        elif desc.mixer == SLSTM:
+            specs.append({k: P(None, b_ax, None, None)
+                          for k in ("c", "n", "h", "m")})
+    return specs
+
+
+def logits_spec(cfg: ArchConfig, mesh: Mesh, batch: int,
+                axes: MeshAxes = MeshAxes()) -> P:
+    return P(_div(batch, mesh, axes.dp), None,
+             _div(cfg.vocab_size, mesh, axes.tp))
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

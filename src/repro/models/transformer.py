@@ -1,0 +1,576 @@
+"""Composable decoder stack.
+
+The model is a scan over *periods* (repeating groups of layers, see
+``ArchConfig.period``); every layer position in the period has its own
+parameter/cache subtree whose leaves carry a leading ``n_periods`` dim.  This
+keeps the lowered HLO size O(period) instead of O(depth) — a 94-layer MoE
+compiles as fast as a 2-layer one.
+
+Three entry points (all pure functions over the params pytree):
+  * ``forward``      — full-sequence logits (training / scoring).
+  * ``prefill``      — full sequence + returns decode caches.
+  * ``decode_step``  — one token against the caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import runtime_flags as RF
+from repro.models import xlstm as X
+from repro.models.config import (ATTN, ATTN_LOCAL, MAMBA, MLP, MLSTM, MOE as
+                                 FFN_MOE, NONE, SLSTM, ArchConfig, LayerDesc)
+
+PyTree = Any
+
+# Dry-run calibration: when True, the period scan is unrolled into a Python
+# loop so XLA's cost_analysis counts every layer (scan/while bodies are
+# otherwise counted once, not x trip-count).  Compile time grows ~n_periods.
+UNROLL_PERIODS = False
+
+
+def _maybe_scan(body, carry, xs):
+    if not UNROLL_PERIODS:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda leaf: leaf[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _constrain_acts(x: jax.Array) -> jax.Array:
+    """Megatron-SP activation constraint (ACT_SEQ_SHARD): at layer
+    boundaries the (B, S, D) stream shards S over the TP axis, so GSPMD
+    lowers each TP all-reduce into reduce-scatter + all-gather (half the
+    wire bytes) and the residual stream lives sharded."""
+    f = RF.FLAGS
+    if not f.act_seq_shard or f.mesh is None or x.ndim != 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(f.dp_axes, f.tp_axis, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(f.mesh, spec))
+
+
+def _kv_quantize(k: jax.Array):
+    """int8-quantize (B,S,KV,Dh) with per-(slot,head) absmax scales."""
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.bfloat16) * scale[..., None]).astype(jnp.bfloat16)
+
+
+def _pallas_full_attention(cfg: ArchConfig, q, k, v, window: int):
+    """(B,S,H,Dh) x (B,S,KV,Dh) -> (B,S,H,Dh) via the flash kernel."""
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    out = flash_attention_op(q.transpose(0, 2, 1, 3),
+                             k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3),
+                             causal=True, window=window,
+                             softcap=cfg.attn_softcap)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _pallas_decode_attention(cfg: ArchConfig, q, ck, cv, pos):
+    """(B,1,H,Dh) x (B,T,KV,Dh) cache -> (B,1,H,Dh) via flash-decode."""
+    from repro.kernels.decode_attention.ops import decode_attention_op
+    t = ck.shape[1]
+    lengths = jnp.broadcast_to(jnp.minimum(pos + 1, t), (q.shape[0],))
+    out = decode_attention_op(q[:, 0], ck, cv, lengths,
+                              softcap=cfg.attn_softcap)
+    return out[:, None]
+
+
+def _moe_apply(cfg: ArchConfig, p: dict, h: jax.Array) -> jax.Array:
+    """MoE dispatch: baseline global sort-pack, or (MOE_EP_SHARD_MAP)
+    shard_map expert parallelism with explicit all-to-all."""
+    f = RF.FLAGS
+    ep_axis = "data"
+    n_virtual = cfg.n_experts * cfg.moe_expert_shards
+    if (f.moe_ep_shard_map and f.mesh is not None
+            and ep_axis in getattr(f.mesh, "shape", {})
+            and n_virtual % f.mesh.shape[ep_axis] == 0
+            and h.shape[0] % f.mesh.shape[ep_axis] == 0):
+        from jax.sharding import PartitionSpec as P
+        p_specs = {
+            "router": P(),
+            "w_gate": P(ep_axis, None, None),
+            "w_up": P(ep_axis, None, None),
+            "w_down": P(ep_axis, None, None),
+        }
+        fn = lambda pl, xl: MOE.moe_block_ep(cfg, pl, xl, ep_axis)
+        return jax.shard_map(fn, mesh=f.mesh,
+                             in_specs=(p_specs, P(ep_axis, None, None)),
+                             out_specs=P(ep_axis, None, None),
+                             check_vma=False,
+                             axis_names=frozenset({ep_axis}))(p, h)
+    return MOE.moe_block(cfg, p, h)
+
+
+# ------------------------------------------------------------------- init
+
+def _norm_init(cfg: ArchConfig, d: int, np_: int) -> dict:
+    p = {"scale": jnp.zeros((np_, d), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((np_, d), jnp.float32)
+    return p
+
+
+def _dense(key, shape, scale_axis=0) -> jax.Array:
+    fan_in = shape[scale_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (fan_in ** -0.5)).astype(jnp.bfloat16)
+
+
+def _init_mixer(cfg: ArchConfig, desc: LayerDesc, key, np_: int) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 16)
+    if desc.mixer in (ATTN, ATTN_LOCAL):
+        p = {
+            "wq": _dense(ks[0], (np_, d, h, dh), 1),
+            "wk": _dense(ks[1], (np_, d, kv, dh), 1),
+            "wv": _dense(ks[2], (np_, d, kv, dh), 1),
+            "wo": _dense(ks[3], (np_, h, dh, d), 2) / (2 * cfg.n_layers) ** 0.5,
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((np_, h, dh), jnp.bfloat16)
+            p["bk"] = jnp.zeros((np_, kv, dh), jnp.bfloat16)
+            p["bv"] = jnp.zeros((np_, kv, dh), jnp.bfloat16)
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((np_, dh), jnp.float32)
+            p["k_norm"] = jnp.zeros((np_, dh), jnp.float32)
+        return p
+    if desc.mixer == MAMBA:
+        di, ds, k = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+        dt_rank = max(d // 16, 1)
+        a_init = jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (np_, di, 1)))
+        return {
+            "in_proj": _dense(ks[0], (np_, d, 2 * di), 1),
+            "conv_w": (jax.random.normal(ks[1], (np_, k, di)) * 0.1
+                       ).astype(jnp.bfloat16),
+            "conv_b": jnp.zeros((np_, di), jnp.bfloat16),
+            "x_proj": _dense(ks[2], (np_, di, dt_rank + 2 * ds), 1),
+            "dt_proj": _dense(ks[3], (np_, dt_rank, di), 1).astype(jnp.float32),
+            "dt_bias": jnp.full((np_, di), -4.6, jnp.float32),  # softplus ≈ 0.01
+            "a_log": a_init,
+            "d_skip": jnp.ones((np_, di), jnp.float32),
+            "out_proj": _dense(ks[4], (np_, di, d), 1),
+        }
+    if desc.mixer == MLSTM:
+        di = 2 * d
+        nh = cfg.n_heads
+        return {
+            "up_proj": _dense(ks[0], (np_, d, 2 * di), 1),
+            "wq": _dense(ks[1], (np_, di, nh, di // nh), 1),
+            "wk": _dense(ks[2], (np_, di, nh, di // nh), 1),
+            "wv": _dense(ks[3], (np_, di, nh, di // nh), 1),
+            "wi": _dense(ks[4], (np_, di, nh), 1).astype(jnp.float32),
+            "bi": jnp.zeros((np_, nh), jnp.float32),
+            "wf": _dense(ks[5], (np_, di, nh), 1).astype(jnp.float32),
+            "bf": jnp.full((np_, nh), 3.0, jnp.float32),  # open forget gates
+            "hnorm": jnp.zeros((np_, di), jnp.bfloat16),
+            "down_proj": _dense(ks[6], (np_, di, d), 1) / (2 * cfg.n_layers) ** 0.5,
+        }
+    if desc.mixer == SLSTM:
+        nh = cfg.n_heads
+        dh = d // nh
+        ff = max(4 * d // 3, 8)
+        return {
+            "w": _dense(ks[0], (np_, d, 4, nh, dh), 1).astype(jnp.float32),
+            "r": (jax.random.normal(ks[1], (np_, 4, nh, dh, dh))
+                  * (dh ** -0.5) * 0.3).astype(jnp.float32),
+            "b": jnp.concatenate([
+                jnp.zeros((np_, 1, nh, dh)), jnp.full((np_, 1, nh, dh), 3.0),
+                jnp.zeros((np_, 2, nh, dh))], axis=1).astype(jnp.float32),
+            "hnorm": jnp.zeros((np_, d), jnp.bfloat16),
+            "ffn_gate": _dense(ks[2], (np_, d, ff), 1),
+            "ffn_up": _dense(ks[3], (np_, d, ff), 1),
+            "ffn_down": _dense(ks[4], (np_, ff, d), 1) / (2 * cfg.n_layers) ** 0.5,
+        }
+    raise ValueError(desc.mixer)
+
+
+def _init_ffn(cfg: ArchConfig, desc: LayerDesc, key, np_: int) -> Optional[dict]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if desc.ffn == MLP:
+        p = {
+            "w_up": _dense(ks[1], (np_, d, cfg.d_ff), 1),
+            "w_down": _dense(ks[2], (np_, cfg.d_ff, d), 1) / (2 * cfg.n_layers) ** 0.5,
+        }
+        if cfg.mlp_gated:
+            p["w_gate"] = _dense(ks[0], (np_, d, cfg.d_ff), 1)
+        return p
+    if desc.ffn == FFN_MOE:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        e = cfg.n_experts
+        s = cfg.moe_expert_shards
+        ev, ffv = e * s, ff // s
+        return {
+            "router": _dense(ks[3], (np_, d, e), 1).astype(jnp.float32),
+            # virtual layout: expert e's ff-slice j lives at index e*s+j
+            "w_gate": _dense(ks[0], (np_, ev, d, ffv), 2),
+            "w_up": _dense(ks[1], (np_, ev, d, ffv), 2),
+            "w_down": _dense(ks[2], (np_, ev, ffv, d), 2) / (2 * cfg.n_layers) ** 0.5,
+        }
+    return None
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    np_ = cfg.n_periods
+    keys = jax.random.split(key, len(cfg.period) + 3)
+    positions = []
+    for i, desc in enumerate(cfg.period):
+        kk = jax.random.split(keys[i], 3)
+        sub = {"pre_norm": _norm_init(cfg, cfg.d_model, np_),
+               "mixer": _init_mixer(cfg, desc, kk[0], np_)}
+        if desc.ffn != NONE:
+            sub["ffn_norm"] = _norm_init(cfg, cfg.d_model, np_)
+            sub["ffn"] = _init_ffn(cfg, desc, kk[1], np_)
+        positions.append(sub)
+    params = {
+        "embed": (jax.random.normal(keys[-3], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(jnp.bfloat16),
+        "layers": positions,
+        "final_norm": {k: v[0] for k, v in _norm_init(cfg, cfg.d_model, 1).items()},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(keys[-2], (cfg.d_model, cfg.vocab_size), 0)
+    return params
+
+
+# ------------------------------------------------------------- cache init
+
+def init_cache(cfg: ArchConfig, batch: int, t_max: int,
+               long_mode: bool = False) -> PyTree:
+    """Decode caches for every layer position (leaves lead with n_periods)."""
+    np_ = cfg.n_periods
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    caches = []
+    for desc in cfg.period:
+        if desc.mixer in (ATTN, ATTN_LOCAL):
+            t = _cache_len(cfg, desc, t_max, long_mode)
+            if RF.FLAGS.kv_cache_int8:
+                caches.append({
+                    "k": jnp.zeros((np_, batch, t, kv, dh), jnp.int8),
+                    "v": jnp.zeros((np_, batch, t, kv, dh), jnp.int8),
+                    "k_scale": jnp.zeros((np_, batch, t, kv), jnp.bfloat16),
+                    "v_scale": jnp.zeros((np_, batch, t, kv), jnp.bfloat16),
+                })
+            else:
+                caches.append({
+                    "k": jnp.zeros((np_, batch, t, kv, dh), jnp.bfloat16),
+                    "v": jnp.zeros((np_, batch, t, kv, dh), jnp.bfloat16),
+                })
+        elif desc.mixer == MAMBA:
+            caches.append({
+                "conv": jnp.zeros((np_, batch, cfg.ssm_conv_width - 1,
+                                   cfg.d_inner), jnp.bfloat16),
+                "h": jnp.zeros((np_, batch, cfg.d_inner, cfg.ssm_state_dim),
+                               jnp.float32),
+            })
+        elif desc.mixer == MLSTM:
+            di = 2 * cfg.d_model
+            nh = cfg.n_heads
+            caches.append({
+                "c": jnp.zeros((np_, batch, nh, di // nh, di // nh), jnp.float32),
+                "n": jnp.zeros((np_, batch, nh, di // nh), jnp.float32),
+                "m": jnp.full((np_, batch, nh), -1e30, jnp.float32),
+            })
+        elif desc.mixer == SLSTM:
+            nh = cfg.n_heads
+            dh_s = cfg.d_model // nh
+            caches.append({
+                "c": jnp.zeros((np_, batch, nh, dh_s), jnp.float32),
+                "n": jnp.ones((np_, batch, nh, dh_s), jnp.float32),
+                "h": jnp.zeros((np_, batch, nh, dh_s), jnp.float32),
+                "m": jnp.zeros((np_, batch, nh, dh_s), jnp.float32),
+            })
+        else:
+            raise ValueError(desc.mixer)
+    return caches
+
+
+def _cache_len(cfg: ArchConfig, desc: LayerDesc, t_max: int,
+               long_mode: bool) -> int:
+    if desc.mixer == ATTN_LOCAL and cfg.sliding_window:
+        return min(t_max, cfg.sliding_window)
+    if desc.mixer == ATTN and long_mode and cfg.long_context_mode == "sliding_window":
+        return min(t_max, cfg.long_context_window)
+    return t_max
+
+
+def _effective_window(cfg: ArchConfig, desc: LayerDesc, long_mode: bool) -> int:
+    if desc.mixer == ATTN_LOCAL:
+        return cfg.sliding_window
+    if desc.mixer == ATTN and long_mode and cfg.long_context_mode == "sliding_window":
+        return cfg.long_context_window
+    return 0
+
+
+# ----------------------------------------------------------- forward pass
+
+def _embed_inputs(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                  prefix_embeds: Optional[jax.Array]) -> jax.Array:
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(cfg: ArchConfig, params: PyTree, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def _full_layer(cfg: ArchConfig, desc: LayerDesc, p: dict, x: jax.Array,
+                positions: jax.Array, long_mode: bool,
+                aux: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One layer, full-sequence (no cache)."""
+    h = L.apply_norm(cfg, p["pre_norm"], x)
+    if desc.mixer in (ATTN, ATTN_LOCAL):
+        w = _effective_window(cfg, desc, long_mode)
+        y = L.attention_block(cfg, p["mixer"], h, positions, window=w)
+    elif desc.mixer == MAMBA:
+        y, _ = M.mamba_prefill(cfg, p["mixer"], h)
+    elif desc.mixer == MLSTM:
+        y, _ = X.mlstm_block(cfg, p["mixer"], h)
+    elif desc.mixer == SLSTM:
+        y, _ = X.slstm_block(cfg, p["mixer"], h)
+    else:
+        raise ValueError(desc.mixer)
+    x = x + y
+    if desc.ffn != NONE:
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        if desc.ffn == MLP:
+            y = L.mlp_block(cfg, p["ffn"], h)
+        else:
+            y = _moe_apply(cfg, p["ffn"], h)
+            aux = aux + MOE.aux_load_balance_loss(cfg, p["ffn"]["router"], h)
+        x = x + y
+    return _constrain_acts(x), aux
+
+
+def forward(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            long_mode: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits.  Returns (logits, moe_aux_loss)."""
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(carry, period_params):
+        x, aux = carry
+        for i, desc in enumerate(cfg.period):
+            x, aux = _full_layer(cfg, desc, period_params[i], x, positions,
+                                 long_mode, aux)
+        return (x, aux), None
+
+    body = jax.checkpoint(body)
+    (x, aux), _ = _maybe_scan(body, (x, jnp.zeros((), jnp.float32)),
+                              params["layers"])
+    return _logits(cfg, params, x), aux
+
+
+# ------------------------------------------------------------- prefill
+
+def _prefill_layer(cfg, desc, p, x, positions, long_mode, t_max):
+    """One layer full-sequence, also building its decode cache."""
+    h = L.apply_norm(cfg, p["pre_norm"], x)
+    if desc.mixer in (ATTN, ATTN_LOCAL):
+        w = _effective_window(cfg, desc, long_mode)
+        q, k, v = L.project_qkv(cfg, p["mixer"], h, positions)
+        s = x.shape[1]
+        if RF.FLAGS.use_pallas_attention:
+            out = _pallas_full_attention(cfg, q, k, v, w)
+        elif s >= L.CHUNKED_ATTN_THRESHOLD:
+            out = L._attention_chunked(
+                q, k, v,
+                lambda off, sc: L.causal_mask(sc, s, offset=off, window=w),
+                cfg.attn_softcap)
+        else:
+            mask = L.causal_mask(s, s, window=w)
+            out = L.attention_scores(q, k, v, mask, cfg.attn_softcap)
+        y = L.attention_output(p["mixer"], out)
+        t = _cache_len(cfg, desc, t_max, long_mode)
+        if t >= s:
+            k_keep, v_keep = k, v
+        else:
+            # ring layout: slot j holds the latest position ≡ j (mod t)
+            slots = jnp.arange(t)
+            last = s - 1 - ((s - 1 - slots) % t)
+            k_keep, v_keep = k[:, last], v[:, last]
+        if RF.FLAGS.kv_cache_int8:
+            kq, ks = _kv_quantize(k_keep)
+            vq, vs = _kv_quantize(v_keep)
+            if t > k_keep.shape[1]:
+                pad = ((0, 0), (0, t - k_keep.shape[1]), (0, 0), (0, 0))
+                kq = jnp.pad(kq, pad)
+                vq = jnp.pad(vq, pad)
+                ks = jnp.pad(ks, pad[:-1])
+                vs = jnp.pad(vs, pad[:-1])
+            cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            ck = jnp.zeros((x.shape[0], t, cfg.n_kv_heads, cfg.head_dim),
+                           jnp.bfloat16)
+            cv = jnp.zeros_like(ck)
+            ck = jax.lax.dynamic_update_slice(
+                ck, k_keep.astype(jnp.bfloat16), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v_keep.astype(jnp.bfloat16), (0, 0, 0, 0))
+            cache = {"k": ck, "v": cv}
+    elif desc.mixer == MAMBA:
+        y, cache = M.mamba_prefill(cfg, p["mixer"], h)
+    elif desc.mixer == MLSTM:
+        y, cache = X.mlstm_block(cfg, p["mixer"], h)
+    elif desc.mixer == SLSTM:
+        y, cache = X.slstm_block(cfg, p["mixer"], h)
+    else:
+        raise ValueError(desc.mixer)
+    x = x + y
+    if desc.ffn != NONE:
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        y = L.mlp_block(cfg, p["ffn"], h) if desc.ffn == MLP else \
+            _moe_apply(cfg, p["ffn"], h)
+        x = x + y
+    return _constrain_acts(x), cache
+
+
+def prefill(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None, *, t_max: int,
+            long_mode: bool = False) -> Tuple[jax.Array, PyTree]:
+    """Process the prompt; return (last-position logits, caches)."""
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, period_params):
+        caches = []
+        for i, desc in enumerate(cfg.period):
+            x, cache = _prefill_layer(cfg, desc, period_params[i], x,
+                                      positions, long_mode, t_max)
+            caches.append(cache)
+        return x, caches
+
+    x, caches = _maybe_scan(body, x, params["layers"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, caches
+
+
+# ---------------------------------------------------------- decode step
+
+def _decode_layer(cfg, desc, p, cache, x, pos, long_mode):
+    h = L.apply_norm(cfg, p["pre_norm"], x)
+    if desc.mixer in (ATTN, ATTN_LOCAL):
+        positions = jnp.broadcast_to(pos, x.shape[:2])
+        q, k, v = L.project_qkv(cfg, p["mixer"], h, positions)
+        t = cache["k"].shape[1]
+        slot = jnp.where(t > 0, pos % t, 0)
+        if RF.FLAGS.kv_cache_int8:
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            ckq = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+            cvq = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                               (0, slot, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                               (0, slot, 0))
+            ck = _kv_dequantize(ckq, cks)
+            cv = _kv_dequantize(cvq, cvs)
+            new_cache = {"k": ckq, "v": cvq, "k_scale": cks, "v_scale": cvs}
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+        if RF.FLAGS.use_pallas_attention:
+            out = _pallas_decode_attention(cfg, q, ck, cv, pos)
+        else:
+            mask = (jnp.arange(t) <= pos)[None, None, :]
+            out = L.attention_scores(q, ck, cv, mask, cfg.attn_softcap)
+        y = L.attention_output(p["mixer"], out)
+    elif desc.mixer == MAMBA:
+        y, new_cache = M.mamba_step(cfg, p["mixer"], h, cache)
+    elif desc.mixer == MLSTM:
+        y, new_cache = X.mlstm_block(cfg, p["mixer"], h, state=cache)
+    elif desc.mixer == SLSTM:
+        y, new_cache = X.slstm_block(cfg, p["mixer"], h, state=cache)
+    else:
+        raise ValueError(desc.mixer)
+    x = x + y
+    if desc.ffn != NONE:
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        y = L.mlp_block(cfg, p["ffn"], h) if desc.ffn == MLP else \
+            MOE.moe_block(cfg, p["ffn"], h)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, caches: PyTree,
+                token: jax.Array, pos: jax.Array,
+                long_mode: bool = False) -> Tuple[jax.Array, PyTree]:
+    """token: (B,) int32; pos: scalar int32 (current length).  Returns
+    (logits (B, vocab), updated caches)."""
+    x = params["embed"][token[:, None]].astype(jnp.bfloat16)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    if RF.FLAGS.decode_cache_donate:
+        # Carry-DUS variant: the whole cache pytree rides the scan carry and
+        # each iteration updates its period slice in place — XLA can alias
+        # carry buffers (donation-friendly), avoiding the full-cache copy
+        # that scan-ys stacking implies.
+        def body_c(carry, period_params):
+            x, all_caches, i = carry
+            new_caches = []
+            for k, desc in enumerate(cfg.period):
+                pc = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                           keepdims=False),
+                    all_caches[k])
+                x, nc = _decode_layer(cfg, desc, period_params[k], pc, x,
+                                      pos, long_mode)
+                new_caches.append(jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), i, 0), all_caches[k], nc))
+            return (x, new_caches, i + 1), None
+
+        (x, new_caches, _), _ = _maybe_scan(
+            body_c, (x, caches, jnp.zeros((), jnp.int32)), params["layers"])
+        logits = _logits(cfg, params, x)[:, 0]
+        return logits, new_caches
+
+    def body(x, inp):
+        period_params, period_caches = inp
+        new_caches = []
+        for i, desc in enumerate(cfg.period):
+            x, nc = _decode_layer(cfg, desc, period_params[i],
+                                  period_caches[i], x, pos, long_mode)
+            new_caches.append(nc)
+        return x, new_caches
+
+    x, new_caches = _maybe_scan(body, x, (params["layers"], caches))
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,213 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent mixing), after arXiv:2405.04517.
+
+TPU adaptation: the mLSTM's exponential-gated linear recurrence is computed
+in the *chunkwise-parallel* form — quadratic within fixed chunks (MXU-sized
+matmuls), a small (B, H, Dh, Dh) carry across chunks — instead of the CUDA
+fused recurrent kernel.  A sequential-scan oracle (``mlstm_seq``) validates
+it.  The sLSTM's memory mixing is genuinely sequential → ``jax.lax.scan``.
+
+All gating is max-stabilized: forget gates are sigmoid (log f = -softplus(-f̃)),
+input gates exponential, with running stabilizer m.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+MLSTM_CHUNK = 128
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def _gates(p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (log_f, i_tilde), each (B, S, H), fp32."""
+    xf = x.astype(jnp.float32)
+    i_t = jnp.einsum("bsd,dh->bsh", xf, p["wi"].astype(jnp.float32)) + p["bi"]
+    f_t = jnp.einsum("bsd,dh->bsh", xf, p["wf"].astype(jnp.float32)) + p["bf"]
+    log_f = -jax.nn.softplus(-f_t)          # log sigmoid
+    return log_f, i_t
+
+
+def _qkv(p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k * (k.shape[-1] ** -0.5), v
+
+
+def mlstm_seq(cfg: ArchConfig, p: dict, x: jax.Array,
+              state: dict | None = None) -> Tuple[jax.Array, dict]:
+    """Sequential oracle / decode path.  x: (B,S,Di) inner activations."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x)
+    h_heads, dh = q.shape[2], q.shape[3]
+    log_f, i_t = _gates(p, x)
+    if state is None:
+        state = {
+            "c": jnp.zeros((b, h_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((b, h_heads, dh), jnp.float32),
+            "m": jnp.full((b, h_heads), -1e30, jnp.float32),
+        }
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, lf, it = inp               # (B,H,Dh) / (B,H)
+        m_new = jnp.maximum(lf + m, it)
+        fp = jnp.exp(lf + m - m_new)[..., None]
+        ip = jnp.exp(it - m_new)[..., None]
+        c = fp[..., None] * c + (ip * vt)[..., None] * kt[..., None, :].astype(jnp.float32)
+        n = fp * n + ip * kt.astype(jnp.float32)
+        num = jnp.einsum("bhxy,bhy->bhx", c, qt.astype(jnp.float32))
+        den = jnp.abs(jnp.einsum("bhy,bhy->bh", n, qt.astype(jnp.float32)))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), num / den
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_f.transpose(1, 0, 2),
+          i_t.transpose(1, 0, 2))
+    (c, n, m), hs = jax.lax.scan(step, (state["c"], state["n"], state["m"]), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, -1).astype(x.dtype)
+    return h, {"c": c, "n": n, "m": m}
+
+
+def mlstm_chunkwise(cfg: ArchConfig, p: dict, x: jax.Array,
+                    chunk: int = MLSTM_CHUNK) -> Tuple[jax.Array, dict]:
+    """Chunkwise-parallel mLSTM (prefill/train path)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x)
+    nh, dh = q.shape[2], q.shape[3]
+    log_f, i_t = _gates(p, x)
+
+    pad = (-s) % chunk
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, padq) for t in (q, k, v))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        i_t = jnp.pad(i_t, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    nc = q.shape[1] // chunk
+
+    def resh(t):  # (B, NC, L, H, ...) -> scan-major (NC, B, H, L, ...)
+        t = t.reshape((b, nc, chunk) + t.shape[2:])
+        perm = (1, 0, 3, 2) + tuple(range(4, t.ndim))
+        return t.transpose(perm)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)            # (NC,B,H,L,Dh)
+    lfc, itc = resh(log_f), resh(i_t)                 # (NC,B,H,L)
+
+    c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+
+    def chunk_body(carry, inp):
+        c, n, m = carry
+        qj, kj, vj, lf, it = inp                      # (B,H,L,·)
+        f_cum = jnp.cumsum(lf, axis=-1)               # F_j (B,H,L)
+        f_tot = f_cum[..., -1]
+        # intra-chunk logits: D_js = F_j − F_s + ĩ_s  (s ≤ j)
+        d_mat = f_cum[..., :, None] - f_cum[..., None, :] + it[..., None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        d_mat = jnp.where(mask, d_mat, -jnp.inf)
+        # carry scale as seen by query j: b_j = F_j + m
+        b_j = f_cum + m[..., None]
+        m_j = jnp.maximum(jnp.max(d_mat, axis=-1), b_j)
+        m_j = jnp.maximum(m_j, -1e30)
+        w_intra = jnp.exp(d_mat - m_j[..., None])     # (B,H,L,L)
+        g_inter = jnp.exp(b_j - m_j)                  # (B,H,L)
+        qf = qj.astype(jnp.float32)
+        kf = kj.astype(jnp.float32)
+        vf = vj.astype(jnp.float32)
+        scores = jnp.einsum("bhld,bhsd->bhls", qf, kf) * w_intra
+        num = jnp.einsum("bhls,bhsd->bhld", scores, vf)
+        num += g_inter[..., None] * jnp.einsum("bhxy,bhly->bhlx", c, qf)
+        den = jnp.sum(scores, axis=-1) + g_inter * jnp.einsum(
+            "bhy,bhly->bhl", n, qf)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_j))
+        h = num / den[..., None]
+        # carry update
+        m_new = jnp.maximum(f_tot + m, jnp.max(f_tot[..., None] - f_cum + it,
+                                               axis=-1))
+        scale_c = jnp.exp(f_tot + m - m_new)          # (B,H)
+        w_kv = jnp.exp(f_tot[..., None] - f_cum + it - m_new[..., None])
+        c = scale_c[..., None, None] * c + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_kv, vf, kf)
+        n = scale_c[..., None] * n + jnp.einsum("bhs,bhsd->bhd", w_kv, kf)
+        return (c, n, m_new), h
+
+    (c, n, m), hs = jax.lax.scan(chunk_body, (c0, n0, m0),
+                                 (qc, kc, vc, lfc, itc))
+    # hs: (NC, B, H, L, Dh) -> (B, NC, L, H, Dh) -> (B, S, H*Dh)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, nh * dh)[:, :s]
+    return h.astype(x.dtype), {"c": c, "n": n, "m": m}
+
+
+def mlstm_block(cfg: ArchConfig, p: dict, x: jax.Array, *,
+                state: dict | None = None, sequential: bool = False
+                ) -> Tuple[jax.Array, dict]:
+    """Full mLSTM residual block: up-proj, mLSTM, gate, down-proj.
+
+    x: (B,S,d_model).  state=None → prefill (chunkwise); else decode.
+    """
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    if state is None and not sequential:
+        h, new_state = mlstm_chunkwise(cfg, p, xin)
+    else:
+        h, new_state = mlstm_seq(cfg, p, xin, state)
+    h = h * (1.0 + p["hnorm"])        # headwise scale (group-norm lite)
+    out = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", out, p["down_proj"]), new_state
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def slstm_block(cfg: ArchConfig, p: dict, x: jax.Array, *,
+                state: dict | None = None) -> Tuple[jax.Array, dict]:
+    """sLSTM with per-head recurrent memory mixing + gated 4/3 FFN.
+
+    x: (B,S,d_model).  Sequential by construction.
+    """
+    b, s, d = x.shape
+    nh = p["r"].shape[1]
+    dh = d // nh
+    xg = jnp.einsum("bsd,dghk->bsghk", x, p["w"]) + p["b"]   # (B,S,4,H,Dh)
+
+    if state is None:
+        state = {
+            "c": jnp.zeros((b, nh, dh), jnp.float32),
+            "n": jnp.ones((b, nh, dh), jnp.float32),
+            "h": jnp.zeros((b, nh, dh), jnp.float32),
+            "m": jnp.zeros((b, nh, dh), jnp.float32),
+        }
+
+    r = p["r"].astype(jnp.float32)                            # (4,H,Dh,Dh)
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        pre = xt.astype(jnp.float32) + jnp.einsum(
+            "ghxy,bhy->bghx", r, h)                           # (B,4,H,Dh)
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(log_f + m - m_new)
+        c = fp * c + ip * jnp.tanh(zt)
+        n = fp * n + ip
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    carry, hs = jax.lax.scan(step, (state["c"], state["n"], state["h"],
+                                    state["m"]),
+                             xg.transpose(1, 0, 2, 3, 4))
+    c, n, h, m = carry
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = y * (1.0 + p["hnorm"])
+    # gated FFN (factor 4/3) fused into the block, per the paper.
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, p["ffn_gate"]))
+    u = jnp.einsum("bsd,df->bsf", y, p["ffn_up"])
+    out = jnp.einsum("bsf,fd->bsd", g * u, p["ffn_down"])
+    return out, {"c": c, "n": n, "h": h, "m": m}

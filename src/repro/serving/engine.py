@@ -1,0 +1,77 @@
+"""Replica engine: jit'd prefill + decode over one model replica.
+
+The engine executes real token generation (used by the CPU end-to-end
+examples and the runtime tests).  Requests are bucketed by prompt length so a
+batch shares one prefill shape; decode runs greedy with a shared position
+counter (continuous batching across buckets happens in the server layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, max_new)
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def new_tokens(self) -> int:
+        return int(self.tokens.size)
+
+
+class ReplicaEngine:
+    """One model replica with jit-compiled prefill/decode."""
+
+    def __init__(self, cfg: ArchConfig, params=None, *, seed: int = 0,
+                 long_mode: bool = False):
+        self.cfg = cfg
+        self.long_mode = long_mode
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self._prefill = {}
+        self._step = jax.jit(
+            functools.partial(M.decode_step, cfg, long_mode=long_mode))
+
+    def _prefill_fn(self, t_max: int):
+        if t_max not in self._prefill:
+            self._prefill[t_max] = jax.jit(
+                functools.partial(M.prefill, self.cfg, t_max=t_max,
+                                  long_mode=self.long_mode))
+        return self._prefill[t_max]
+
+    def generate(self, prompts: jax.Array, max_new: int,
+                 prefix_embeds: Optional[jax.Array] = None
+                 ) -> GenerationResult:
+        """prompts: (B, S) int32.  Greedy decode for max_new tokens."""
+        b, s = prompts.shape
+        n_prefix = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+        t_max = s + n_prefix + max_new
+        t0 = time.perf_counter()
+        logits, caches = self._prefill_fn(t_max)(self.params, prompts,
+                                                 prefix_embeds)
+        tok = M.greedy_sample(logits[:, -1])
+        jax.block_until_ready(tok)
+        t1 = time.perf_counter()
+        out = [tok]
+        pos = s + n_prefix
+        for i in range(max_new - 1):
+            logits_d, caches = self._step(self.params, caches, tok,
+                                          jnp.asarray(pos + i, jnp.int32))
+            tok = M.greedy_sample(logits_d)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t2 = time.perf_counter()
+        return GenerationResult(tokens=np.stack([np.asarray(t) for t in out], 1),
+                                prefill_s=t1 - t0, decode_s=t2 - t1)

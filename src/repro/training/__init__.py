@@ -1,0 +1,3 @@
+"""Training substrate: AdamW optimizer + train-step builder + data stream."""
+from repro.training.optimizer import AdamW, AdamWState
+from repro.training.train import TrainState, data_stream, init_state, make_train_step

@@ -1,0 +1,68 @@
+"""Checkpointing: save/restore parameter + optimizer pytrees.
+
+Self-contained .npz format (no orbax dependency): leaves are flattened with
+jax.tree flatten order and stored with their tree structure fingerprint so a
+mismatched restore fails loudly.  bf16 leaves round-trip via uint16 views
+(npz has no native bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_BF16 = "bfloat16"
+
+
+def _to_numpy(x) -> Tuple[np.ndarray, str]:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        return arr.view(np.uint16), _BF16
+    return arr, str(arr.dtype)
+
+
+def save(path: str, tree: PyTree, *, step: int = 0) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {}
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr, dt = _to_numpy(leaf)
+        payload[f"leaf_{i}"] = arr
+        dtypes.append(dt)
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves),
+            "dtypes": dtypes, "step": step}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **payload)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shapes/dtypes verified)."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        leaves_like, treedef = jax.tree.flatten(like)
+        if meta["n_leaves"] != len(leaves_like):
+            raise ValueError(
+                f"checkpoint has {meta['n_leaves']} leaves, expected "
+                f"{len(leaves_like)}")
+        if meta["treedef"] != str(treedef):
+            raise ValueError("checkpoint tree structure mismatch")
+        leaves = []
+        for i, (ref, dt) in enumerate(zip(leaves_like, meta["dtypes"])):
+            arr = data[f"leaf_{i}"]
+            if dt == _BF16:
+                arr = arr.view(jnp.bfloat16)
+            if tuple(arr.shape) != tuple(np.shape(ref)):
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {arr.shape} != "
+                    f"expected {np.shape(ref)}")
+            leaves.append(jnp.asarray(arr))
+        return jax.tree.unflatten(treedef, leaves), int(meta["step"])

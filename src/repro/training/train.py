@@ -1,0 +1,48 @@
+"""Training step builder (used by the train_4k input shape, the end-to-end
+training example, and the dry-run)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.training.optimizer import AdamW, AdamWState
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+
+
+def init_state(cfg: ArchConfig, key: jax.Array,
+               optimizer: AdamW = AdamW()) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def make_train_step(cfg: ArchConfig, optimizer: AdamW = AdamW()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(state.params)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def data_stream(cfg: ArchConfig, batch: int, seq_len: int, seed: int = 0):
+    """Synthetic deterministic token pipeline (self-contained substrate)."""
+    key = jax.random.PRNGKey(seed)
+    i = 0
+    while True:
+        yield M.synthetic_batch(cfg, batch, seq_len, jax.random.fold_in(key, i))
+        i += 1

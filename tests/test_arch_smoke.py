@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(≤1 period of layers, d_model ≤ 256, ≤4 experts), run one forward/train step
+and one prefill+decode step on CPU, assert output shapes and absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+
+SEQ = 32
+BATCH = 2
+
+
+@pytest.fixture(scope="module", params=ASSIGNED_ARCHS)
+def arch(request):
+    cfg = get_config(request.param).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_train_step(arch):
+    cfg, params = arch
+    batch = M.synthetic_batch(cfg, BATCH, SEQ, jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p_: M.loss_fn(cfg, p_, b), has_aux=True)(p)
+        new_p = jax.tree.map(lambda w, g: w - 1e-3 * g.astype(w.dtype),
+                             p, grads)
+        return loss, new_p
+
+    loss, new_params = step(params, batch)
+    assert jnp.isfinite(loss), f"{cfg.name}: non-finite loss"
+    # params actually changed
+    changed = jax.tree.map(lambda a, b: bool(jnp.any(a != b)),
+                           params, new_params)
+    assert any(jax.tree.leaves(changed)), f"{cfg.name}: no param updated"
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg, params = arch
+    batch = M.synthetic_batch(cfg, BATCH, SEQ, jax.random.PRNGKey(2))
+    from repro.models import transformer as T
+    logits, aux = jax.jit(
+        lambda p, t, pe: T.forward(cfg, p, t, prefix_embeds=pe)
+    )(params, batch["tokens"], batch.get("prefix_embeds"))
+    n_prefix = cfg.num_patches if cfg.frontend != "none" else 0
+    assert logits.shape == (BATCH, SEQ, cfg.vocab_size) if n_prefix == 0 else \
+        logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{cfg.name}: NaN logits"
+    if cfg.logit_softcap > 0:
+        assert float(jnp.max(jnp.abs(logits))) <= cfg.logit_softcap + 1e-3
+
+
+def test_prefill_then_decode(arch):
+    """prefill + N greedy decode steps run and stay finite."""
+    cfg, params = arch
+    batch = M.synthetic_batch(cfg, BATCH, SEQ, jax.random.PRNGKey(3))
+    prefix = batch.get("prefix_embeds")
+    t_max = SEQ + 8
+    logits, caches = jax.jit(
+        lambda p, t, pe: M.prefill(cfg, p, t, pe, t_max=t_max)
+    )(params, batch["tokens"], prefix)
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    step = jax.jit(lambda p, c, tok, pos: M.decode_step(cfg, p, c, tok, pos))
+    tok = M.greedy_sample(logits[:, -1])
+    n_prefix = prefix.shape[1] if prefix is not None else 0
+    pos = jnp.asarray(SEQ - n_prefix + n_prefix, jnp.int32) * 0 + (
+        batch["tokens"].shape[1] + n_prefix)
+    for i in range(3):
+        logits_d, caches = step(params, caches, tok, pos + i)
+        assert logits_d.shape == (BATCH, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits_d))), f"{cfg.name}: NaN decode"
+        tok = M.greedy_sample(logits_d)
+
+
+def test_decode_matches_forward(arch, monkeypatch):
+    """Teacher-forced decode logits == full forward logits, position by
+    position (validates cache correctness for every mixer kind)."""
+    cfg, params = arch
+    if cfg.frontend != "none":
+        pytest.skip("prefix archs covered by test_prefill_then_decode")
+    # No-drop capacity: forward and decode see different token counts, so
+    # capacity-based drops would legitimately diverge; disable them here.
+    from repro.models import moe as moe_mod
+    monkeypatch.setattr(moe_mod, "CAPACITY_FACTOR", 1e9)
+    s = 12
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (BATCH, s), 0,
+                                cfg.vocab_size)
+    from repro.models import transformer as T
+    full_logits, _ = T.forward(cfg, params, tokens)
+
+    # prefill on the first half, decode the second half teacher-forced
+    half = s // 2
+    _, caches = M.prefill(cfg, params, tokens[:, :half], t_max=s + 1)
+    step = jax.jit(lambda p, c, tok, pos: M.decode_step(cfg, p, c, tok, pos))
+    for i in range(half, s):
+        logits_d, caches = step(params, caches, tokens[:, i],
+                                jnp.asarray(i, jnp.int32))
+        # decode_step consumed token i and predicts i+1 == full_logits[:, i]
+        np.testing.assert_allclose(
+            np.asarray(logits_d, np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            rtol=0.05, atol=0.05,
+        )
+
+
+def test_full_config_instantiable():
+    """The FULL configs must construct and report sane param counts
+    (no allocation — arithmetic only)."""
+    expected = {
+        "codeqwen1.5-7b": (6e9, 9e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "starcoder2-3b": (2.5e9, 4e9),
+        "gemma2-27b": (22e9, 30e9),
+        "mixtral-8x22b": (125e9, 150e9),
+        "chatglm3-6b": (5e9, 8e9),
+        "musicgen-large": (1.2e9, 2.5e9),
+        "internvl2-1b": (0.4e9, 1.2e9),
+        "xlstm-125m": (0.08e9, 0.3e9),
+    }
+    for name, (lo, hi) in expected.items():
+        cfg = get_config(name)
+        n = cfg.param_count()
+        assert lo <= n <= hi, f"{name}: param_count {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+        assert cfg.active_param_count() <= n

@@ -1,0 +1,87 @@
+"""Config-enumeration tests (App D constraints & heuristics)."""
+import numpy as np
+import pytest
+
+from repro.core.catalog import GPU_CATALOG
+from repro.core.configspace import (enumerate_configs, prune_dominated,
+                                    throughput_table)
+from repro.core.costmodel import LLAMA3_8B, LLAMA3_70B
+from repro.core.workloads import WORKLOAD_TYPES
+
+
+def test_memory_check_excludes_too_small_configs():
+    """App D (i): every enumerated config can hold the model."""
+    avail = {"4090": 8, "A40": 8}
+    cfgs = enumerate_configs(LLAMA3_70B, GPU_CATALOG, avail)
+    need = LLAMA3_70B.min_memory_bytes()
+    for c in cfgs:
+        assert sum(st.memory for st in c.stages) >= need
+    # a single 24GB 4090 config must not appear for a 70B model
+    assert all(c.num_devices > 1 or c.stages[0].device.name != "4090"
+               for c in cfgs)
+
+
+def test_availability_respected():
+    avail = {"H100": 3}
+    cfgs = enumerate_configs(LLAMA3_70B, GPU_CATALOG, avail)
+    for c in cfgs:
+        assert c.device_counts().get("H100", 0) <= 3
+
+
+def test_tp_within_machine():
+    """App D heuristic (i): TP never exceeds devices_per_machine."""
+    avail = {name: 16 for name in GPU_CATALOG}
+    cfgs = enumerate_configs(LLAMA3_8B, GPU_CATALOG, avail)
+    for c in cfgs:
+        for st in c.stages:
+            assert st.tp <= st.device.devices_per_machine
+
+
+def test_nonuniform_pp_layer_split_proportional_to_memory():
+    """App D heuristic (ii): stage layer fractions follow stage memory."""
+    avail = {"H100": 2, "A40": 4}
+    cfgs = enumerate_configs(LLAMA3_70B, GPU_CATALOG, avail)
+    mixed = [c for c in cfgs if len({st.device.name for st in c.stages}) > 1]
+    assert mixed, "mixed-type pipelines must be enumerated"
+    for c in mixed:
+        mems = np.array([st.memory for st in c.stages])
+        fracs = np.array([st.layer_frac for st in c.stages])
+        np.testing.assert_allclose(fracs, mems / mems.sum(), rtol=1e-6)
+        np.testing.assert_allclose(fracs.sum(), 1.0, rtol=1e-6)
+
+
+def test_connectivity_constraint():
+    """Disconnected type pairs never share a pipeline."""
+    avail = {"H100": 4, "A40": 4}
+    disconnected = lambda a, b: a == b   # nothing inter-connects
+    cfgs = enumerate_configs(LLAMA3_70B, GPU_CATALOG, avail,
+                             connected=disconnected)
+    for c in cfgs:
+        assert len({st.device.name for st in c.stages}) == 1
+
+
+def test_prune_dominated_keeps_pareto_front():
+    avail = {"H100": 8, "A40": 8}
+    cfgs = enumerate_configs(LLAMA3_70B, GPU_CATALOG, avail)
+    h = throughput_table(cfgs, WORKLOAD_TYPES)
+    kept, h_kept = prune_dominated(cfgs, h)
+    assert 0 < len(kept) <= len(cfgs)
+    # no kept config is dominated by another kept config
+    costs = [c.cost for c in kept]
+    for i in range(len(kept)):
+        for j in range(len(kept)):
+            if i == j:
+                continue
+            dominates = (costs[j] <= costs[i] + 1e-9
+                         and np.all(h_kept[j] >= h_kept[i] - 1e-9)
+                         and (costs[j] < costs[i] - 1e-9
+                              or np.any(h_kept[j] > h_kept[i] + 1e-9)))
+            assert not dominates, (i, j)
+    # every dropped config is dominated by some kept one
+    kept_keys = {c.key for c in kept}
+    for i, c in enumerate(cfgs):
+        if c.key in kept_keys or h[i].max() <= 1e-9:
+            continue
+        assert any(kept[j].cost <= c.cost + 1e-9
+                   and np.all(h_kept[j] >= h[i] - 1e-9)
+                   for j in range(len(kept))), c.key

@@ -1,0 +1,114 @@
+"""Cost-model tests: the paper's Observations 1-3 must emerge from it."""
+import numpy as np
+import pytest
+
+from repro.core.catalog import GPU_CATALOG
+from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, ModelProfile, Stage,
+                                  config_throughput, max_batch_size)
+from repro.core.workloads import WorkloadType
+
+COMPUTE_HEAVY = WorkloadType(2455, 18)   # long input, short output
+MEMORY_HEAVY = WorkloadType(496, 510)    # short input, long output
+
+
+def _single(dev_name: str, tp: int, model=LLAMA3_70B):
+    dev = GPU_CATALOG[dev_name]
+    return (Stage(dev, tp, 1.0),)
+
+
+def _per_dollar(dev_name: str, tp: int, workload, model=LLAMA3_70B):
+    stages = _single(dev_name, tp, model)
+    h = config_throughput(stages, model, workload)
+    cost = sum(s.price for s in stages)
+    return h / cost
+
+
+def test_throughput_positive_when_memory_fits():
+    h = config_throughput(_single("H100", 4), LLAMA3_70B, COMPUTE_HEAVY)
+    assert h > 0
+
+
+def test_zero_throughput_when_model_does_not_fit():
+    # 70B bf16 needs ~140GB; one 24GB 4090 can't hold it.
+    h = config_throughput(_single("4090", 1), LLAMA3_70B, MEMORY_HEAVY)
+    assert h == 0.0
+
+
+def test_observation1_datacenter_wins_compute_heavy():
+    """H100 best per-dollar on compute-intensive (long-in short-out) 70B."""
+    h100 = _per_dollar("H100", 4, COMPUTE_HEAVY)
+    a6000 = _per_dollar("A6000", 4, COMPUTE_HEAVY)
+    assert h100 > a6000
+
+
+def test_observation1_workstation_wins_memory_heavy():
+    """Workstation GPUs (A40) beat data-center per-dollar on memory-bound."""
+    a40 = _per_dollar("A40", 4, MEMORY_HEAVY)
+    a100 = _per_dollar("A100", 4, MEMORY_HEAVY)
+    assert a40 > a100
+
+
+def test_observation1_consumer_wins_small_model():
+    """4090 best per-dollar for Llama3-8B (fits one GPU, best bw/$)."""
+    w = MEMORY_HEAVY
+    r4090 = _per_dollar("4090", 1, w, LLAMA3_8B)
+    h100 = _per_dollar("H100", 1, w, LLAMA3_8B)
+    a100 = _per_dollar("A100", 1, w, LLAMA3_8B)
+    assert r4090 > h100 and r4090 > a100
+
+
+def test_observation2_dp_beats_tp_for_small_model():
+    """8B: two TP=1 replicas outperform one TP=2 replica (DP wins)."""
+    w = MEMORY_HEAVY
+    one_tp2 = config_throughput(_single("A6000", 2, LLAMA3_8B), LLAMA3_8B, w)
+    two_tp1 = 2 * config_throughput(_single("A6000", 1, LLAMA3_8B), LLAMA3_8B, w)
+    assert two_tp1 > one_tp2
+
+
+def test_tp_scaling_sublinear_but_positive():
+    w = COMPUTE_HEAVY
+    h4 = config_throughput(_single("H100", 4), LLAMA3_70B, w)
+    h8 = config_throughput(_single("H100", 8), LLAMA3_70B, w)
+    assert h8 > h4            # more compute helps
+    assert h8 < 2.5 * h4      # but not superlinear
+
+
+def test_pp_inter_machine_penalty():
+    """PP over Ethernet is slower than TP over NVLink at equal device count."""
+    dev = GPU_CATALOG["H100"]
+    tp4 = (Stage(dev, 4, 1.0),)
+    pp4 = tuple(Stage(dev, 1, 0.25) for _ in range(4))
+    h_tp = config_throughput(tp4, LLAMA3_70B, COMPUTE_HEAVY)
+    h_pp = config_throughput(pp4, LLAMA3_70B, COMPUTE_HEAVY)
+    assert h_tp > h_pp
+
+
+def test_max_batch_respects_memory():
+    # 2×A6000 (96GB) doesn't fit 70B weights (141GB) -> 0.
+    assert max_batch_size(_single("A6000", 2), LLAMA3_70B, MEMORY_HEAVY) == 0
+    # 2xH100 (160GiB) fits but is capacity-starved vs 8xH100.
+    b_small = max_batch_size(_single("H100", 2), LLAMA3_70B,
+                             WorkloadType(2455, 510))
+    b_big = max_batch_size(_single("H100", 8), LLAMA3_70B, MEMORY_HEAVY)
+    assert 0 < b_small < b_big <= 64
+
+
+def test_sliding_window_bounds_kv():
+    dense = ModelProfile(name="d", n_layers=32, d_model=4096, n_kv_heads=8,
+                         head_dim=128, params_total=8e9, params_active=8e9)
+    swa = ModelProfile(name="s", n_layers=32, d_model=4096, n_kv_heads=8,
+                       head_dim=128, params_total=8e9, params_active=8e9,
+                       window=4096)
+    long_w = WorkloadType(30000, 500)
+    stages = _single("A100", 1, dense)
+    assert config_throughput(stages, swa, long_w) > config_throughput(stages, dense, long_w)
+
+
+def test_moe_active_params_speed_up_decode():
+    dense = ModelProfile(name="dense", n_layers=56, d_model=6144, n_kv_heads=8,
+                         head_dim=128, params_total=141e9, params_active=141e9)
+    moe = ModelProfile(name="moe", n_layers=56, d_model=6144, n_kv_heads=8,
+                       head_dim=128, params_total=141e9, params_active=39e9)
+    stages = tuple(Stage(GPU_CATALOG["H100"], 8, 0.5) for _ in range(2))
+    assert config_throughput(stages, moe, MEMORY_HEAVY) > \
+        config_throughput(stages, dense, MEMORY_HEAVY)

@@ -1,0 +1,68 @@
+"""Dry-run infrastructure tests: HLO collective parsing, per-device byte
+accounting, and one real (arch x shape x mesh) lower+compile via subprocess
+(the 512-device env var must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_collective_parser_operand_sizes():
+    sys.path.insert(0, SRC)
+    from repro.launch.dryrun import collective_bytes_per_device
+    hlo = """
+  %ar = f32[16,4096]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag = bf16[32,128]{1,0} all-gather(%y), replica_groups=[8,4]<=[32]
+  %rs = f32[8,64]{1,0} reduce-scatter(%z), replica_groups=[2,4]<=[8]
+  %a2a = bf16[4,16,8]{2,1,0} all-to-all(%w), replica_groups=[1,4]<=[4]
+  %cp = f32[10]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %dot = f32[4,4]{1,0} dot(%a, %b)
+"""
+    out = collective_bytes_per_device(hlo)
+    assert out["all-reduce"] == 16 * 4096 * 4
+    assert out["all-gather"] == 32 * 128 * 2 / 4          # result / group
+    assert out["reduce-scatter"] == 8 * 64 * 4 * 4        # result * group
+    assert out["all-to-all"] == 4 * 16 * 8 * 2
+    assert out["collective-permute"] == 10 * 4
+    assert "dot" not in out
+
+
+def test_leaf_device_bytes_sharded():
+    sys.path.insert(0, SRC)
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.dryrun import _leaf_device_bytes
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    sds = jax.ShapeDtypeStruct((256, 1024), np.dtype("float32"))
+    assert _leaf_device_bytes(sds, P("data", "model"), FakeMesh()) == \
+        256 * 1024 * 4 / 256
+    assert _leaf_device_bytes(sds, P(None, ("data", "model")), FakeMesh()) == \
+        256 * 1024 * 4 / 256
+    assert _leaf_device_bytes(sds, P(), FakeMesh()) == 256 * 1024 * 4
+
+
+@pytest.mark.parametrize("arch,shape", [("xlstm-125m", "decode_32k"),
+                                        ("starcoder2-3b", "train_4k")])
+def test_dryrun_lowers_and_compiles(arch, shape, tmp_path):
+    """Real 512-host-device lower+compile in a fresh subprocess."""
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=SRC)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, res.stdout + res.stderr
+    rec = json.loads(out.read_text().strip().splitlines()[-1])
+    assert "error" not in rec, rec
+    assert rec["chips"] == 256
+    assert rec["hlo_flops_per_device"] > 0
+    assert rec["fits_hbm"]
+    assert rec["bottleneck"] in ("compute", "memory", "collective")

@@ -1,0 +1,74 @@
+"""Beyond-paper scheduler extensions: SLO-constrained min-cost plans,
+availability-drop replanning, and the profiled-throughput interface."""
+import numpy as np
+import pytest
+
+from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_70B,
+                        make_trace, simulate, solve)
+from repro.core.costmodel import ProfiledThroughput, config_throughput
+from repro.core.scheduler import replan, solve_min_cost
+from repro.core.workloads import WORKLOAD_TYPES
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace("trace1", num_requests=400, seed=0)
+
+
+def test_min_cost_under_slo(trace):
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    fast = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0, tol=1.0)
+    # an SLO 1.5x looser than the best achievable must cost no more
+    slo = fast.makespan * 1.5
+    cheap = solve_min_cost([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0, slo)
+    assert cheap.makespan <= slo * 1.01
+    assert cheap.cost <= fast.cost + 1e-6
+    # a very loose SLO should be much cheaper than the full budget
+    loose = solve_min_cost([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0,
+                           slo * 4)
+    assert loose.cost <= cheap.cost + 1e-6
+
+
+def test_min_cost_infeasible_slo_raises(trace):
+    avail = {"A40": 4}
+    with pytest.raises(RuntimeError):
+        solve_min_cost([LLAMA3_70B], trace, GPU_CATALOG, avail, 10.0,
+                       slo_makespan=0.5)
+
+
+def test_replan_on_availability_drop(trace):
+    avail = dict(AVAILABILITY_SNAPSHOTS["avail1"])
+    plan = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 30.0, tol=1.0)
+    # the H100 pool evaporates (spot reclaim)
+    dropped = dict(avail, H100=0)
+    new_plan = replan(plan, [LLAMA3_70B], trace, GPU_CATALOG, dropped, 30.0,
+                      tol=1.0)
+    assert new_plan.composition().get("H100", 0) == 0
+    assert new_plan.cost <= 30.0 + 1e-6
+    # the new plan still serves everything
+    np.testing.assert_allclose(new_plan.assignment.sum(axis=0), 1.0,
+                               atol=1e-6)
+    sim = simulate(new_plan, trace, [LLAMA3_70B])
+    assert len(sim.latencies) == trace.num_requests
+
+
+def test_profiled_throughput_drop_in(trace):
+    """The paper's one-time-profiling interface: a measured h-table drives
+    the same solver and reproduces the analytical plan when the table IS the
+    analytical model."""
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    analytic = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 30.0, tol=1.0)
+
+    table = {}
+    def profiling_fn(cfg, w):
+        key = (cfg.key, WORKLOAD_TYPES.index(w))
+        table[key] = config_throughput(cfg.stages, cfg.model, w)
+        return table[key]
+    profiled = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 30.0, tol=1.0,
+                     throughput_fn=profiling_fn)
+    assert abs(profiled.makespan - analytic.makespan) <= \
+        0.05 * analytic.makespan + 1.0
+    # the captured table can be replayed through ProfiledThroughput
+    pt = ProfiledThroughput(table)
+    some_key = next(iter(table))
+    assert pt(*some_key) == table[some_key]

@@ -1,0 +1,111 @@
+"""Pallas kernel validation: shape/dtype sweeps, allclose vs pure-jnp oracle
+(interpret mode on CPU; the kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _qkv(key, b, h, kv, s, d, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = (jax.random.normal(k1, (b, h, s, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(k2, (b, kv, s, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(k3, (b, kv, s, d)) * 0.5).astype(dtype)
+    return q, k, v
+
+
+TOLS = {jnp.bfloat16: dict(rtol=0.05, atol=0.02),
+        jnp.float32: dict(rtol=2e-3, atol=2e-3)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 256, 128),     # MHA, seq == block
+    (2, 8, 2, 512, 128),     # GQA 4:1, multi-block
+    (1, 4, 1, 384, 64),      # GQA, odd seq (pad path), 64-dim heads
+    (2, 2, 2, 128, 128),
+])
+def test_flash_attention_causal(dtype, b, h, kv, s, d):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, h, kv, s, d, dtype)
+    out = flash_attention_op(q, k, v, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("window", [64, 128, 200])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 4, 2, 384, 64, jnp.bfloat16)
+    out = flash_attention_op(q, k, v, window=window, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=0.05, atol=0.02)
+
+
+def test_flash_attention_softcap():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 4, 4, 256, 128, jnp.bfloat16)
+    out = flash_attention_op(q, k, v, softcap=50.0, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=0.05, atol=0.02)
+
+
+def test_flash_attention_block_shape_independence():
+    """Different BlockSpec tilings give the same answer."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 2, 2, 512, 64, jnp.float32)
+    a = flash_attention_op(q, k, v, block_q=64, block_k=128)
+    b = flash_attention_op(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,h,kv,t,d", [
+    (2, 8, 2, 512, 128),
+    (1, 4, 4, 1024, 128),    # MHA
+    (4, 14, 2, 384, 64),     # internvl2-like: 7:1 GQA, 64-dim heads
+    (2, 32, 8, 256, 128),    # mixtral-like
+])
+def test_decode_attention(dtype, b, h, kv, t, d):
+    key = jax.random.PRNGKey(4)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q = (jax.random.normal(k1, (b, h, d)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(k2, (b, t, kv, d)) * 0.5).astype(dtype)
+    vc = (jax.random.normal(k3, (b, t, kv, d)) * 0.5).astype(dtype)
+    lengths = jax.random.randint(k4, (b,), 1, t + 1)
+    out = decode_attention_op(q, kc, vc, lengths, block_k=128)
+    ref = decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_decode_attention_full_and_single_lengths():
+    b, h, kv, t, d = 2, 4, 2, 256, 64
+    key = jax.random.PRNGKey(5)
+    q = (jax.random.normal(key, (b, h, d)) * 0.5).astype(jnp.float32)
+    kc = (jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, d)) * 0.5
+          ).astype(jnp.float32)
+    vc = (jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, d)) * 0.5
+          ).astype(jnp.float32)
+    for lengths in (jnp.array([t, t]), jnp.array([1, 2])):
+        out = decode_attention_op(q, kc, vc, lengths, block_k=64)
+        ref = decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill_last_row():
+    """Flash-decode of the last token == last row of full flash attention."""
+    b, h, kv, s, d = 1, 4, 2, 256, 64
+    q, k, v = _qkv(jax.random.PRNGKey(6), b, h, kv, s, d, jnp.float32)
+    full = flash_attention_op(q, k, v, block_q=64, block_k=64)
+    kc = k.transpose(0, 2, 1, 3)   # (B,S,KV,D)
+    vc = v.transpose(0, 2, 1, 3)
+    dec = decode_attention_op(q[:, :, -1], kc, vc, jnp.array([s]), block_k=64)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1]),
+                               rtol=2e-3, atol=2e-3)

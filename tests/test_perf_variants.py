@@ -1,0 +1,103 @@
+"""The §Perf optimization levers must be semantics-preserving: every variant
+produces the same numbers as the paper-faithful baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models import runtime_flags as RF
+from repro.models import transformer as T
+
+
+@pytest.fixture(autouse=True)
+def _reset_flags():
+    RF.reset()
+    yield
+    RF.reset()
+
+
+def test_decode_cache_donate_variant_matches_baseline():
+    cfg = get_config("mixtral-8x22b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    _, caches = M.prefill(cfg, params, tokens, t_max=16)
+
+    tok = jnp.array([3, 5], jnp.int32)
+    logits_base, caches_base = T.decode_step(cfg, params, caches, tok,
+                                             jnp.asarray(10, jnp.int32))
+    RF.configure(decode_cache_donate=True)
+    logits_opt, caches_opt = T.decode_step(cfg, params, caches, tok,
+                                           jnp.asarray(10, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_base, np.float32),
+                               np.asarray(logits_opt, np.float32),
+                               rtol=1e-3, atol=1e-3)
+    for a, b in zip(jax.tree.leaves(caches_base), jax.tree.leaves(caches_opt)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_act_seq_shard_noop_without_mesh():
+    """Flag on but no mesh context -> baseline math, no crash."""
+    cfg = get_config("starcoder2-3b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    base, _ = T.forward(cfg, params, tokens)
+    RF.configure(act_seq_shard=True, mesh=None)
+    opt, _ = T.forward(cfg, params, tokens)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_kv_cache_int8_decode_close_to_baseline():
+    """int8 KV cache: decode logits within quantization tolerance of bf16."""
+    cfg = get_config("llama3-8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    # baseline
+    _, caches = T.prefill(cfg, params, tokens, t_max=24)
+    tok = jnp.array([7, 9], jnp.int32)
+    base, _ = T.decode_step(cfg, params, caches, tok, jnp.asarray(16, jnp.int32))
+    # int8 path (prefill + decode both quantized)
+    RF.configure(kv_cache_int8=True)
+    _, caches_q = T.prefill(cfg, params, tokens, t_max=24)
+    quant, _ = T.decode_step(cfg, params, caches_q, tok,
+                             jnp.asarray(16, jnp.int32))
+    base = np.asarray(base, np.float32)
+    quant = np.asarray(quant, np.float32)
+    # int8 absmax quantization: small relative error on logits
+    err = np.abs(base - quant).max() / (np.abs(base).max() + 1e-6)
+    assert err < 0.08, f"int8 KV error too large: {err}"
+    # and greedy argmax is overwhelmingly preserved
+    agree = (base.argmax(-1) == quant.argmax(-1)).mean()
+    assert agree >= 0.5
+
+
+def test_pallas_attention_path_matches_xla(monkeypatch):
+    """Flag-gated Pallas kernels (interpret mode on CPU) == XLA attention
+    for prefill + decode on a reduced dense arch."""
+    cfg = get_config("gemma2-27b").reduced()  # exercises softcap + SWA
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    logits_x, caches_x = T.prefill(cfg, params, tokens, t_max=20)
+    tok = jnp.array([1, 2], jnp.int32)
+    dec_x, _ = T.decode_step(cfg, params, caches_x, tok,
+                             jnp.asarray(16, jnp.int32))
+
+    RF.configure(use_pallas_attention=True)
+    logits_p, caches_p = T.prefill(cfg, params, tokens, t_max=20)
+    dec_p, _ = T.decode_step(cfg, params, caches_p, tok,
+                             jnp.asarray(16, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_x, np.float32),
+                               np.asarray(logits_p, np.float32),
+                               rtol=0.03, atol=0.03)
+    np.testing.assert_allclose(np.asarray(dec_x, np.float32),
+                               np.asarray(dec_p, np.float32),
+                               rtol=0.03, atol=0.03)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on the scheduler's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage, config_throughput
+from repro.core.milp import SchedulingProblem, plan_makespan, solve_feasibility
+from repro.core.binsearch import knapsack_feasible, solve_binary_search
+from repro.core.plan import Config
+from repro.core.workloads import WORKLOAD_TYPES, WorkloadType, make_trace
+
+_GB = 1024**3
+MODEL = ModelProfile(name="toy", n_layers=2, d_model=64, n_kv_heads=1,
+                     head_dim=64, params_total=1e6, params_active=1e6)
+
+
+def _dev(i: int, price: float) -> DeviceType:
+    return DeviceType(f"g{i}", 1e12, 1e11, 64 * _GB, price, 8, 1e11, 1e9, "x")
+
+
+@st.composite
+def problems(draw):
+    n_types = draw(st.integers(2, 4))
+    n_workloads = draw(st.integers(1, 4))
+    prices = [draw(st.floats(0.5, 5.0)) for _ in range(n_types)]
+    configs = []
+    h_rows = []
+    for i in range(n_types):
+        configs.append(Config(stages=(Stage(_dev(i, prices[i]), 1, 1.0),),
+                              model_index=0, model=MODEL))
+        h_rows.append([draw(st.floats(0.1, 4.0)) for _ in range(n_workloads)])
+    lam = [draw(st.floats(1.0, 100.0)) for _ in range(n_workloads)]
+    demands = [(0, w, lam[w]) for w in range(n_workloads)]
+    avail = {f"g{i}": draw(st.integers(1, 4)) for i in range(n_types)}
+    budget = draw(st.floats(max(prices) + 0.1, 4 * sum(prices)))
+    return SchedulingProblem(configs=configs, h=np.array(h_rows),
+                             demands=demands, budget=budget, availability=avail)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(problems())
+def test_binary_search_plan_is_valid(problem):
+    plan = solve_binary_search(problem, tol=0.5)
+    # budget respected
+    assert plan.cost <= problem.budget + 1e-6
+    # availability respected
+    for name, n in plan.composition().items():
+        assert n <= problem.availability[name]
+    # full coverage
+    np.testing.assert_allclose(plan.assignment.sum(axis=0), 1.0, atol=1e-5)
+    # reported makespan consistent with assignment + throughput table
+    t = 0.0
+    for i, cfg in enumerate(plan.replicas):
+        c = problem.configs.index(cfg)
+        tc = sum(plan.assignment[i, d] * problem.demands[d][2] / problem.h[c, d]
+                 for d in range(len(problem.demands))
+                 if plan.assignment[i, d] > 1e-9)
+        t = max(t, tc)
+    assert t <= plan.makespan * 1.05 + 0.5
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(problems())
+def test_knapsack_witness_is_feasible(problem):
+    """Greedy success must be a *certificate*: its witness satisfies all
+    constraints and meets the claimed makespan."""
+    t_ub = problem.makespan_upper_bound()
+    witness = knapsack_feasible(problem, t_ub)
+    if witness is None:
+        return
+    y, x = witness
+    cost = sum(problem.configs[c].cost * y[c] for c in range(len(y)))
+    assert cost <= problem.budget + 1e-6
+    used = {}
+    for c, cfg in enumerate(problem.configs):
+        for n, k in cfg.device_counts().items():
+            used[n] = used.get(n, 0) + k * y[c]
+    for n, k in used.items():
+        assert k <= problem.availability[n] + 1e-9
+    np.testing.assert_allclose(x.sum(axis=0), 1.0, atol=1e-5)
+    assert plan_makespan(problem, y, x) <= t_ub * 1.01
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(problems(), st.floats(0.01, 0.99))
+def test_feasibility_monotone_in_t(problem, frac):
+    """If T̂ is feasible then any larger T̂ must also be feasible."""
+    t_ub = problem.makespan_upper_bound()
+    t_small = frac * t_ub
+    small = solve_feasibility(problem, t_small, time_limit=10)
+    if small is not None:
+        bigger = solve_feasibility(problem, t_small * 1.5, time_limit=10)
+        assert bigger is not None
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(50, 400))
+def test_trace_generation_deterministic_and_mixed(seed, n):
+    t1 = make_trace("trace2", num_requests=n, seed=seed)
+    t2 = make_trace("trace2", num_requests=n, seed=seed)
+    assert t1.requests == t2.requests
+    counts = t1.counts_by_type()
+    assert counts.sum() == n
+
+
+def test_cost_model_monotone_in_workload():
+    """Longer outputs can't increase throughput (req/s) at fixed config."""
+    from repro.core.catalog import GPU_CATALOG
+    from repro.core.costmodel import LLAMA3_8B
+    stages = (Stage(GPU_CATALOG["A100"], 1, 1.0),)
+    prev = None
+    for out in (18, 64, 253, 510):
+        h = config_throughput(stages, LLAMA3_8B, WorkloadType(496, out))
+        if prev is not None:
+            assert h <= prev * 1.0001
+        prev = h

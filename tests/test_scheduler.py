@@ -1,0 +1,103 @@
+"""End-to-end scheduler tests over the real Table-1 catalog."""
+import numpy as np
+import pytest
+
+from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
+                        LLAMA3_70B, TPU_CATALOG, build_problem, make_trace,
+                        solve, solve_homogeneous)
+from repro.core.scheduler import (apply_round_robin_assignment,
+                                  solve_fixed_composition, uniform_composition)
+from repro.core.costmodel import config_throughput
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace("trace1", num_requests=500, seed=0)
+
+
+def test_build_problem_shapes(trace):
+    p = build_problem([LLAMA3_70B], trace, GPU_CATALOG,
+                      AVAILABILITY_SNAPSHOTS["avail1"], budget=30.0)
+    assert len(p.configs) > 10
+    assert p.h.shape[0] == len(p.configs)
+    assert (p.h >= 0).all()
+    # every demand must be servable by at least one config
+    assert (p.h.max(axis=0) > 0).all()
+
+
+def test_solve_binary_search_respects_constraints(trace):
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    plan = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, budget=30.0)
+    assert plan.cost <= 30.0 + 1e-6
+    for name, n in plan.composition().items():
+        assert n <= avail[name]
+    # full coverage: assignment columns sum to 1
+    col = plan.assignment.sum(axis=0)
+    np.testing.assert_allclose(col, 1.0, atol=1e-6)
+    assert plan.makespan > 0
+
+
+def test_heterogeneous_beats_homogeneous(trace):
+    """The paper's headline: ours >= best homogeneous baseline (same budget)."""
+    budget = 30.0
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    ours = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, budget)
+    homo_best = None
+    for gpu in ("H100", "A6000", "4090"):
+        try:
+            p = solve_homogeneous([LLAMA3_70B], trace, GPU_CATALOG, gpu, budget)
+            homo_best = p.makespan if homo_best is None else min(homo_best, p.makespan)
+        except (RuntimeError, ValueError):
+            continue
+    assert homo_best is not None
+    # Note: homogeneous baselines have *unlimited* availability (paper §5.1),
+    # so they can beat constrained heterogeneity at high budgets; at 30 $/h
+    # under avail1 heterogeneity must win or tie within tolerance.
+    assert ours.makespan <= homo_best * 1.05
+
+
+def test_fixed_uniform_composition_is_worse_or_equal(trace):
+    budget = 30.0
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    ours = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, budget)
+    comp = uniform_composition(GPU_CATALOG, avail, budget)
+    uni = solve_fixed_composition([LLAMA3_70B], trace, GPU_CATALOG, comp, budget)
+    assert uni.makespan >= ours.makespan * 0.999
+
+
+def test_round_robin_assignment_is_worse_or_equal(trace):
+    budget = 30.0
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    ours = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, budget)
+    h_fn = lambda cfg, w: config_throughput(cfg.stages, cfg.model,
+                                            __import__("repro.core.workloads",
+                                                       fromlist=["WORKLOAD_TYPES"]).WORKLOAD_TYPES[w])
+    rr = apply_round_robin_assignment(ours, h_fn)
+    assert rr.makespan >= ours.makespan * 0.999
+
+
+def test_multi_model_serving(trace):
+    """App E: two models share budget + availability."""
+    mm_trace = make_trace("trace1", num_requests=400, model_mix=(0.8, 0.2), seed=1)
+    plan = solve([LLAMA3_8B, LLAMA3_70B], mm_trace, GPU_CATALOG,
+                 AVAILABILITY_SNAPSHOTS["avail2"], budget=60.0)
+    assert plan.cost <= 60.0 + 1e-6
+    models_used = {cfg.model_index for cfg in plan.replicas}
+    assert models_used == {0, 1}
+    np.testing.assert_allclose(plan.assignment.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_tpu_catalog_scheduling(trace):
+    """Hardware adaptation: same scheduler over heterogeneous TPU slices."""
+    avail = {"v5e-1": 16, "v5e-4": 8, "v5e-8": 4, "v4-8": 4, "v5p-8": 2}
+    plan = solve([LLAMA3_8B], trace, TPU_CATALOG, avail, budget=40.0)
+    assert plan.cost <= 40.0 + 1e-6
+    assert plan.makespan > 0
+
+
+def test_budget_monotonicity(trace):
+    """More budget can't make the optimal makespan worse."""
+    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    t15 = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 15.0, tol=0.5).makespan
+    t60 = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0, tol=0.5).makespan
+    assert t60 <= t15 * 1.02

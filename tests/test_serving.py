@@ -1,0 +1,98 @@
+"""Serving-runtime tests: router fidelity, engine generation, end-to-end
+plan execution with real JAX replicas, and the training loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import GPU_CATALOG, make_trace, solve
+from repro.core.costmodel import ModelProfile
+from repro.serving import AssignmentRouter, HeterogeneousServer, ReplicaEngine
+from repro.training import AdamW, init_state, make_train_step, data_stream
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("llama3-8b").reduced()
+
+
+def test_engine_generates(tiny_cfg):
+    eng = ReplicaEngine(tiny_cfg, seed=0)
+    prompts = jnp.asarray(np.random.default_rng(0).integers(
+        0, tiny_cfg.vocab_size, (3, 12)), jnp.int32)
+    res = eng.generate(prompts, max_new=6)
+    assert res.tokens.shape == (3, 6)
+    assert res.tokens.dtype == np.int32
+    assert (res.tokens >= 0).all() and (res.tokens < tiny_cfg.vocab_size).all()
+
+
+def test_engine_deterministic(tiny_cfg):
+    eng = ReplicaEngine(tiny_cfg, seed=0)
+    prompts = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32)
+    a = eng.generate(prompts, max_new=5).tokens
+    b = eng.generate(prompts, max_new=5).tokens
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    trace = make_trace("trace1", num_requests=60, seed=0)
+    profile = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                           head_dim=64, params_total=2e6, params_active=2e6)
+    plan = solve([profile], trace, GPU_CATALOG,
+                 {"A40": 4, "4090": 4, "H100": 2}, budget=8.0)
+    return plan, trace
+
+
+def test_router_tracks_plan_fractions(small_plan):
+    plan, trace = small_plan
+    router = AssignmentRouter(plan)
+    counts = np.zeros((len(plan.replicas), len(plan.demands)))
+    index = {(m, w): d for d, (m, w, _) in enumerate(plan.demands)}
+    for req in trace.requests:
+        i = router.route(req)
+        counts[i, index[(req.model, req.workload)]] += 1
+    totals = counts.sum(axis=0, keepdims=True)
+    realized = counts / np.maximum(totals, 1)
+    # deficit-round-robin keeps realized within 1 request of planned
+    for d in range(counts.shape[1]):
+        np.testing.assert_allclose(
+            realized[:, d] * totals[0, d],
+            plan.assignment[:, d] * totals[0, d], atol=1.0)
+
+
+def test_server_end_to_end(small_plan, tiny_cfg):
+    plan, trace = small_plan
+    server = HeterogeneousServer(plan, [tiny_cfg], max_batch=8)
+    stats = server.serve(trace, input_len=8, max_new=4)
+    assert stats.completed == trace.num_requests
+    assert stats.generated_tokens == trace.num_requests * 4
+    assert sum(stats.per_replica_requests) == trace.num_requests
+    assert stats.tokens_per_s > 0
+
+
+def test_train_loop_descends(tiny_cfg):
+    opt = AdamW(lr=3e-3, weight_decay=0.0)
+    state = init_state(tiny_cfg, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(tiny_cfg, opt))
+    stream = data_stream(tiny_cfg, batch=4, seq_len=32, seed=0)
+    batch = next(stream)   # single batch -> loss must fall when memorizing
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], f"no descent: {losses}"
+
+
+def test_train_step_all_archs_grad_finite():
+    """One optimizer step for a couple of exotic archs (hybrid, ssm)."""
+    for name in ("jamba-v0.1-52b", "xlstm-125m"):
+        cfg = get_config(name).reduced()
+        opt = AdamW(lr=1e-3)
+        state = init_state(cfg, jax.random.PRNGKey(1), opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        batch = next(data_stream(cfg, batch=2, seq_len=16, seed=1))
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"])), name

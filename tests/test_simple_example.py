@@ -1,0 +1,96 @@
+"""Reproduce the paper's §4.2 / Appendix C worked example *exactly*.
+
+Three abstract GPU types {t1,t2,t3} (2 units each, 4/2/2 $/h), two workloads
+(λ1=80, λ2=20), budget 8 $/h.  Given the paper's throughput table, the three
+cases must evaluate to 44.05 s, 35.24 s, 30.94 s, and the optimized plan to
+28.67 s — and our MILP must find a plan at least as good as 28.67 s.
+"""
+import numpy as np
+import pytest
+
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.milp import SchedulingProblem, plan_makespan, solve_milp
+from repro.core.binsearch import solve_binary_search
+from repro.core.plan import Config
+
+_GB = 1024**3
+
+MODEL = ModelProfile(name="toy", n_layers=2, d_model=64, n_kv_heads=1,
+                     head_dim=64, params_total=1e6, params_active=1e6)
+
+T1 = DeviceType("t1", 1e12, 1e11, 64 * _GB, 4.0, 8, 1e11, 1e9, "datacenter")
+T2 = DeviceType("t2", 1e12, 1e11, 64 * _GB, 2.0, 8, 1e11, 1e9, "workstation")
+T3 = DeviceType("t3", 1e12, 1e11, 64 * _GB, 2.0, 8, 1e11, 1e9, "consumer")
+
+# Paper's throughput table: (device, tp) -> (h_w1, h_w2) req/s.
+H = {
+    ("t1", 1): (1.0, 1.2),
+    ("t2", 1): (0.9, 0.9),
+    ("t3", 1): (0.3, 0.5),
+    ("t2", 2): (2.4, 1.5),   # TP over two t2 GPUs (Case 2)
+}
+
+LAM = np.array([80.0, 20.0])
+AVAIL = {"t1": 2, "t2": 2, "t3": 2}
+BUDGET = 8.0
+
+
+def _cfg(dev: DeviceType, tp: int) -> Config:
+    return Config(stages=(Stage(dev, tp, 1.0),), model_index=0, model=MODEL)
+
+
+def _problem() -> SchedulingProblem:
+    configs = [_cfg(T1, 1), _cfg(T2, 1), _cfg(T3, 1), _cfg(T2, 2)]
+    h = np.array([H[("t1", 1)], H[("t2", 1)], H[("t3", 1)], H[("t2", 2)]])
+    return SchedulingProblem(configs=configs, h=h,
+                             demands=[(0, 0, 80.0), (0, 1, 20.0)],
+                             budget=BUDGET, availability=AVAIL)
+
+
+def _proportional_time(rates_w1, rates_w2) -> float:
+    """Cases 1-2: workload split proportional to per-replica rate — the
+    system-wide rate is the sum, time = Σ_w λ_w / Σ_replicas rate."""
+    return LAM[0] / sum(rates_w1) + LAM[1] / sum(rates_w2)
+
+
+def test_case1_composition():
+    comp1 = _proportional_time([1.0, 0.9, 0.3], [1.2, 0.9, 0.5])
+    comp2 = _proportional_time([1.0, 0.9, 0.9], [1.2, 0.9, 0.9])
+    assert comp1 == pytest.approx(44.05, abs=0.01)
+    assert comp2 == pytest.approx(35.24, abs=0.01)
+    assert (comp1 - comp2) / comp1 == pytest.approx(0.20, abs=0.01)
+
+
+def test_case2_deployment_configuration():
+    cfg2 = _proportional_time([1.0, 2.4], [1.2, 1.5])
+    assert cfg2 == pytest.approx(30.94, abs=0.01)
+
+
+def test_case3_workload_assignment():
+    # 15% of w1 + 100% of w2 on t1; 85% of w1 on TP(2×t2).
+    t_t1 = 0.15 * LAM[0] / 1.0 + LAM[1] / 1.2
+    t_tp = 0.85 * LAM[0] / 2.4
+    assert max(t_t1, t_tp) == pytest.approx(28.67, abs=0.01)
+
+
+def test_milp_finds_at_least_paper_plan():
+    plan = solve_milp(_problem(), time_limit=60)
+    assert plan.cost <= BUDGET + 1e-6
+    assert plan.makespan <= 28.67 + 0.01
+    # Composition must match the paper's: 1×t1 + 2×t2 (the TP replica).
+    assert plan.composition() == {"t1": 1, "t2": 2}
+
+
+def test_binary_search_matches_milp():
+    plan_bs = solve_binary_search(_problem(), tol=0.05)
+    plan_milp = solve_milp(_problem(), time_limit=60)
+    assert plan_bs.makespan <= plan_milp.makespan * 1.01 + 0.05
+    assert plan_bs.cost <= BUDGET + 1e-6
+
+
+def test_makespan_evaluator_consistency():
+    problem = _problem()
+    y = np.array([1.0, 0.0, 0.0, 1.0])
+    x = np.array([[0.15, 1.0], [0, 0], [0, 0], [0.85, 0.0]])
+    assert plan_makespan(problem, y, x) == pytest.approx(28.67, abs=0.01)

@@ -1,0 +1,61 @@
+"""Cluster-simulator tests."""
+import numpy as np
+import pytest
+
+from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_70B,
+                        make_trace, simulate, solve)
+
+
+@pytest.fixture(scope="module")
+def plan_and_trace():
+    trace = make_trace("trace1", num_requests=300, seed=3)
+    plan = solve([LLAMA3_70B], trace, GPU_CATALOG,
+                 AVAILABILITY_SNAPSHOTS["avail1"], budget=30.0)
+    return plan, trace
+
+
+def test_all_requests_complete(plan_and_trace):
+    plan, trace = plan_and_trace
+    res = simulate(plan, trace, [LLAMA3_70B])
+    assert len(res.latencies) == trace.num_requests
+    assert res.makespan > 0
+    assert res.throughput > 0
+
+
+def test_simulated_makespan_tracks_planned(plan_and_trace):
+    """The simulator uses the same cost model as the planner, so the
+    simulated makespan should be within ~2x of the planned one (simulation
+    adds queueing, batching granularity, and random dispatch)."""
+    plan, trace = plan_and_trace
+    res = simulate(plan, trace, [LLAMA3_70B])
+    assert res.makespan >= plan.makespan * 0.5
+    assert res.makespan <= plan.makespan * 3.0
+
+
+def test_latency_percentiles_monotone(plan_and_trace):
+    plan, trace = plan_and_trace
+    res = simulate(plan, trace, [LLAMA3_70B])
+    ps = res.percentiles((10, 30, 50, 70, 90, 100))
+    vals = list(ps.values())
+    assert vals == sorted(vals)
+    assert vals[0] > 0
+
+
+def test_poisson_arrivals(plan_and_trace):
+    plan, _ = plan_and_trace
+    trace = make_trace("trace1", num_requests=200, arrival_rate=2.0, seed=4)
+    res = simulate(plan, trace, [LLAMA3_70B])
+    assert len(res.latencies) == 200
+    last_arrival = max(r.arrival for r in trace.requests)
+    assert res.makespan >= last_arrival
+
+
+def test_more_replicas_not_slower():
+    trace = make_trace("trace1", num_requests=300, seed=5)
+    small = solve([LLAMA3_70B], trace, GPU_CATALOG,
+                  AVAILABILITY_SNAPSHOTS["avail1"], budget=15.0)
+    big = solve([LLAMA3_70B], trace, GPU_CATALOG,
+                AVAILABILITY_SNAPSHOTS["avail1"], budget=60.0)
+    r_small = simulate(small, trace, [LLAMA3_70B])
+    r_big = simulate(big, trace, [LLAMA3_70B])
+    assert r_big.makespan <= r_small.makespan * 1.15

@@ -1,0 +1,52 @@
+"""Workload/trace substrate tests (Fig 1 categorization, Table 4 mixes)."""
+import numpy as np
+import pytest
+
+from repro.core.workloads import (INPUT_LENGTHS, OUTPUT_LENGTHS, TRACE_MIXES,
+                                  WORKLOAD_TYPES, WorkloadType, make_trace,
+                                  workload_demand)
+
+
+def test_nine_workload_types_grid():
+    assert len(WORKLOAD_TYPES) == 9
+    assert {w.input_len for w in WORKLOAD_TYPES} == set(INPUT_LENGTHS)
+    assert {w.output_len for w in WORKLOAD_TYPES} == set(OUTPUT_LENGTHS)
+
+
+def test_fig1_categorization():
+    assert WorkloadType(2455, 510).kind == "long_input_long_output"
+    assert WorkloadType(2455, 18).kind == "long_input_short_output"
+    assert WorkloadType(496, 510).kind == "short_input_long_output"
+    assert WorkloadType(496, 18).kind == "short_input_short_output"
+
+
+def test_table4_mixes_sum_to_100():
+    for name, mix in TRACE_MIXES.items():
+        assert len(mix) == 9, name
+        assert sum(mix) == 100, name
+
+
+def test_trace_mixture_statistics():
+    trace = make_trace("trace3", num_requests=5000, seed=0)
+    counts = trace.counts_by_type()
+    expected = np.array(TRACE_MIXES["trace3"]) / 100 * 5000
+    # multinomial: within 5 sigma
+    sigma = np.sqrt(expected * (1 - expected / 5000) + 1e-9)
+    assert np.all(np.abs(counts - expected) < 5 * sigma + 5)
+
+
+def test_poisson_arrival_rate():
+    trace = make_trace("trace1", num_requests=2000, arrival_rate=4.0, seed=1)
+    arrivals = np.array([r.arrival for r in trace.requests])
+    assert np.all(np.diff(arrivals) >= 0)
+    rate = 2000 / arrivals.max()
+    assert 3.5 < rate < 4.5
+
+
+def test_multimodel_demand_matrix():
+    trace = make_trace("trace1", num_requests=1000, model_mix=(0.75, 0.25),
+                       seed=2)
+    lam = workload_demand(trace, num_models=2)
+    assert lam.shape == (2, 9)
+    assert lam.sum() == 1000
+    assert 0.68 < lam[0].sum() / 1000 < 0.82
