@@ -16,16 +16,20 @@ from benchmarks.common import Row, timed
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, make_trace,
                         simulate, solve, solve_homogeneous)
 from repro.core.costmodel import LLAMA3_8B, LLAMA3_70B
+from repro.runtime import SLO
 
 BUDGETS = (15.0, 30.0, 60.0)
 TRACES = ("trace1", "trace2", "trace3")
 HOMO_TYPES = ("H100", "A6000", "4090")
 N_REQ = 1000
+# Online SLO used for the goodput columns: generous TTFT (the makespan
+# setting queues every request at t=0) + a tight per-token bound.
+BENCH_SLO = SLO(ttft=120.0, tpot=1.0)
 
 
 def _eval(plan, trace, profile):
     sim = simulate(plan, trace, [profile])
-    return sim.throughput, sim.percentile(90)
+    return sim.throughput, sim.percentile(90), sim
 
 
 def run(models=("llama3-70b",)) -> List[Row]:
@@ -41,7 +45,7 @@ def run(models=("llama3-70b",)) -> List[Row]:
             for budget in BUDGETS:
                 ours, us = timed(solve, [profile], trace, GPU_CATALOG, avail,
                                  budget, tol=1.0)
-                tp_ours, p90_ours = _eval(ours, trace, profile)
+                tp_ours, p90_ours, sim_ours = _eval(ours, trace, profile)
                 best_tp, best_p90 = 0.0, np.inf
                 best_capped_tp = 0.0
                 best_name = "-"
@@ -52,7 +56,7 @@ def run(models=("llama3-70b",)) -> List[Row]:
                                                  tol=1.0)
                     except (RuntimeError, ValueError):
                         continue
-                    tp_h, p90_h = _eval(homo, trace, profile)
+                    tp_h, p90_h, sim_h = _eval(homo, trace, profile)
                     # capped variant: same GPU type, but bounded by the
                     # actual availability snapshot (what you can really rent)
                     try:
@@ -60,7 +64,7 @@ def run(models=("llama3-70b",)) -> List[Row]:
                                        {gpu: GPU_CATALOG[gpu]},
                                        {gpu: avail.get(gpu, 0)}, budget,
                                        tol=1.0)
-                        tp_c, _ = _eval(capped, trace, profile)
+                        tp_c, _, _ = _eval(capped, trace, profile)
                     except (RuntimeError, ValueError):
                         tp_c = 0.0
                     best_capped_tp = max(best_capped_tp, tp_c)
@@ -70,6 +74,10 @@ def run(models=("llama3-70b",)) -> List[Row]:
                         "throughput_rps": round(tp_h, 4),
                         "capped_rps": round(tp_c, 4),
                         "p90_s": round(p90_h, 1),
+                        "ttft_p90_s": round(sim_h.ttft_percentile(90), 1),
+                        "goodput_rps": round(sim_h.goodput(BENCH_SLO), 4),
+                        "slo_attain_pct": round(
+                            100 * sim_h.slo_attainment(BENCH_SLO), 1),
                     })
                     if tp_h > best_tp:
                         best_tp, best_name = tp_h, gpu
@@ -86,6 +94,10 @@ def run(models=("llama3-70b",)) -> List[Row]:
                     "us_per_call": us,
                     "throughput_rps": round(tp_ours, 4),
                     "p90_s": round(p90_ours, 1),
+                    "ttft_p90_s": round(sim_ours.ttft_percentile(90), 1),
+                    "goodput_rps": round(sim_ours.goodput(BENCH_SLO), 4),
+                    "slo_attain_pct": round(
+                        100 * sim_ours.slo_attainment(BENCH_SLO), 1),
                     "best_homo": best_name,
                     "throughput_gain_pct": round(100 * gain, 1),
                     "gain_vs_capped_homo_pct": round(100 * gain_capped, 1),

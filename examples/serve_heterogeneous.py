@@ -1,50 +1,63 @@
 """End-to-end serving driver (the paper's kind of system is a *server*):
 
   1. schedule a heterogeneous plan for a trace + budget (MILP core),
-  2. evaluate it against homogeneous baselines in the simulator,
-  3. EXECUTE the plan with real JAX model replicas — the workload-assignment
-     router dispatches batched requests and every replica generates real
-     tokens (reduced-config Llama3 on CPU; full configs are exercised by the
-     multi-pod dry-run).
+  2. evaluate it against homogeneous baselines on the unified event-driven
+     runtime (cost-model backend): streaming dispatch at arrival time,
+     continuous batching, per-request TTFT/TPOT and goodput under an SLO,
+  3. EXECUTE the plan with real JAX model replicas through the *same*
+     runtime scheduler — the EngineExecutor generates real tokens batch-for-
+     batch with the plan evaluation (reduced-config Llama3 on CPU; full
+     configs are exercised by the multi-pod dry-run).
 
     PYTHONPATH=src python examples/serve_heterogeneous.py
 """
 from repro.configs import get_config
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
                         make_trace, simulate, solve, solve_homogeneous)
+from repro.runtime import SLO
 from repro.serving import HeterogeneousServer
 
 
 def main():
     budget = 12.0
-    trace = make_trace("trace3", num_requests=120, seed=0)
+    trace = make_trace("trace3", num_requests=120, arrival_rate=4.0, seed=0)
     avail = AVAILABILITY_SNAPSHOTS["avail2"]
+    slo = SLO(ttft=20.0, tpot=0.5)
 
     print("== scheduling ==")
     plan = solve([LLAMA3_8B], trace, GPU_CATALOG, avail, budget)
     print(plan.summary())
 
-    print("\n== plan quality vs homogeneous baselines (simulated) ==")
+    print("\n== plan quality vs homogeneous baselines (runtime-predicted) ==")
     ours = simulate(plan, trace, [LLAMA3_8B])
-    print(f"ours      : {ours.throughput:.2f} req/s, p90 {ours.percentile(90):.1f}s")
+    print(f"ours      : {ours.throughput:.2f} req/s, p90 "
+          f"{ours.percentile(90):.1f}s, ttft_p90 "
+          f"{ours.ttft_percentile(90):.1f}s, goodput {ours.goodput(slo):.2f} "
+          f"req/s ({100 * ours.slo_attainment(slo):.0f}% in SLO)")
     for gpu in ("H100", "A6000", "4090"):
         try:
             homo = solve_homogeneous([LLAMA3_8B], trace, GPU_CATALOG, gpu,
                                      budget)
             sim = simulate(homo, trace, [LLAMA3_8B])
             print(f"homo-{gpu:<6}: {sim.throughput:.2f} req/s, "
-                  f"p90 {sim.percentile(90):.1f}s")
+                  f"p90 {sim.percentile(90):.1f}s, "
+                  f"goodput {sim.goodput(slo):.2f} req/s "
+                  f"({100 * sim.slo_attainment(slo):.0f}% in SLO)")
         except (RuntimeError, ValueError) as e:
             print(f"homo-{gpu:<6}: infeasible ({e})")
 
     print("\n== executing the plan with real JAX replicas ==")
     cfg = get_config("llama3-8b").reduced()
     server = HeterogeneousServer(plan, [cfg], max_batch=8)
-    stats = server.serve(trace, input_len=16, max_new=8)
+    stats = server.serve(trace, input_len=8, max_new=4)
+    res = stats.result
     print(f"served {stats.completed} requests "
           f"({stats.generated_tokens} tokens) on {len(plan.replicas)} "
           f"replicas in {stats.wall_s:.1f}s -> {stats.tokens_per_s:.0f} tok/s")
     print(f"requests per replica: {stats.per_replica_requests}")
+    print(f"executed ttft_p90 {res.ttft_percentile(90):.2f}s, "
+          f"tpot_p90 {res.tpot_percentile(90):.3f}s "
+          f"(same scheduler, measured step times)")
 
 
 if __name__ == "__main__":

@@ -2,14 +2,17 @@
 
   1. SLO-constrained min-cost planning — "finish the trace within T seconds,
      spend as little as possible" (the dual of the paper's min-T-under-budget);
-  2. availability-drop replanning — the H100 pool is reclaimed mid-serving
-     (the paper's Fig-2 fluctuation) and the scheduler re-rents around it.
+  2. availability-drop replanning — the H100 pool is reclaimed *mid-trace*
+     (the paper's Fig-2 fluctuation): the scheduler re-solves around it and
+     the event-driven runtime applies the new plan online, keeping surviving
+     replicas warm and migrating queued requests off the reclaimed ones.
 
     PYTHONPATH=src python examples/slo_and_replan.py
 """
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_70B,
                         make_trace, simulate, solve)
 from repro.core.scheduler import replan, solve_min_cost
+from repro.runtime import SLO, ReplanEvent
 
 
 def main():
@@ -29,14 +32,25 @@ def main():
         print(f"SLO {slo:6.1f}s -> T={plan.makespan:6.1f}s at "
               f"{plan.cost:5.2f} $/h  {plan.composition()}")
 
-    print("\n== availability drop: all H100s reclaimed ==")
+    print("\n== mid-trace availability drop: all H100s reclaimed ==")
+    # Streaming arrivals; halfway through, the H100 pool evaporates and the
+    # runtime consumes scheduler.replan() online.
+    live = make_trace("trace1", num_requests=400, arrival_rate=4.0, seed=0)
+    t_drop = max(r.arrival for r in live.requests) / 2
     dropped = dict(avail, H100=0)
-    new_plan = replan(fast, [LLAMA3_70B], trace, GPU_CATALOG, dropped, 60.0)
-    sim = simulate(new_plan, trace, [LLAMA3_70B])
-    print(f"replanned: T={new_plan.makespan:.1f}s at {new_plan.cost:.2f} $/h "
-          f"{new_plan.composition()} "
-          f"(kept {new_plan.solver_info.get('replicas_kept', 0):.0f} replicas; "
-          f"simulated {sim.throughput:.2f} req/s)")
+    new_plan = replan(fast, [LLAMA3_70B], live, GPU_CATALOG, dropped, 60.0)
+    res = simulate(fast, live, [LLAMA3_70B],
+                   replan=ReplanEvent(time=t_drop, plan=new_plan))
+    slo = SLO(ttft=60.0, tpot=0.5)
+    print(f"replanned at t={t_drop:.0f}s: new plan T={new_plan.makespan:.1f}s "
+          f"at {new_plan.cost:.2f} $/h {new_plan.composition()}")
+    print(f"runtime: kept {res.info['replicas_kept']:.0f} replicas warm, "
+          f"added {res.info['replicas_added']:.0f}, drained "
+          f"{res.info['replicas_drained']:.0f}, migrated "
+          f"{res.info['requests_migrated']:.0f} queued requests")
+    print(f"served {res.num_completed}/{live.num_requests} requests, "
+          f"makespan {res.makespan:.1f}s, goodput {res.goodput(slo):.2f} "
+          f"req/s ({100 * res.slo_attainment(slo):.0f}% in SLO)")
 
 
 if __name__ == "__main__":

@@ -7,8 +7,9 @@ from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, ModelProfile, Stage,
 from repro.core.plan import Config, ServingPlan
 from repro.core.milp import SchedulingProblem, solve_feasibility, solve_milp
 from repro.core.binsearch import knapsack_feasible, solve_binary_search
-from repro.core.scheduler import (build_problem, solve, solve_homogeneous,
-                                  solve_fixed_composition, uniform_composition)
+from repro.core.scheduler import (build_problem, replan, solve,
+                                  solve_homogeneous, solve_fixed_composition,
+                                  uniform_composition)
 from repro.core.simulator import SimResult, simulate
 from repro.core.workloads import (TRACE_MIXES, WORKLOAD_TYPES, Request, Trace,
                                   WorkloadType, make_trace, workload_demand)
@@ -18,8 +19,9 @@ __all__ = [
     "get_catalog", "LLAMA3_8B", "LLAMA3_70B", "ModelProfile", "Stage",
     "config_throughput", "max_batch_size", "Config", "ServingPlan",
     "SchedulingProblem", "solve_feasibility", "solve_milp",
-    "knapsack_feasible", "solve_binary_search", "build_problem", "solve",
-    "solve_homogeneous", "solve_fixed_composition", "uniform_composition",
-    "SimResult", "simulate", "TRACE_MIXES", "WORKLOAD_TYPES", "Request",
-    "Trace", "WorkloadType", "make_trace", "workload_demand",
+    "knapsack_feasible", "solve_binary_search", "build_problem", "replan",
+    "solve", "solve_homogeneous", "solve_fixed_composition",
+    "uniform_composition", "SimResult", "simulate", "TRACE_MIXES",
+    "WORKLOAD_TYPES", "Request", "Trace", "WorkloadType", "make_trace",
+    "workload_demand",
 ]

@@ -17,6 +17,7 @@ Also provides the paper's baselines:
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -139,9 +140,12 @@ def replan(
     their identity (the runtime can keep them warm); the rest are re-rented.
     """
     new_plan = solve(models, trace, catalog, new_availability, budget, **kw)
-    kept = sum(1 for c in new_plan.replicas
-               if any(c.key == o.key for o in plan.replicas))
-    new_plan.solver_info["replicas_kept"] = float(kept)
+    # Multiset matching by config key: a surviving key keeps at most as many
+    # replicas as the old plan actually had (the runtime matches the same way
+    # when it migrates queued requests off drained replicas).
+    overlap = (Counter(o.key for o in plan.replicas)
+               & Counter(c.key for c in new_plan.replicas))
+    new_plan.solver_info["replicas_kept"] = float(sum(overlap.values()))
     return new_plan
 
 

@@ -1,165 +1,44 @@
 """Event-driven cluster simulator for evaluating serving plans.
 
-Each replica runs continuous batching: admitted requests pay a serialized
-prefill, then decode proceeds in lockstep steps whose duration comes from the
-same cost model the scheduler uses; the simulator advances replica time to
-the next completion event (O(#requests) events per replica, not #tokens).
+Thin wrapper over the unified serving runtime (``repro.runtime``): the
+continuous-batching replica loop, streaming dispatch, and SLO accounting
+all live there, shared verbatim with the real-token server — this module
+just binds the :class:`~repro.runtime.executor.CostModelExecutor` backend
+so step durations come from the same cost model the scheduler plans with.
 
-Outputs the paper's metrics: makespan, overall throughput (req/s), and
-percentile latencies (p10..p100).
+Outputs the paper's metrics (makespan, overall throughput in req/s,
+percentile latencies) plus per-request TTFT/TPOT and ``goodput(slo)``.
+``SimResult`` is an alias of :class:`repro.runtime.RuntimeResult` kept for
+backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Dict, List, Optional, Sequence
+from typing import Sequence
 
-import numpy as np
-
-from repro.core import costmodel
 from repro.core.costmodel import ModelProfile
-from repro.core.plan import Config, ServingPlan
-from repro.core.workloads import WORKLOAD_TYPES, Request, Trace
+from repro.core.plan import ServingPlan
+from repro.core.workloads import Trace
+from repro.runtime.lifecycle import RuntimeResult
 
-
-@dataclasses.dataclass
-class SimResult:
-    makespan: float
-    throughput: float                    # completed requests / makespan
-    latencies: np.ndarray                # per-request completion − arrival
-    per_replica_busy: np.ndarray
-
-    def percentile(self, p: float) -> float:
-        return float(np.percentile(self.latencies, p))
-
-    def percentiles(self, ps: Sequence[int] = (10, 30, 50, 70, 90, 100)) -> Dict[str, float]:
-        return {f"p{p}": self.percentile(p) for p in ps}
-
-
-@dataclasses.dataclass
-class _Active:
-    req: Request
-    remaining: int           # decode tokens left
-
-
-class _ReplicaSim:
-    """Continuous-batching simulation of one replica."""
-
-    def __init__(self, config: Config, model: ModelProfile):
-        self.config = config
-        self.model = model
-        self.queue: List[Request] = []
-        self.active: List[_Active] = []
-        self.now = 0.0
-        self.busy = 0.0
-        self.completions: List[tuple] = []   # (req_id, finish_time)
-
-    def _max_batch(self) -> int:
-        caps = [costmodel.max_batch_size(self.config.stages, self.model,
-                                         WORKLOAD_TYPES[r.workload])
-                for r in (self.queue[:1] or [])]
-        # Use the first queued request's workload as the cap proxy; mixed
-        # batches use the min cap across active workloads.
-        b = costmodel.MAX_BATCH
-        for a in self.active:
-            b = min(b, costmodel.max_batch_size(
-                self.config.stages, self.model, WORKLOAD_TYPES[a.req.workload]))
-        if caps:
-            b = min(b, caps[0])
-        return max(1, int(b))
-
-    def _admit(self):
-        """Admit queued requests (continuous batching: classes mix freely),
-        paying each request's prefill serially on admission."""
-        while self.queue and len(self.active) < self._max_batch():
-            r = self.queue[0]
-            if r.arrival > self.now and not self.active:
-                self.now = r.arrival
-            if r.arrival > self.now:
-                break
-            self.queue.pop(0)
-            t_pre = max(costmodel._stage_prefill_time(st, self.model, r.input_len)
-                        for st in self.config.stages)
-            self.now += t_pre
-            self.busy += t_pre
-            self.active.append(_Active(r, max(1, r.output_len)))
-
-    def step(self) -> bool:
-        """Advance to the next completion. Returns False when idle+empty."""
-        if not self.active:
-            if not self.queue:
-                return False
-            self._admit()
-            if not self.active:
-                return False
-        batch = len(self.active)
-        avg_ctx = float(np.mean([a.req.input_len + (a.req.output_len - a.remaining)
-                                 for a in self.active])) + 1.0
-        t_step = max(costmodel._stage_decode_step_time(st, self.model, batch, avg_ctx)
-                     for st in self.config.stages)
-        k = min(a.remaining for a in self.active)
-        # Don't overshoot the next arrival (so we can admit mid-flight).
-        if self.queue:
-            next_arrival = self.queue[0].arrival
-            if next_arrival > self.now:
-                k = max(1, min(k, int((next_arrival - self.now) / max(t_step, 1e-12)) + 1))
-        self.now += k * t_step
-        self.busy += k * t_step
-        still: List[_Active] = []
-        for a in self.active:
-            a.remaining -= k
-            if a.remaining <= 0:
-                self.completions.append((a.req.req_id, self.now))
-            else:
-                still.append(a)
-        self.active = still
-        self._admit()
-        return True
+SimResult = RuntimeResult
 
 
 def simulate(plan: ServingPlan, trace: Trace,
-             models: Sequence[ModelProfile], *, seed: int = 0) -> SimResult:
-    """Dispatch the trace per the plan's assignment and simulate each replica.
+             models: Sequence[ModelProfile], *, seed: int = 0,
+             replan=None) -> RuntimeResult:
+    """Simulate serving ``trace`` under ``plan``.
 
-    Dispatch is deterministic deficit-round-robin (the same policy as the
-    runtime's AssignmentRouter): realized per-replica fractions track the
-    plan's x_{c,w} to within one request, so simulated makespan reflects the
-    plan rather than multinomial sampling noise.
+    Requests are dispatched at arrival time by the plan's deficit-round-robin
+    ``AssignmentRouter`` (realized per-replica fractions track the plan's
+    x_{c,w} to within one request), then each replica runs continuous
+    batching with cost-model step times.  ``replan`` optionally passes
+    :class:`repro.runtime.ReplanEvent` s for mid-trace availability changes.
+    ``seed`` is kept for API compatibility (dispatch is deterministic).
     """
-    demand_index = {(m, w): d for d, (m, w, _) in enumerate(plan.demands)}
-    replicas = [_ReplicaSim(cfg, models[cfg.model_index]) for cfg in plan.replicas]
-    credit = np.zeros_like(plan.assignment)
-
-    for r in sorted(trace.requests, key=lambda q: q.arrival):
-        d = demand_index.get((r.model, r.workload))
-        if d is None:
-            continue
-        probs = np.clip(plan.assignment[:, d], 0, None)
-        total = probs.sum()
-        if total <= 0:
-            # plan doesn't cover this demand (shouldn't happen) — round robin
-            i = r.req_id % len(replicas)
-        else:
-            credit[:, d] += probs / total
-            i = int(np.argmax(credit[:, d]))
-            credit[i, d] -= 1.0
-        replicas[i].queue.append(r)
-
-    finishes: List[float] = []
-    latencies: List[float] = []
-    arrival_by_id = {r.req_id: r.arrival for r in trace.requests}
-    for rep in replicas:
-        while rep.step():
-            pass
-        for req_id, t in rep.completions:
-            finishes.append(t)
-            latencies.append(t - arrival_by_id[req_id])
-
-    makespan = max(finishes) if finishes else 0.0
-    n = len(finishes)
-    return SimResult(
-        makespan=makespan,
-        throughput=n / makespan if makespan > 0 else 0.0,
-        latencies=np.array(sorted(latencies)),
-        per_replica_busy=np.array([rep.busy for rep in replicas]),
-    )
+    del seed
+    # Imported here (not at module top) to keep repro.core <-> repro.runtime
+    # importable in either order.
+    from repro.runtime.executor import CostModelExecutor
+    from repro.runtime.orchestrator import ServingRuntime
+    executor = CostModelExecutor(plan.replicas, models)
+    return ServingRuntime(plan, executor).run(trace, replan=replan)

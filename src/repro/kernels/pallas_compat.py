@@ -1,0 +1,21 @@
+"""Version-compat shims for the Pallas TPU API.
+
+The TPU compiler-params class was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (<= 0.4.x) became ``pltpu.CompilerParams``
+(newer releases).  Both kernels route through :func:`tpu_compiler_params`
+so they lower on either pin.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(dimension_semantics: Sequence[str], **kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``."""
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=tuple(dimension_semantics), **kwargs)

@@ -1,19 +1,20 @@
-"""Serving driver: schedule a plan for a trace + budget, then execute it
-end-to-end with real JAX replicas (reduced-config models on CPU; full
-configs are exercised by the dry-run).
+"""Serving driver: schedule a plan for a trace + budget, then run it through
+the unified runtime — predicted metrics from the cost-model backend, and
+optionally real token execution on CPU replicas with the same scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --trace trace1 --budget 30 --avail avail1 --requests 100
+        --trace trace1 --budget 30 --avail avail1 --requests 100 \
+        --arrival-rate 2.0 --slo-ttft 30 --slo-tpot 1.0
 """
 from __future__ import annotations
 
 import argparse
-import json
 
 from repro.configs import get_config
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, make_trace,
                         simulate, solve)
 from repro.core.costmodel import LLAMA3_8B, LLAMA3_70B
+from repro.runtime import SLO
 from repro.serving import HeterogeneousServer
 
 
@@ -26,33 +27,49 @@ def main():
     ap.add_argument("--model", default="llama3-70b",
                     choices=["llama3-8b", "llama3-70b"])
     ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson req/s (default: all arrive at t=0)")
     ap.add_argument("--method", default="binary_search",
                     choices=["binary_search", "milp"])
+    ap.add_argument("--slo-ttft", type=float, default=float("inf"),
+                    help="TTFT SLO in seconds (for goodput)")
+    ap.add_argument("--slo-tpot", type=float, default=float("inf"),
+                    help="TPOT SLO in seconds (for goodput)")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--execute", action="store_true",
                     help="also run real token generation on CPU replicas")
     args = ap.parse_args()
 
     profile = LLAMA3_70B if args.model == "llama3-70b" else LLAMA3_8B
-    trace = make_trace(args.trace, num_requests=args.requests, seed=0)
+    trace = make_trace(args.trace, num_requests=args.requests,
+                       arrival_rate=args.arrival_rate, seed=0)
     plan = solve([profile], trace, GPU_CATALOG,
                  AVAILABILITY_SNAPSHOTS[args.avail], args.budget,
                  method=args.method)
     print(plan.summary())
+    slo = SLO(ttft=args.slo_ttft, tpot=args.slo_tpot)
     sim = simulate(plan, trace, [profile])
-    print(f"simulated: makespan={sim.makespan:.1f}s "
+    print(f"predicted: makespan={sim.makespan:.1f}s "
           f"throughput={sim.throughput:.3f} req/s "
-          f"p90={sim.percentile(90):.1f}s")
+          f"p90={sim.percentile(90):.1f}s "
+          f"ttft_p90={sim.ttft_percentile(90):.1f}s "
+          f"tpot_p90={sim.tpot_percentile(90):.3f}s "
+          f"goodput={sim.goodput(slo):.3f} req/s "
+          f"({100 * sim.slo_attainment(slo):.0f}% in SLO)")
 
     if args.execute:
         cfg = get_config(args.model).reduced()
         server = HeterogeneousServer(plan, [cfg], max_batch=8)
         stats = server.serve(trace, input_len=16, max_new=args.max_new)
+        res = stats.result
         print(f"executed: {stats.completed} requests, "
               f"{stats.generated_tokens} tokens, "
               f"{stats.tokens_per_s:.1f} tok/s on "
               f"{len(plan.replicas)} replicas "
-              f"(per-replica: {stats.per_replica_requests})")
+              f"(per-replica: {stats.per_replica_requests}); "
+              f"ttft_p90={res.ttft_percentile(90):.2f}s "
+              f"tpot_p90={res.tpot_percentile(90):.3f}s "
+              f"goodput={res.goodput(slo):.3f} req/s")
 
 
 if __name__ == "__main__":

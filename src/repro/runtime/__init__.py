@@ -1,0 +1,22 @@
+"""Unified event-driven serving runtime.
+
+One continuous-batching core (request lifecycle, admission, batching,
+streaming dispatch, online replanning) behind two executor backends:
+
+* ``CostModelExecutor`` — analytical step times from ``repro.core.costmodel``
+  (drives ``repro.core.simulator.simulate``), and
+* ``EngineExecutor`` — real token generation via JAX ``ReplicaEngine``
+  replicas (drives ``repro.serving.HeterogeneousServer``).
+"""
+from repro.runtime.executor import (CostModelExecutor, EngineExecutor,
+                                    Executor)
+from repro.runtime.lifecycle import (Phase, RequestState, RuntimeResult, SLO)
+from repro.runtime.orchestrator import ReplanEvent, ServingRuntime
+from repro.runtime.replica import ReplicaRuntime
+from repro.runtime.router import AssignmentRouter
+
+__all__ = [
+    "AssignmentRouter", "CostModelExecutor", "EngineExecutor", "Executor",
+    "Phase", "ReplanEvent", "ReplicaRuntime", "RequestState",
+    "RuntimeResult", "SLO", "ServingRuntime",
+]

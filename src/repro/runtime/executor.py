@@ -1,0 +1,265 @@
+"""Pluggable execution backends for the shared continuous-batching core.
+
+The replica scheduler (``repro.runtime.replica``) owns *when* requests are
+admitted, batched, and stepped; an :class:`Executor` owns *how long* (and,
+for real backends, *actually doing*) each prefill / decode step takes:
+
+* :class:`CostModelExecutor` — durations from ``repro.core.costmodel``;
+  this is the simulator backend (what ``core.simulator.simulate`` runs on).
+* :class:`EngineExecutor` — real token generation through
+  ``repro.serving.engine.ReplicaEngine`` replicas; scheduling runs on the
+  *measured* wall time of each jit'd prefill/decode call, at runtime scale
+  (synthetic ``input_len``-token prompts, decode capped at ``max_new``).
+
+Both backends sit behind the same admission/batching/routing code path, so
+plan evaluation and plan execution cannot drift apart.
+"""
+from __future__ import annotations
+
+import abc
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.costmodel import ModelProfile
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import WORKLOAD_TYPES, Request
+
+from repro.runtime.lifecycle import RequestState
+
+
+class Executor(abc.ABC):
+    """Timing + side-effect backend for one pool of replicas.
+
+    ``max_steps_per_event`` bounds how many lockstep decode steps the
+    scheduler may fast-forward per event: unbounded for analytical backends
+    (O(#requests) events), 1 for real engines (every token is a real call).
+    """
+
+    max_steps_per_event: int = 10**9
+
+    @abc.abstractmethod
+    def add_replica(self, config: Config) -> None:
+        """Register one more replica (used by mid-trace replanning)."""
+
+    @abc.abstractmethod
+    def decode_quota(self, req: Request) -> int:
+        """Decode steps this backend runs for ``req`` after the first token."""
+
+    @abc.abstractmethod
+    def max_batch(self, rep: int, workload_index: int) -> int:
+        """Concurrent-batch cap of replica ``rep`` for one workload class."""
+
+    @abc.abstractmethod
+    def prefill(self, rep: int, states: Sequence[RequestState]
+                ) -> Sequence[float]:
+        """Admit a group: run/cost its prefill.  Returns each request's
+        first-token completion offset from the call start (monotone; the
+        last entry is the total duration charged to the replica clock)."""
+
+    @abc.abstractmethod
+    def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
+        """Predicted duration of one lockstep decode step (0 if unknown)."""
+
+    @abc.abstractmethod
+    def decode(self, rep: int, states: Sequence[RequestState], k: int,
+               step_time: float) -> float:
+        """Run/cost ``k`` lockstep decode steps for the batch; returns the
+        elapsed duration.  ``step_time`` is the scheduler's value from
+        :meth:`step_time` for this event (so analytical backends don't
+        re-evaluate the cost model)."""
+
+    def release(self, rep: int, state: RequestState) -> None:
+        """A request finished on replica ``rep`` (free backend resources)."""
+
+
+class CostModelExecutor(Executor):
+    """Analytical backend: step durations from the paper's cost model.
+
+    Replaces the guts of the old ``core/simulator.py`` replica loop —
+    serialized per-request prefill on admission, memory-bound lockstep
+    decode whose duration tracks batch size and mean context length.
+    """
+
+    def __init__(self, replicas: Sequence[Config] | ServingPlan,
+                 models: Optional[Sequence[ModelProfile]] = None):
+        if isinstance(replicas, ServingPlan):
+            replicas = replicas.replicas
+        self.configs: List[Config] = []
+        self.models: List[ModelProfile] = []
+        self._model_table = models
+        for cfg in replicas:
+            self.add_replica(cfg)
+
+    def add_replica(self, config: Config) -> None:
+        self.configs.append(config)
+        if self._model_table is not None:
+            self.models.append(self._model_table[config.model_index])
+        else:
+            self.models.append(config.model)
+
+    def decode_quota(self, req: Request) -> int:
+        return max(1, req.output_len)
+
+    def max_batch(self, rep: int, workload_index: int) -> int:
+        cfg, model = self.configs[rep], self.models[rep]
+        return int(costmodel.max_batch_size(cfg.stages, model,
+                                            WORKLOAD_TYPES[workload_index]))
+
+    def prefill(self, rep: int, states: Sequence[RequestState]
+                ) -> Sequence[float]:
+        cfg, model = self.configs[rep], self.models[rep]
+        offs, t = [], 0.0
+        for s in states:
+            t += max(costmodel._stage_prefill_time(st, model, s.req.input_len)
+                     for st in cfg.stages)
+            offs.append(t)
+        return offs
+
+    def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
+        cfg, model = self.configs[rep], self.models[rep]
+        avg_ctx = float(np.mean([s.req.input_len + (s.quota - s.remaining)
+                                 for s in states])) + 1.0
+        return max(costmodel._stage_decode_step_time(st, model, len(states),
+                                                     avg_ctx)
+                   for st in cfg.stages)
+
+    def decode(self, rep: int, states: Sequence[RequestState], k: int,
+               step_time: float) -> float:
+        return k * step_time
+
+
+class _EngineGroup:
+    """One admission cohort decoding together on a real engine (shared
+    prompt shape -> shared cache tensors; lockstep position counter)."""
+
+    def __init__(self, req_ids: List[int], caches, tok, pos: int):
+        self.req_ids = set(req_ids)
+        self.caches = caches
+        self.tok = tok
+        self.pos = pos
+
+
+class EngineExecutor(Executor):
+    """Real-token backend: one ``ReplicaEngine`` per plan replica.
+
+    Trace token lengths are cost-model scale; real generation runs at
+    runtime scale — synthetic prompts of ``input_len`` tokens and at most
+    ``max_new`` generated tokens per request — exactly like the old
+    ``HeterogeneousServer`` did, but now batch formation comes from the
+    shared continuous-batching scheduler instead of fixed-size chunking.
+    """
+
+    max_steps_per_event = 1
+
+    def __init__(self, plan: ServingPlan | Sequence[Config],
+                 arch_cfgs: Sequence, *,
+                 params_per_model: Optional[Dict[int, object]] = None,
+                 max_batch: int = 8, input_len: int = 16, max_new: int = 8,
+                 seed: int = 0):
+        replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
+        self.arch_cfgs = list(arch_cfgs)
+        self.params_per_model = params_per_model or {}
+        self.max_batch_cap = max_batch
+        self.input_len = input_len
+        self.max_new = max_new
+        self.engines: List = []
+        self._groups: List[List[_EngineGroup]] = []
+        for cfg in replicas:
+            self.add_replica(cfg)
+        self._base_replicas = len(self.engines)
+        self.configure(seed=seed)
+
+    def configure(self, *, input_len: Optional[int] = None,
+                  max_new: Optional[int] = None, seed: int = 0) -> None:
+        """Reset counters (and optionally the runtime scale) before a run."""
+        if input_len is not None:
+            self.input_len = input_len
+        if max_new is not None:
+            self.max_new = max_new
+        self._rng = np.random.default_rng(seed)
+        self.generated_tokens = 0
+        self.compute_s = 0.0       # measured seconds inside jit'd calls
+        # Engines appended by a previous run's replan belong to that run's
+        # transient plan: drop them so replica indices line up with a fresh
+        # ServingRuntime built over the base plan.
+        del self.engines[self._base_replicas:]
+        self._groups = [[] for _ in self.engines]
+
+    def add_replica(self, config: Config) -> None:
+        from repro.serving.engine import ReplicaEngine  # lazy: avoids cycle
+        arch = self.arch_cfgs[config.model_index]
+        self.engines.append(ReplicaEngine(
+            arch, params=self.params_per_model.get(config.model_index),
+            seed=config.model_index))
+        self._groups.append([])
+
+    def decode_quota(self, req: Request) -> int:
+        return max(0, min(max(1, req.output_len), self.max_new) - 1)
+
+    def max_batch(self, rep: int, workload_index: int) -> int:
+        return self.max_batch_cap
+
+    def prefill(self, rep: int, states: Sequence[RequestState]
+                ) -> Sequence[float]:
+        import jax
+        import jax.numpy as jnp
+        engine = self.engines[rep]
+        arch = engine.cfg
+        b = len(states)
+        prompts = jnp.asarray(self._rng.integers(
+            0, arch.vocab_size, size=(b, self.input_len)), jnp.int32)
+        prefix = None
+        n_prefix = 0
+        if arch.frontend != "none":
+            n_prefix = arch.num_patches
+            prefix = jnp.asarray(self._rng.normal(
+                0, 0.02, size=(b, n_prefix, arch.d_model)), jnp.bfloat16)
+        t_max = self.input_len + n_prefix + self.max_new
+        t0 = time.perf_counter()
+        tok, caches = engine.prefill_batch(prompts, t_max,
+                                           prefix_embeds=prefix)
+        jax.block_until_ready(tok)
+        elapsed = time.perf_counter() - t0
+        self.generated_tokens += b
+        self.compute_s += elapsed
+        self._groups[rep].append(_EngineGroup(
+            [s.req.req_id for s in states], caches, tok,
+            self.input_len + n_prefix))
+        return [elapsed] * b
+
+    def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
+        return 0.0   # unknown ahead of time; max_steps_per_event=1 anyway
+
+    def decode(self, rep: int, states: Sequence[RequestState], k: int,
+               step_time: float) -> float:
+        import jax
+        del step_time     # unknown ahead of time; the clock uses wall time
+        assert k == 1, "EngineExecutor decodes one real token per event"
+        ids = {s.req.req_id for s in states}
+        total = 0.0
+        for g in self._groups[rep]:
+            live = len(g.req_ids & ids)
+            if not live:
+                continue
+            t0 = time.perf_counter()
+            tok, caches = self.engines[rep].decode_batch(g.caches, g.tok,
+                                                         g.pos)
+            jax.block_until_ready(tok)
+            elapsed = time.perf_counter() - t0
+            g.tok, g.caches, g.pos = tok, caches, g.pos + 1
+            self.generated_tokens += live
+            self.compute_s += elapsed
+            total += elapsed
+        return total
+
+    def release(self, rep: int, state: RequestState) -> None:
+        groups = self._groups[rep]
+        for g in groups:
+            if state.req.req_id in g.req_ids:
+                g.req_ids.discard(state.req.req_id)
+                if not g.req_ids:
+                    groups.remove(g)   # free the cohort's cache tensors
+                return

@@ -1,0 +1,165 @@
+"""Request lifecycle model and per-request SLO accounting.
+
+Every request moves through ``QUEUED -> PREFILL -> DECODE -> DONE`` inside
+one replica's continuous-batching loop; the :class:`RequestState` record
+carries the timestamps that define the online serving metrics production
+systems are judged on:
+
+* **TTFT**  (time to first token)  = first_token_at - arrival
+* **TPOT**  (time per output token) = decode time / decode steps
+* **latency** = finished_at - arrival
+
+:class:`RuntimeResult` aggregates these across the trace and adds
+``goodput(slo)`` — the rate of SLO-attaining completions — next to the
+paper's makespan / throughput / percentile metrics, so the same run can be
+scored both ways (offline makespan as in §4.1, online SLO attainment as in
+Melange / ThunderServe style evaluations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from functools import cached_property
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.workloads import Request
+
+
+class Phase(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class RequestState:
+    """One request's journey through the runtime (all times in seconds)."""
+
+    req: Request
+    phase: Phase = Phase.QUEUED
+    replica: int = -1              # -1 until routed (stays -1 if unroutable)
+    routed_at: float = math.nan
+    admitted_at: float = math.nan   # prefill start
+    first_token_at: float = math.nan  # prefill end (first token emitted)
+    finished_at: float = math.nan
+    quota: int = 0                 # decode steps after the first token
+    remaining: int = 0             # decode steps left
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.req.arrival
+
+    @property
+    def tpot(self) -> float:
+        return (self.finished_at - self.first_token_at) / max(self.quota, 1)
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.req.arrival
+
+    @property
+    def done(self) -> bool:
+        return self.phase is Phase.DONE
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request service-level objective (seconds); ``inf`` = unbounded."""
+
+    ttft: float = math.inf
+    tpot: float = math.inf
+    latency: float = math.inf
+
+    def met(self, rec: RequestState) -> bool:
+        return (rec.done and rec.ttft <= self.ttft
+                and rec.tpot <= self.tpot and rec.latency <= self.latency)
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    """Aggregate metrics of one runtime pass (simulated or executed).
+
+    Backwards-compatible with the old ``SimResult`` API: ``makespan``,
+    ``throughput``, ``latencies``, ``per_replica_busy``, ``percentile(s)``.
+    """
+
+    records: List[RequestState]
+    per_replica_busy: np.ndarray
+    info: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @cached_property
+    def completed(self) -> List[RequestState]:
+        return [r for r in self.records if r.done]
+
+    @property
+    def num_completed(self) -> int:
+        return len(self.completed)
+
+    @property
+    def dropped(self) -> int:
+        """Requests no replica could serve (no matching model replica)."""
+        return sum(1 for r in self.records if r.replica < 0)
+
+    @cached_property
+    def latencies(self) -> np.ndarray:
+        return np.array(sorted(r.latency for r in self.completed))
+
+    @cached_property
+    def ttfts(self) -> np.ndarray:
+        return np.array(sorted(r.ttft for r in self.completed))
+
+    @cached_property
+    def tpots(self) -> np.ndarray:
+        return np.array(sorted(r.tpot for r in self.completed))
+
+    @cached_property
+    def makespan(self) -> float:
+        return max((r.finished_at for r in self.completed), default=0.0)
+
+    @property
+    def throughput(self) -> float:
+        return self.num_completed / self.makespan if self.makespan > 0 else 0.0
+
+    @cached_property
+    def per_replica_requests(self) -> List[int]:
+        n = len(self.per_replica_busy)
+        counts = [0] * n
+        for r in self.records:
+            if 0 <= r.replica < n:
+                counts[r.replica] += 1
+        return counts
+
+    @staticmethod
+    def _pct(arr: np.ndarray, p: float) -> float:
+        return float(np.percentile(arr, p)) if len(arr) else math.nan
+
+    def percentile(self, p: float) -> float:
+        return self._pct(self.latencies, p)
+
+    def percentiles(self, ps: Sequence[int] = (10, 30, 50, 70, 90, 100)
+                    ) -> Dict[str, float]:
+        return {f"p{p}": self.percentile(p) for p in ps}
+
+    def ttft_percentile(self, p: float) -> float:
+        return self._pct(self.ttfts, p)
+
+    def tpot_percentile(self, p: float) -> float:
+        return self._pct(self.tpots, p)
+
+    def slo_attainment(self, slo: SLO) -> float:
+        """Fraction of all trace requests that finished within the SLO
+        (a dropped/unroutable request counts as a miss)."""
+        total = len(self.records)
+        if total == 0:
+            return 0.0
+        return sum(1 for r in self.records if slo.met(r)) / total
+
+    def goodput(self, slo: SLO) -> float:
+        """SLO-attaining completions per second (monotone in every bound)."""
+        if self.makespan <= 0:
+            return 0.0
+        return sum(1 for r in self.records if slo.met(r)) / self.makespan

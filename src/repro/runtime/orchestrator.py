@@ -1,0 +1,143 @@
+"""The unified event-driven serving runtime.
+
+:class:`ServingRuntime` executes a trace against a ``ServingPlan`` with
+**streaming dispatch** — each request is routed at its arrival time through
+the plan's :class:`~repro.runtime.router.AssignmentRouter`, never upfront —
+and per-replica continuous batching
+(:class:`~repro.runtime.replica.ReplicaRuntime`).  The pluggable
+:class:`~repro.runtime.executor.Executor` decides whether the run is a
+cost-model *prediction* (``CostModelExecutor``) or real token *execution*
+(``EngineExecutor``); both travel the identical admission/batching/routing
+code path and report the same TTFT/TPOT/goodput metrics.
+
+Online replanning: pass :class:`ReplanEvent` s (e.g. the output of
+``repro.core.scheduler.replan`` when a spot pool is reclaimed).  At each
+event time the runtime matches the new plan's replicas against the live
+pool by config key — survivors keep their clock, queue, and active batch;
+removed replicas drain their active batch but their *queued* requests
+migrate through the new plan's router to surviving/new replicas; arrivals
+after the event are routed by the new plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.plan import ServingPlan
+from repro.core.workloads import Trace
+
+from repro.runtime.executor import Executor
+from repro.runtime.lifecycle import RequestState, RuntimeResult
+from repro.runtime.replica import ReplicaRuntime
+from repro.runtime.router import AssignmentRouter
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """Switch to ``plan`` at runtime time ``time`` (seconds)."""
+
+    time: float
+    plan: ServingPlan
+
+
+class ServingRuntime:
+    """One continuous-batching core behind both prediction and execution."""
+
+    def __init__(self, plan: ServingPlan, executor: Executor):
+        self.plan = plan
+        self.executor = executor
+        self.replicas: List[ReplicaRuntime] = [
+            ReplicaRuntime(i, cfg, executor)
+            for i, cfg in enumerate(plan.replicas)]
+        self.router = AssignmentRouter(plan)
+        # router's plan-local replica j -> global ReplicaRuntime
+        self._route_map: List[ReplicaRuntime] = list(self.replicas)
+        self.info: Dict[str, float] = {}
+
+    # ------------------------------------------------------------- dispatch
+
+    def _dispatch(self, state: RequestState,
+                  at: Optional[float] = None) -> None:
+        j = self.router.route(state.req)
+        if j is None:
+            state.replica = -1     # unroutable: no replica serves this model
+            return
+        state.routed_at = state.req.arrival if at is None else at
+        self._route_map[j].enqueue(state)
+
+    # -------------------------------------------------------------- replan
+
+    def _apply_replan(self, event: ReplanEvent) -> None:
+        new_plan = event.plan
+        live = [r for r in self.replicas if not r.draining]
+        claimed: set = set()
+        kept = 0
+        new_map: List[ReplicaRuntime] = []
+        for cfg in new_plan.replicas:
+            match = next((r for r in live if r.config.key == cfg.key
+                          and r.index not in claimed), None)
+            if match is not None:
+                claimed.add(match.index)
+                # An idle survivor's clock may lag the replan point; clamp so
+                # migrated requests cannot be admitted before the event that
+                # moved them (busy survivors are already past event.time).
+                match.now = max(match.now, event.time)
+                new_map.append(match)
+                kept += 1
+            else:
+                idx = len(self.replicas)
+                self.executor.add_replica(cfg)
+                rep = ReplicaRuntime(idx, cfg, self.executor)
+                rep.now = event.time          # spun up at the replan point
+                self.replicas.append(rep)
+                new_map.append(rep)
+        migrated: List[RequestState] = []
+        for r in live:
+            if r.index not in claimed:
+                r.draining = True             # finish active, admit nothing
+                migrated.extend(r.strip_queue())
+        self.router = AssignmentRouter(new_plan)
+        self._route_map = new_map
+        for state in sorted(migrated, key=lambda s: s.req.arrival):
+            self._dispatch(state, at=event.time)   # rerouted now, not on arrival
+        self.info["replicas_kept"] = self.info.get("replicas_kept", 0) + kept
+        self.info["replicas_added"] = (self.info.get("replicas_added", 0)
+                                       + len(new_plan.replicas) - kept)
+        self.info["replicas_drained"] = (self.info.get("replicas_drained", 0)
+                                         + len(live) - kept)
+        self.info["requests_migrated"] = (self.info.get("requests_migrated", 0)
+                                          + len(migrated))
+
+    # ----------------------------------------------------------------- run
+
+    def run(self, trace: Trace, *,
+            replan: Union[ReplanEvent, Sequence[ReplanEvent], None] = None
+            ) -> RuntimeResult:
+        """Serve the trace; returns per-request records + aggregate metrics."""
+        events: List[ReplanEvent] = (
+            [replan] if isinstance(replan, ReplanEvent)
+            else sorted(replan, key=lambda e: e.time) if replan else [])
+        order = sorted(trace.requests, key=lambda q: q.arrival)
+        states = [RequestState(req=req) for req in order]
+        pos = 0
+        for event in events:
+            while pos < len(states) and order[pos].arrival <= event.time:
+                self._dispatch(states[pos])
+                pos += 1
+            self._advance_all(until=event.time)
+            self._apply_replan(event)
+        while pos < len(states):
+            self._dispatch(states[pos])
+            pos += 1
+        self._advance_all()
+        busy = np.array([r.busy for r in self.replicas])
+        return RuntimeResult(records=states, per_replica_busy=busy,
+                             info=dict(self.info))
+
+    def _advance_all(self, until: float = math.inf) -> None:
+        for rep in self.replicas:
+            while rep.step(until=until):
+                pass

@@ -1,0 +1,146 @@
+"""Continuous-batching replica scheduler — the shared serving core.
+
+One :class:`ReplicaRuntime` owns one replica's queue and active batch and
+advances a local clock through admission (prefill) and lockstep decode
+events.  The same loop drives both backends: with the
+:class:`~repro.runtime.executor.CostModelExecutor` it *is* the cluster
+simulator's inner loop; with the
+:class:`~repro.runtime.executor.EngineExecutor` every event performs real
+jit'd token generation and the clock advances by measured wall time.
+
+Semantics (inherited from the validated simulator, now shared):
+
+* admission groups every queued request that has arrived and fits under the
+  KV-memory batch cap (mixed workload classes take the min cap), paying the
+  group's prefill before decode resumes;
+* decode advances the whole active batch in lockstep steps; the scheduler
+  fast-forwards at most ``executor.max_steps_per_event`` steps and never
+  overshoots the next queued arrival (so admission happens mid-flight);
+* a ``draining`` replica (removed by a replan) finishes its active batch
+  but admits nothing new.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import List
+
+from repro.core.plan import Config
+
+from repro.runtime.executor import Executor
+from repro.runtime.lifecycle import Phase, RequestState
+
+
+class ReplicaRuntime:
+    """Event-driven continuous batching for one replica."""
+
+    def __init__(self, index: int, config: Config, executor: Executor):
+        self.index = index
+        self.config = config
+        self.executor = executor
+        self.queue: List[RequestState] = []    # sorted by arrival
+        self.active: List[RequestState] = []
+        self.now = 0.0
+        self.busy = 0.0
+        self.completed = 0
+        self.draining = False
+
+    def enqueue(self, state: RequestState) -> None:
+        state.replica = self.index
+        bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
+
+    def strip_queue(self) -> List[RequestState]:
+        """Remove and return all not-yet-admitted requests (for migration)."""
+        stripped, self.queue = self.queue, []
+        return stripped
+
+    def _finish(self, state: RequestState) -> None:
+        state.phase = Phase.DONE
+        state.finished_at = self.now
+        self.completed += 1
+        self.executor.release(self.index, state)
+
+    def _admit(self, until: float = math.inf) -> None:
+        """Admit arrived requests in batched groups, paying each group's
+        prefill; loops so arrivals landing during a prefill window are
+        admitted before decode resumes.  Admission never *starts* at or
+        after ``until`` (so a replan barrier sees a consistent queue)."""
+        if self.draining:
+            return
+        while self.queue and self.now < until:
+            group: List[RequestState] = []
+            cap = math.inf
+            for s in self.active:
+                cap = min(cap, self.executor.max_batch(self.index,
+                                                       s.req.workload))
+            while self.queue:
+                nxt = self.queue[0]
+                if nxt.req.arrival > self.now:
+                    if self.active or group:
+                        break
+                    self.now = nxt.req.arrival   # idle: jump to next arrival
+                c = min(cap, self.executor.max_batch(self.index,
+                                                     nxt.req.workload))
+                if len(self.active) + len(group) + 1 > max(1, int(c)):
+                    break
+                self.queue.pop(0)
+                nxt.phase = Phase.PREFILL
+                group.append(nxt)
+                cap = c
+            if not group:
+                return
+            start = self.now
+            offsets = self.executor.prefill(self.index, group)
+            for s, off in zip(group, offsets):
+                s.phase = Phase.DECODE
+                s.admitted_at = start
+                s.first_token_at = start + off
+                s.quota = self.executor.decode_quota(s.req)
+                s.remaining = s.quota
+            self.now = start + offsets[-1]
+            self.busy += offsets[-1]
+            for s in group:
+                if s.remaining <= 0:    # quota exhausted by the first token
+                    self._finish(s)
+                else:
+                    self.active.append(s)
+
+    def step(self, until: float = math.inf) -> bool:
+        """Advance one event (admission and/or lockstep decode).  Returns
+        False when no event can start strictly before ``until`` — atomic
+        events may still complete past it."""
+        if self.now >= until:
+            return False
+        if not self.active:
+            if not self.queue or self.draining:
+                return False
+            if self.queue[0].req.arrival >= until:
+                return False
+            self._admit(until)
+            if not self.active:
+                return True   # admitted requests completed at the first token
+        batch = list(self.active)
+        t_step = self.executor.step_time(self.index, batch)
+        k = min(s.remaining for s in batch)
+        k = min(k, self.executor.max_steps_per_event)
+        if self.queue and t_step > 0:
+            next_arrival = self.queue[0].req.arrival
+            if next_arrival > self.now:
+                k = max(1, min(k, int((next_arrival - self.now)
+                                      / max(t_step, 1e-12)) + 1))
+        if until < math.inf and t_step > 0:
+            k = max(1, min(k, int((until - self.now)
+                                  / max(t_step, 1e-12)) + 1))
+        duration = self.executor.decode(self.index, batch, k, t_step)
+        self.now += duration
+        self.busy += duration
+        still: List[RequestState] = []
+        for s in batch:
+            s.remaining -= k
+            if s.remaining <= 0:
+                self._finish(s)
+            else:
+                still.append(s)
+        self.active = still
+        self._admit(until)
+        return True

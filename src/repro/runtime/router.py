@@ -1,0 +1,57 @@
+"""Workload-assignment router: dispatches requests to replicas according to
+the plan's fractional assignment x_{c,w} (§4.3), with deterministic
+low-discrepancy (deficit-round-robin) rounding so realized fractions track
+the plan to within one request.
+
+When a request's (model, workload) demand column is missing from the plan
+or carries zero mass, the router falls back to round-robin **only among
+replicas serving the same model** — never to a replica loaded with a
+different model.  If no replica serves the request's model, ``route``
+returns ``None`` and the runtime records the request as dropped.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.plan import ServingPlan
+from repro.core.workloads import Request
+
+
+class AssignmentRouter:
+    """Routes each request to a replica index per the plan's x matrix."""
+
+    def __init__(self, plan: ServingPlan):
+        self.plan = plan
+        self._index = {(m, w): d for d, (m, w, _) in enumerate(plan.demands)}
+        # deficit-round-robin credit per (replica, demand)
+        self._credit = np.zeros_like(plan.assignment)
+        # round-robin cursors for the model-matched fallback path
+        self._fallback: Dict[int, int] = {}
+        self._by_model: Dict[int, List[int]] = {}
+        for i, cfg in enumerate(plan.replicas):
+            self._by_model.setdefault(cfg.model_index, []).append(i)
+
+    def route(self, req: Request) -> Optional[int]:
+        d = self._index.get((req.model, req.workload))
+        if d is not None:
+            probs = np.clip(self.plan.assignment[:, d], 0, None)
+            total = probs.sum()
+            if total > 0:
+                self._credit[:, d] += probs / total
+                i = int(np.argmax(self._credit[:, d]))
+                self._credit[i, d] -= 1.0
+                return i
+        # demand not covered by the plan: round-robin among same-model
+        # replicas only (a wrong-model replica cannot serve the request)
+        matching = self._by_model.get(req.model)
+        if not matching:
+            return None
+        k = self._fallback.get(req.model, 0)
+        self._fallback[req.model] = k + 1
+        return matching[k % len(matching)]
+
+    def realized_fractions(self) -> np.ndarray:
+        """How far realized routing drifted from the plan (for tests)."""
+        return self._credit

@@ -1,5 +1,5 @@
-"""Serving runtime: replica engines, workload-assignment routing, and the
-multi-replica orchestrator that executes a ServingPlan."""
+"""Serving layer: replica engines and the multi-replica orchestrator that
+executes a ServingPlan on the unified runtime (``repro.runtime``)."""
 from repro.serving.engine import GenerationResult, ReplicaEngine
 from repro.serving.router import AssignmentRouter
 from repro.serving.server import HeterogeneousServer, ServeStats

@@ -51,6 +51,25 @@ class ReplicaEngine:
                                   long_mode=self.long_mode))
         return self._prefill[t_max]
 
+    def prefill_batch(self, prompts: jax.Array, t_max: int,
+                      prefix_embeds: Optional[jax.Array] = None):
+        """Run prefill for one batch; returns (first_token, caches).
+
+        This is the incremental entry point the runtime's
+        ``EngineExecutor`` uses for continuous batching: one admission
+        cohort shares a prefill shape and its caches decode in lockstep via
+        :meth:`decode_batch`.
+        """
+        logits, caches = self._prefill_fn(t_max)(self.params, prompts,
+                                                 prefix_embeds)
+        return M.greedy_sample(logits[:, -1]), caches
+
+    def decode_batch(self, caches, tok: jax.Array, pos: int):
+        """One greedy decode step for a batch; returns (next_token, caches)."""
+        logits, caches = self._step(self.params, caches, tok,
+                                    jnp.asarray(pos, jnp.int32))
+        return M.greedy_sample(logits), caches
+
     def generate(self, prompts: jax.Array, max_new: int,
                  prefix_embeds: Optional[jax.Array] = None
                  ) -> GenerationResult:
@@ -59,17 +78,13 @@ class ReplicaEngine:
         n_prefix = prefix_embeds.shape[1] if prefix_embeds is not None else 0
         t_max = s + n_prefix + max_new
         t0 = time.perf_counter()
-        logits, caches = self._prefill_fn(t_max)(self.params, prompts,
-                                                 prefix_embeds)
-        tok = M.greedy_sample(logits[:, -1])
+        tok, caches = self.prefill_batch(prompts, t_max, prefix_embeds)
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
         out = [tok]
         pos = s + n_prefix
         for i in range(max_new - 1):
-            logits_d, caches = self._step(self.params, caches, tok,
-                                          jnp.asarray(pos + i, jnp.int32))
-            tok = M.greedy_sample(logits_d)
+            tok, caches = self.decode_batch(caches, tok, pos + i)
             out.append(tok)
         jax.block_until_ready(tok)
         t2 = time.perf_counter()

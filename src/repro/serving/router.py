@@ -1,38 +1,10 @@
-"""Workload-assignment router: dispatches requests to replicas according to
-the plan's fractional assignment x_{c,w} (§4.3), with deterministic
-low-discrepancy rounding so realized fractions track the plan."""
-from __future__ import annotations
+"""Workload-assignment router (compatibility re-export).
 
-from typing import Dict, List, Sequence, Tuple
+The implementation moved to ``repro.runtime.router`` so the simulator and
+the real-token server share one dispatch path; import it from there in new
+code.  Fallback routing for uncovered demands is now model-aware: requests
+only ever land on replicas serving their model.
+"""
+from repro.runtime.router import AssignmentRouter
 
-import numpy as np
-
-from repro.core.plan import ServingPlan
-from repro.core.workloads import Request
-
-
-class AssignmentRouter:
-    """Routes each request to a replica index per the plan's x matrix."""
-
-    def __init__(self, plan: ServingPlan):
-        self.plan = plan
-        self._index = {(m, w): d for d, (m, w, _) in enumerate(plan.demands)}
-        # deficit-round-robin credit per (demand, replica)
-        self._credit = np.zeros_like(plan.assignment)
-
-    def route(self, req: Request) -> int:
-        d = self._index.get((req.model, req.workload))
-        if d is None:
-            return req.req_id % max(len(self.plan.replicas), 1)
-        probs = np.clip(self.plan.assignment[:, d], 0, None)
-        total = probs.sum()
-        if total <= 0:
-            return req.req_id % len(self.plan.replicas)
-        self._credit[:, d] += probs / total
-        i = int(np.argmax(self._credit[:, d]))
-        self._credit[i, d] -= 1.0
-        return i
-
-    def realized_fractions(self) -> np.ndarray:
-        """How far realized routing drifted from the plan (for tests)."""
-        return self._credit
+__all__ = ["AssignmentRouter"]

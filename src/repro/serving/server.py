@@ -1,29 +1,26 @@
-"""Multi-replica serving orchestrator.
+"""Multi-replica serving orchestrator (thin wrapper over the runtime).
 
-Executes a ``ServingPlan`` end-to-end with *real* JAX model replicas: the
-router dispatches requests per the plan's workload assignment, each replica
-batches its queue by prompt length and generates real tokens.  On this
-container all replicas share one CPU device (they'd each own their rented
-accelerators in deployment); the heterogeneous *speeds* are the cost model's
-domain — this layer proves the plan is executable and the routing math is
-consistent.
+Executes a ``ServingPlan`` end-to-end with *real* JAX model replicas
+through the unified serving runtime: the same continuous-batching
+scheduler, streaming dispatch, and router that power the cost-model
+simulator drive an :class:`~repro.runtime.executor.EngineExecutor`, so the
+executed batches are exactly the batches the plan was evaluated on.  On
+this container all replicas share one CPU device (they'd each own their
+rented accelerators in deployment); the heterogeneous *speeds* are the cost
+model's domain — this layer proves the plan is executable and the routing
+math is consistent.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
 from typing import Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.plan import ServingPlan
-from repro.core.workloads import Request, Trace
+from repro.core.workloads import Trace
 from repro.models.config import ArchConfig
-from repro.serving.engine import ReplicaEngine
-from repro.serving.router import AssignmentRouter
+from repro.runtime import (EngineExecutor, ReplanEvent, RuntimeResult,
+                           ServingRuntime)
 
 
 @dataclasses.dataclass
@@ -32,6 +29,7 @@ class ServeStats:
     generated_tokens: int
     wall_s: float
     per_replica_requests: List[int]
+    result: Optional[RuntimeResult] = None   # full per-request SLO metrics
 
     @property
     def tokens_per_s(self) -> float:
@@ -45,48 +43,30 @@ class HeterogeneousServer:
                  *, params_per_model: Optional[Dict[int, object]] = None,
                  max_batch: int = 8):
         self.plan = plan
-        self.router = AssignmentRouter(plan)
-        self.max_batch = max_batch
-        self.engines: List[ReplicaEngine] = []
-        params_per_model = params_per_model or {}
-        for cfg in plan.replicas:
-            arch = arch_cfgs[cfg.model_index]
-            self.engines.append(ReplicaEngine(
-                arch, params=params_per_model.get(cfg.model_index),
-                seed=cfg.model_index))
+        self.executor = EngineExecutor(plan, arch_cfgs,
+                                       params_per_model=params_per_model,
+                                       max_batch=max_batch)
+
+    @property
+    def engines(self):
+        return self.executor.engines
 
     def serve(self, trace: Trace, *, input_len: int = 16, max_new: int = 8,
-              seed: int = 0) -> ServeStats:
+              seed: int = 0, replan: Optional[ReplanEvent] = None
+              ) -> ServeStats:
         """Serve every request in the trace with synthetic prompts of
-        ``input_len`` tokens (trace token lengths are cost-model scale;
-        runtime scale stays CPU-sized)."""
-        rng = np.random.default_rng(seed)
-        queues: Dict[int, List[Request]] = defaultdict(list)
-        for req in trace.requests:
-            queues[self.router.route(req)].append(req)
-
+        ``input_len`` tokens and at most ``max_new`` generated tokens per
+        request (trace token lengths are cost-model scale; runtime scale
+        stays CPU-sized)."""
+        self.executor.configure(input_len=input_len, max_new=max_new,
+                                seed=seed)
+        runtime = ServingRuntime(self.plan, self.executor)
         t0 = time.perf_counter()
-        completed = 0
-        generated = 0
-        per_replica = [0] * len(self.engines)
-        for i, engine in enumerate(self.engines):
-            reqs = queues.get(i, [])
-            per_replica[i] = len(reqs)
-            arch = engine.cfg
-            for start in range(0, len(reqs), self.max_batch):
-                chunk = reqs[start:start + self.max_batch]
-                prompts = jnp.asarray(rng.integers(
-                    0, arch.vocab_size, size=(len(chunk), input_len)),
-                    jnp.int32)
-                prefix = None
-                if arch.frontend != "none":
-                    prefix = jnp.asarray(rng.normal(
-                        0, 0.02, size=(len(chunk), arch.num_patches,
-                                       arch.d_model)), jnp.bfloat16)
-                result = engine.generate(prompts, max_new,
-                                         prefix_embeds=prefix)
-                completed += len(chunk)
-                generated += result.new_tokens
+        result = runtime.run(trace, replan=replan)
         wall = time.perf_counter() - t0
-        return ServeStats(completed=completed, generated_tokens=generated,
-                          wall_s=wall, per_replica_requests=per_replica)
+        return ServeStats(
+            completed=result.num_completed,
+            generated_tokens=self.executor.generated_tokens,
+            wall_s=wall,
+            per_replica_requests=result.per_replica_requests,
+            result=result)

@@ -1,6 +1,8 @@
 """Hypothesis property tests on the scheduler's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core.catalog import DeviceType

@@ -1,0 +1,178 @@
+"""Unified-runtime tests: backend equivalence (cost-model vs real engine),
+SLO accounting, model-aware fallback routing, and online replanning."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (GPU_CATALOG, AVAILABILITY_SNAPSHOTS, LLAMA3_70B,
+                        make_trace, simulate, solve)
+from repro.core.costmodel import ModelProfile
+from repro.core.plan import ServingPlan
+from repro.core.scheduler import replan
+from repro.core.workloads import Request, Trace
+from repro.runtime import (SLO, CostModelExecutor, Phase, ReplanEvent,
+                           ServingRuntime)
+
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    trace = make_trace("trace1", num_requests=40, arrival_rate=8.0, seed=0)
+    plan = solve([TINY], trace, GPU_CATALOG,
+                 {"A40": 4, "4090": 4, "H100": 2}, budget=8.0)
+    return plan, trace
+
+
+def _routing(result):
+    return {r.req.req_id: r.replica for r in result.records}
+
+
+def test_backends_agree_on_routing_and_completions(small_plan):
+    """Same trace + plan through the cost-model and real-engine backends:
+    identical routing decisions and completion counts (the refactor's core
+    guarantee — plan evaluation and plan execution share one code path)."""
+    from repro.configs import get_config
+    from repro.serving import HeterogeneousServer
+    plan, trace = small_plan
+    predicted = simulate(plan, trace, [TINY])
+    server = HeterogeneousServer(plan, [get_config("llama3-8b").reduced()],
+                                 max_batch=8)
+    executed = server.serve(trace, input_len=8, max_new=4)
+    assert _routing(predicted) == _routing(executed.result)
+    assert predicted.num_completed == executed.completed == trace.num_requests
+    assert executed.generated_tokens == trace.num_requests * 4
+    assert sum(executed.per_replica_requests) == trace.num_requests
+    # both backends report the full SLO metric set
+    for res in (predicted, executed.result):
+        assert len(res.ttfts) == trace.num_requests
+        assert np.isfinite(res.ttfts).all()
+        assert (res.tpots >= 0).all()
+
+
+def test_goodput_monotone_in_slo(small_plan):
+    plan, trace = small_plan
+    res = simulate(plan, trace, [TINY])
+    bounds = [0.1, 1.0, 5.0, 20.0, math.inf]
+    goodputs = [res.goodput(SLO(ttft=b)) for b in bounds]
+    attain = [res.slo_attainment(SLO(ttft=b)) for b in bounds]
+    assert goodputs == sorted(goodputs)
+    assert attain == sorted(attain)
+    assert attain[-1] == 1.0
+    assert res.goodput(SLO()) == pytest.approx(res.throughput)
+    # tightening a second dimension can only lose requests
+    assert res.goodput(SLO(ttft=5.0, tpot=1e-9)) <= res.goodput(SLO(ttft=5.0))
+
+
+def test_streaming_dispatch_respects_arrivals(small_plan):
+    plan, trace = small_plan
+    res = simulate(plan, trace, [TINY])
+    for rec in res.records:
+        assert rec.done
+        assert rec.first_token_at >= rec.req.arrival
+        assert rec.finished_at >= rec.first_token_at
+    last_arrival = max(r.arrival for r in trace.requests)
+    assert res.makespan >= last_arrival
+
+
+def test_model_blind_fallback_fixed(small_plan):
+    """A request whose demand column is missing must only land on replicas
+    serving its model — and is dropped when no such replica exists."""
+    plan, _ = small_plan
+    # model 1 never appears in the plan's demands or replicas
+    alien = Request(req_id=999, workload=0, input_len=10, output_len=4,
+                    arrival=0.0, model=1)
+    known = Request(req_id=1000, workload=0, input_len=10, output_len=4,
+                    arrival=0.0, model=0)
+    trace = Trace("fallback", (alien, known))
+    res = simulate(plan, trace, [TINY, TINY])
+    by_id = {r.req.req_id: r for r in res.records}
+    assert by_id[999].replica == -1 and not by_id[999].done
+    assert by_id[1000].done
+    assert res.dropped == 1
+    # zero-probability demand column: falls back among same-model replicas
+    zeroed = ServingPlan(replicas=plan.replicas,
+                         assignment=np.zeros_like(plan.assignment),
+                         demands=plan.demands, makespan=plan.makespan,
+                         cost=plan.cost)
+    res0 = simulate(zeroed, trace, [TINY, TINY])
+    rec = {r.req.req_id: r for r in res0.records}[1000]
+    assert rec.replica >= 0
+    assert plan.replicas[rec.replica].model_index == 0
+
+
+@pytest.fixture(scope="module")
+def replan_setup():
+    trace = make_trace("trace1", num_requests=300, arrival_rate=6.0, seed=1)
+    avail = dict(AVAILABILITY_SNAPSHOTS["avail1"])
+    plan = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 30.0, tol=1.0)
+    dropped = dict(avail, H100=0)
+    new_plan = replan(plan, [LLAMA3_70B], trace, GPU_CATALOG, dropped, 30.0,
+                      tol=1.0)
+    return trace, plan, new_plan
+
+
+def test_replan_mid_trace_preserves_survivors(replan_setup):
+    trace, plan, new_plan = replan_setup
+    t_drop = max(r.arrival for r in trace.requests) / 2
+    executor = CostModelExecutor(plan.replicas, [LLAMA3_70B])
+    runtime = ServingRuntime(plan, executor)
+    res = runtime.run(trace, replan=ReplanEvent(time=t_drop, plan=new_plan))
+    # nothing is lost: every request completes on some replica
+    assert res.num_completed == trace.num_requests
+    assert all(r.phase is Phase.DONE for r in res.records)
+    # the runtime's key-matched survivor count agrees with the scheduler's
+    # multiset replicas_kept accounting
+    assert res.info["replicas_kept"] == new_plan.solver_info["replicas_kept"]
+    assert (res.info["replicas_kept"] + res.info["replicas_added"]
+            == len(new_plan.replicas))
+    # drained H100 replicas admit nothing after the drop: every request that
+    # ran on a non-surviving replica was admitted before the replan point
+    survivors = {r.index for r in runtime._route_map}
+    for rec in res.records:
+        if rec.replica not in survivors:
+            assert rec.admitted_at <= t_drop + 1e-9
+    # post-replan arrivals only land on new-plan replicas
+    for rec in res.records:
+        if rec.req.arrival > t_drop:
+            assert rec.replica in survivors
+
+
+def test_replan_migrates_backlogged_queue():
+    """A small plan with a huge t=0 backlog replans to different configs:
+    the queued (unadmitted) requests must migrate and still complete."""
+    trace = make_trace("trace1", num_requests=200, seed=2)   # all at t=0
+    plan = solve([LLAMA3_70B], trace, GPU_CATALOG, {"A100": 4}, 10.0,
+                 tol=1.0)
+    new_plan = solve([LLAMA3_70B], trace, GPU_CATALOG, {"H100": 8}, 30.0,
+                     tol=1.0)
+    executor = CostModelExecutor(plan.replicas, [LLAMA3_70B])
+    res = ServingRuntime(plan, executor).run(
+        trace, replan=ReplanEvent(time=1.0, plan=new_plan))
+    assert res.num_completed == trace.num_requests
+    assert res.info["replicas_added"] >= 1
+    assert res.info["requests_migrated"] > 0
+
+
+def test_replan_clamps_idle_survivor_clocks(small_plan):
+    """A survivor that idled before the replan must not admit migrated
+    requests in the past: its clock is clamped to the event time."""
+    plan, _ = small_plan
+    executor = CostModelExecutor(plan.replicas, [TINY])
+    runtime = ServingRuntime(plan, executor)
+    runtime._advance_all(until=50.0)       # nothing dispatched: all idle at 0
+    runtime._apply_replan(ReplanEvent(time=50.0, plan=plan))
+    assert all(r.now >= 50.0 for r in runtime._route_map)
+    assert runtime.info["replicas_kept"] == len(plan.replicas)
+
+
+def test_simulate_wrapper_matches_direct_runtime(small_plan):
+    plan, trace = small_plan
+    a = simulate(plan, trace, [TINY])
+    b = ServingRuntime(plan, CostModelExecutor(plan.replicas, [TINY])
+                       ).run(trace)
+    assert a.makespan == pytest.approx(b.makespan)
+    np.testing.assert_allclose(a.latencies, b.latencies)
+    assert _routing(a) == _routing(b)
