@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from benchmarks.common import Row
 from repro.kernels.decode_attention.ops import decode_attention_op
 from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.paged_attention.ops import paged_decode_attention_op
 
 
 def _bench(fn, *args, iters=3, **kw):
@@ -50,6 +51,23 @@ def run() -> List[Row]:
         kv_bytes = 2 * b * t * kv * d * 2
         rows.append({
             "name": f"kernel/decode_attention/b{b}h{h}kv{kv}t{t}d{d}",
+            "us_per_call": us,
+            "kv_mbytes_streamed": round(kv_bytes / 2**20, 1),
+            "mode": "interpret",
+        })
+
+    for (b, h, kv, bs, mb, d) in [(4, 8, 2, 64, 16, 128)]:
+        nb = b * mb + 1
+        q = (jax.random.normal(key, (b, h, d)) * 0.5).astype(jnp.bfloat16)
+        kp = (jax.random.normal(key, (nb, bs, kv, d)) * 0.5).astype(jnp.bfloat16)
+        vp = (jax.random.normal(key, (nb, bs, kv, d)) * 0.5).astype(jnp.bfloat16)
+        tables = (1 + jax.random.permutation(key, b * mb)
+                  ).reshape(b, mb).astype(jnp.int32)
+        lengths = jnp.full((b,), mb * bs, jnp.int32)
+        us = _bench(paged_decode_attention_op, q, kp, vp, tables, lengths)
+        kv_bytes = 2 * b * mb * bs * kv * d * 2
+        rows.append({
+            "name": f"kernel/paged_decode/b{b}h{h}kv{kv}bs{bs}mb{mb}d{d}",
             "us_per_call": us,
             "kv_mbytes_streamed": round(kv_bytes / 2**20, 1),
             "mode": "interpret",

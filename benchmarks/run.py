@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import time
 
@@ -44,6 +45,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module suffixes to run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump all rows as one JSON document "
+                         "(e.g. BENCH_simple_example.json for CI artifacts)")
     args = ap.parse_args()
     selected = MODULES
     if args.only:
@@ -52,6 +56,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    by_module = {}
     for modname in selected:
         t0 = time.perf_counter()
         try:
@@ -61,9 +66,16 @@ def main() -> None:
                 print(line)
             print(f"# {modname}: {len(rows)} rows in "
                   f"{time.perf_counter()-t0:.1f}s", flush=True)
+            by_module[modname] = {"rows": rows,
+                                  "wall_s": time.perf_counter() - t0}
         except Exception as e:  # keep the harness going
             failures += 1
             print(f"# {modname}: FAILED {type(e).__name__}: {e}", flush=True)
+            by_module[modname] = {"error": f"{type(e).__name__}: {e}"}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(by_module, f, indent=2, default=str)
+        print(f"# wrote {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -59,6 +59,23 @@ def main():
           f"tpot_p90 {res.tpot_percentile(90):.3f}s "
           f"(same scheduler, measured step times)")
 
+    print("\n== KV-cache accounting (paged block admission) ==")
+    # Both backends admit by block accounting against the same modeled HBM
+    # budget; the engine additionally decodes through real block pools.
+    for i, mgr in enumerate(server.executor.kv_managers):
+        if mgr is None:
+            continue
+        paged = server.executor._paged[i]
+        backing = (f"paged pool: {paged.num_blocks} x "
+                   f"{paged.block_size}-token blocks" if paged is not None
+                   else "dense cohort caches")
+        unit = f"{mgr.block_size} tokens" if mgr.block_size else "state"
+        print(f"  [{i}] budget {mgr.num_blocks} blocks x {unit}, "
+              f"peak used {mgr.peak_used} "
+              f"({100 * mgr.peak_used / max(mgr.num_blocks, 1):.1f}%) — "
+              f"{backing}")
+    print(f"preemptions (recompute): {int(res.info.get('preemptions', 0))}")
+
 
 if __name__ == "__main__":
     main()

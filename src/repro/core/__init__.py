@@ -3,7 +3,8 @@ heterogeneous accelerators (MILP + binary-search-on-T + simulator)."""
 from repro.core.catalog import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG,
                                 TPU_CATALOG, DeviceType, get_catalog)
 from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, ModelProfile, Stage,
-                                  config_throughput, max_batch_size)
+                                  config_throughput, kv_free_bytes,
+                                  max_batch_size)
 from repro.core.plan import Config, ServingPlan
 from repro.core.milp import SchedulingProblem, solve_feasibility, solve_milp
 from repro.core.binsearch import knapsack_feasible, solve_binary_search
@@ -17,7 +18,7 @@ from repro.core.workloads import (TRACE_MIXES, WORKLOAD_TYPES, Request, Trace,
 __all__ = [
     "AVAILABILITY_SNAPSHOTS", "GPU_CATALOG", "TPU_CATALOG", "DeviceType",
     "get_catalog", "LLAMA3_8B", "LLAMA3_70B", "ModelProfile", "Stage",
-    "config_throughput", "max_batch_size", "Config", "ServingPlan",
+    "config_throughput", "kv_free_bytes", "max_batch_size", "Config", "ServingPlan",
     "SchedulingProblem", "solve_feasibility", "solve_milp",
     "knapsack_feasible", "solve_binary_search", "build_problem", "replan",
     "solve", "solve_homogeneous", "solve_fixed_composition",

@@ -161,13 +161,21 @@ def _stage_decode_step_time(stage: Stage, model: ModelProfile, batch: float,
     return max(t_mem, t_compute) + t_comm
 
 
+def kv_free_bytes(stages: Sequence[Stage], model: ModelProfile) -> float:
+    """HBM bytes left for KV cache on one replica: usable memory minus
+    weights and per-device runtime overhead.  This is the budget both the
+    planner's batch cap and the runtime's paged KV-cache manager
+    (``repro.runtime.kvcache``) divide into token blocks."""
+    total_mem = sum(st.memory for st in stages)
+    n_devices = sum(st.tp for st in stages)
+    return (MEMORY_UTIL * total_mem - model.weight_bytes
+            - RUNTIME_OVERHEAD_BYTES * n_devices)
+
+
 def max_batch_size(stages: Sequence[Stage], model: ModelProfile,
                    workload: WorkloadType) -> float:
     """KV-memory-capped concurrent batch size for this config."""
-    total_mem = sum(st.memory for st in stages)
-    n_devices = sum(st.tp for st in stages)
-    free = (MEMORY_UTIL * total_mem - model.weight_bytes
-            - RUNTIME_OVERHEAD_BYTES * n_devices)
+    free = kv_free_bytes(stages, model)
     if free <= 0:
         return 0.0
     ctx = model.kv_context(workload.input_len + workload.output_len)

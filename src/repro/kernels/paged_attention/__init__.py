@@ -1,0 +1,7 @@
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+from repro.kernels.paged_attention.ops import paged_decode_attention_op
+from repro.kernels.paged_attention.ref import (gather_kv,
+                                               paged_decode_attention_ref)
+
+__all__ = ["gather_kv", "paged_decode_attention",
+           "paged_decode_attention_op", "paged_decode_attention_ref"]

@@ -1,0 +1,135 @@
+"""Pallas TPU paged flash-decode: one query token per sequence against a
+block-table KV cache.
+
+Same memory-bound organization as the contiguous ``decode_attention``
+kernel — grid = (batch, kv_heads, kv_blocks) with the online-softmax state
+((G, D) acc, (G,) m/l) in VMEM scratch and all G = H/KV query heads of one
+kv head processed as an MXU-shaped (G, BLOCK) tile — but K/V live in a
+shared pool of fixed-size token blocks and each sequence reaches its
+history *through a block table*:
+
+* ``k_pool``/``v_pool`` are ``(num_blocks, block_size, KV, D)``: the
+  physical pool every sequence's blocks are scattered across.
+* ``block_tables`` is ``(B, blocks_per_seq)`` int32: logical block ``i`` of
+  sequence ``b`` lives in physical block ``block_tables[b, i]``.
+* The table (and per-sequence ``lengths``) ride scalar prefetch
+  (``PrefetchScalarGridSpec``) so the *index map* — not the kernel body —
+  resolves the indirection: the pipeline DMAs exactly the right pool block
+  into VMEM per grid step, which is what makes paged gather free on TPU.
+
+Blocks past a sequence's length are skipped (``pl.when``), so the cost of
+a step is proportional to the tokens actually held, not to the table
+width.  Out-of-range table entries may point anywhere (allocators pass 0);
+the in-block position mask keeps them out of the softmax.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(tables_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, block_size: int,
+                         scale: float, softcap: float):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[bi]
+    k_start = ki * block_size
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (BS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)             # (BS, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (G, BS)
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(kpos < length, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *, softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, D) one token per sequence; k/v_pool: (NB, BS, KV, D)
+    physical block pools; block_tables: (B, MB) int32; lengths: (B,) valid
+    tokens per sequence.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    mb = block_tables.shape[1]
+    assert h % kv == 0
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+
+    q_g = q.reshape(b, kv, g, d)
+
+    def q_map(bi, hi, ki, tables, lens):
+        del ki, tables, lens
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ki, tables, lens):
+        del lens
+        return (tables[bi, ki], 0, hi, 0)
+
+    kernel = functools.partial(_paged_decode_kernel, block_size=bs,
+                               scale=scale, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,     # block_tables, lengths
+        grid=(b, kv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), q_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q_g,
+      k_pool, v_pool)
+    return out.reshape(b, h, d)

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the paged flash-decode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention_op(q, k_pool, v_pool, block_tables, lengths, *,
+                              softcap: float = 0.0):
+    """q: (B,H,D); pools: (NB,BS,KV,D); block_tables: (B,MB); lengths: (B,)
+    -> (B,H,D)."""
+    return paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                                  softcap=softcap, interpret=not _on_tpu())

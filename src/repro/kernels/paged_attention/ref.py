@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the paged flash-decode kernel.
+
+Gathers each sequence's blocks into a contiguous cache and defers to the
+contiguous flash-decode reference — stating the paged kernel's contract
+directly: paged attention IS dense decode attention after the block-table
+gather.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def gather_kv(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(NB, BS, KV, D) pool + (B, MB) tables -> contiguous (B, MB*BS, KV, D)."""
+    b, mb = block_tables.shape
+    bs, kv, d = pool.shape[1:]
+    return pool[block_tables].reshape(b, mb * bs, kv, d)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array, *, softcap: float = 0.0
+                               ) -> jax.Array:
+    """q: (B,H,D); k/v_pool: (NB,BS,KV,D); block_tables: (B,MB) int32;
+    lengths: (B,) -> (B,H,D)."""
+    return decode_attention_ref(q, gather_kv(k_pool, block_tables),
+                                gather_kv(v_pool, block_tables),
+                                lengths, softcap=softcap)

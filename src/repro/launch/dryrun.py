@@ -230,6 +230,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.perf_counter() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax <= 0.4.x: one dict per module
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     try:

@@ -78,6 +78,17 @@ def init_cache(cfg: ArchConfig, batch: int, t_max: int,
     return T.init_cache(cfg, batch, t_max, long_mode)
 
 
+def paged_supported(cfg: ArchConfig) -> bool:
+    return T.paged_supported(cfg)
+
+
+def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
+                      block_tables: jax.Array, lengths: jax.Array,
+                      token: jax.Array):
+    return T.paged_decode_step(cfg, params, pools, block_tables, lengths,
+                               token)
+
+
 def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 

@@ -125,7 +125,11 @@ def moe_block_ep(cfg: ArchConfig, p_local: dict, x_local: jax.Array,
     """
     if capacity_factor is None:
         capacity_factor = CAPACITY_FACTOR
-    n_shards = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size is missing on older releases; psum(1) is the
+    # version-stable way to read the mapped axis size.
+    axis_size = getattr(jax.lax, "axis_size", None)
+    n_shards = (int(axis_size(axis_name)) if axis_size is not None
+                else int(jax.lax.psum(1, axis_name)))
     b, s, d = x_local.shape
     top_w, top_i = router_topk(cfg, p_local["router"], x_local)
     top_w, top_i, e, k = virtualize_routing(cfg, top_w, top_i)

@@ -115,11 +115,22 @@ def _moe_apply(cfg: ArchConfig, p: dict, h: jax.Array) -> jax.Array:
             "w_down": P(ep_axis, None, None),
         }
         fn = lambda pl, xl: MOE.moe_block_ep(cfg, pl, xl, ep_axis)
-        return jax.shard_map(fn, mesh=f.mesh,
+        # jax.shard_map (with check_vma/axis_names) only exists on newer
+        # releases; older pins ship jax.experimental.shard_map, whose
+        # replication check is spelled check_rep and rejects the new
+        # kwargs, so each API gets exactly its own argument set.
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is not None:
+            return shard_map(fn, mesh=f.mesh,
                              in_specs=(p_specs, P(ep_axis, None, None)),
                              out_specs=P(ep_axis, None, None),
                              check_vma=False,
                              axis_names=frozenset({ep_axis}))(p, h)
+        from jax.experimental.shard_map import shard_map
+        return shard_map(fn, mesh=f.mesh,
+                         in_specs=(p_specs, P(ep_axis, None, None)),
+                         out_specs=P(ep_axis, None, None),
+                         check_rep=False)(p, h)
     return MOE.moe_block(cfg, p, h)
 
 
@@ -574,3 +585,76 @@ def decode_step(cfg: ArchConfig, params: PyTree, caches: PyTree,
     x, new_caches = _maybe_scan(body, x, (params["layers"], caches))
     logits = _logits(cfg, params, x)[:, 0]
     return logits, new_caches
+
+
+# ---------------------------------------------------- paged decode step
+
+def paged_supported(cfg: ArchConfig) -> bool:
+    """Paged decode covers pure-attention stacks (every period layer ATTN)
+    without int8 KV; hybrid/recurrent mixers keep dense per-cohort caches."""
+    return (all(desc.mixer == ATTN for desc in cfg.period)
+            and not RF.FLAGS.kv_cache_int8)
+
+
+def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
+                      block_tables: jax.Array, lengths: jax.Array,
+                      token: jax.Array) -> Tuple[jax.Array, Any]:
+    """One lockstep decode step over *every slot* of a paged replica.
+
+    ``pools`` is a per-period-layer list of ``{"k","v"}`` block pools with
+    leaves ``(n_periods, num_blocks, block_size, KV, D)``;
+    ``block_tables`` is ``(S, blocks_per_seq)`` int32; ``lengths`` is
+    ``(S,)`` — the new token of slot ``s`` lands at cache position
+    ``lengths[s]`` (block ``tables[s, lengths[s] // bs]``).  Empty slots
+    pass ``lengths == 0`` with tables pointing at the reserved scratch
+    block; their lanes compute garbage that callers never read.  Returns
+    ``(logits (S, vocab), new_pools)``.
+
+    The layer loop is a plain Python loop (not the period scan): the paged
+    pools must update in place per period via ``.at[]`` indexed writes, and
+    engine archs are reduced-depth so the O(depth) HLO is cheap.
+    """
+    assert paged_supported(cfg), f"{cfg.name}: unsupported paged arch"
+    s = token.shape[0]
+    bs = pools[0]["k"].shape[2]
+    mb = block_tables.shape[1]
+    x = params["embed"][token[:, None]].astype(jnp.bfloat16)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = lengths[:, None]                               # (S, 1)
+    rows = jnp.arange(s)
+    blk = block_tables[rows, lengths // bs]                    # (S,)
+    off = lengths % bs
+    new_pools = [dict(p) for p in pools]
+    for pi in range(cfg.n_periods):
+        for i, desc in enumerate(cfg.period):
+            p = jax.tree.map(lambda leaf: leaf[pi], params["layers"][i])
+            h = L.apply_norm(cfg, p["pre_norm"], x)
+            q, k, v = L.project_qkv(cfg, p["mixer"], h, positions)
+            kp = new_pools[i]["k"].at[pi, blk, off].set(
+                k[:, 0].astype(new_pools[i]["k"].dtype))
+            vp = new_pools[i]["v"].at[pi, blk, off].set(
+                v[:, 0].astype(new_pools[i]["v"].dtype))
+            new_pools[i] = {"k": kp, "v": vp}
+            if RF.FLAGS.use_pallas_attention:
+                from repro.kernels.paged_attention.ops import (
+                    paged_decode_attention_op)
+                out = paged_decode_attention_op(
+                    q[:, 0], kp[pi], vp[pi], block_tables, lengths + 1,
+                    softcap=cfg.attn_softcap)[:, None]
+            else:
+                kc = kp[pi][block_tables].reshape(s, mb * bs, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+                vc = vp[pi][block_tables].reshape(s, mb * bs, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+                mask = (jnp.arange(mb * bs)[None, :]
+                        <= lengths[:, None])[:, None, :]       # (S, 1, T)
+                out = L.attention_scores(q, kc, vc, mask, cfg.attn_softcap)
+            x = x + L.attention_output(p["mixer"], out)
+            if desc.ffn != NONE:
+                h = L.apply_norm(cfg, p["ffn_norm"], x)
+                y = L.mlp_block(cfg, p["ffn"], h) if desc.ffn == MLP else \
+                    MOE.moe_block(cfg, p["ffn"], h)
+                x = x + y
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, new_pools

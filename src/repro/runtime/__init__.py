@@ -10,13 +10,18 @@ streaming dispatch, online replanning) behind two executor backends:
 """
 from repro.runtime.executor import (CostModelExecutor, EngineExecutor,
                                     Executor)
+from repro.runtime.kvcache import (BlockAllocator, KVCacheManager,
+                                   PagedEngineCache, make_kv_manager,
+                                   num_kv_blocks)
 from repro.runtime.lifecycle import (Phase, RequestState, RuntimeResult, SLO)
 from repro.runtime.orchestrator import ReplanEvent, ServingRuntime
 from repro.runtime.replica import ReplicaRuntime
 from repro.runtime.router import AssignmentRouter
 
 __all__ = [
-    "AssignmentRouter", "CostModelExecutor", "EngineExecutor", "Executor",
+    "AssignmentRouter", "BlockAllocator", "CostModelExecutor",
+    "EngineExecutor", "Executor", "KVCacheManager", "PagedEngineCache",
     "Phase", "ReplanEvent", "ReplicaRuntime", "RequestState",
-    "RuntimeResult", "SLO", "ServingRuntime",
+    "RuntimeResult", "SLO", "ServingRuntime", "make_kv_manager",
+    "num_kv_blocks",
 ]

@@ -1,8 +1,9 @@
 """Pluggable execution backends for the shared continuous-batching core.
 
 The replica scheduler (``repro.runtime.replica``) owns *when* requests are
-admitted, batched, and stepped; an :class:`Executor` owns *how long* (and,
-for real backends, *actually doing*) each prefill / decode step takes:
+admitted, batched, stepped, and preempted; an :class:`Executor` owns *how
+long* (and, for real backends, *actually doing*) each prefill / decode
+step takes:
 
 * :class:`CostModelExecutor` — durations from ``repro.core.costmodel``;
   this is the simulator backend (what ``core.simulator.simulate`` runs on).
@@ -11,8 +12,14 @@ for real backends, *actually doing*) each prefill / decode step takes:
   *measured* wall time of each jit'd prefill/decode call, at runtime scale
   (synthetic ``input_len``-token prompts, decode capped at ``max_new``).
 
-Both backends sit behind the same admission/batching/routing code path, so
-plan evaluation and plan execution cannot drift apart.
+Both backends expose the same per-replica
+:class:`~repro.runtime.kvcache.KVCacheManager`, sized from the identical
+``core.costmodel.kv_free_bytes`` HBM budget, so admission (and
+preemption) decisions are block accounting — the cost-model backend
+accounts the blocks symbolically, while the engine backend additionally
+backs them with real ``(num_blocks, block_size, KV, D)`` pool tensors
+(:class:`~repro.runtime.kvcache.PagedEngineCache`) that its paged decode
+gathers through per-sequence block tables.
 """
 from __future__ import annotations
 
@@ -25,8 +32,12 @@ import numpy as np
 from repro.core import costmodel
 from repro.core.costmodel import ModelProfile
 from repro.core.plan import Config, ServingPlan
-from repro.core.workloads import WORKLOAD_TYPES, Request
+from repro.core.workloads import Request
 
+from repro.runtime.kvcache.budget import DEFAULT_BLOCK_SIZE, make_kv_manager
+from repro.runtime.kvcache.manager import KVCacheManager
+from repro.runtime.kvcache.paged import (DEFAULT_ENGINE_BLOCK_SIZE,
+                                         PagedEngineCache)
 from repro.runtime.lifecycle import RequestState
 
 
@@ -50,7 +61,13 @@ class Executor(abc.ABC):
 
     @abc.abstractmethod
     def max_batch(self, rep: int, workload_index: int) -> int:
-        """Concurrent-batch cap of replica ``rep`` for one workload class."""
+        """Concurrency cap of replica ``rep`` for one workload class (a
+        count limit; *memory* limits live in :meth:`kv_manager`)."""
+
+    def kv_manager(self, rep: int) -> Optional[KVCacheManager]:
+        """Replica ``rep``'s KV block accounting, or None when the backend
+        has no per-token KV growth (admission falls back to the count cap)."""
+        return None
 
     @abc.abstractmethod
     def prefill(self, rep: int, states: Sequence[RequestState]
@@ -74,6 +91,11 @@ class Executor(abc.ABC):
     def release(self, rep: int, state: RequestState) -> None:
         """A request finished on replica ``rep`` (free backend resources)."""
 
+    def preempt(self, rep: int, state: RequestState) -> None:
+        """A request was evicted mid-decode (recompute): drop its backend
+        state; it re-enters through :meth:`prefill` when re-admitted."""
+        self.release(rep, state)
+
 
 class CostModelExecutor(Executor):
     """Analytical backend: step durations from the paper's cost model.
@@ -81,14 +103,20 @@ class CostModelExecutor(Executor):
     Replaces the guts of the old ``core/simulator.py`` replica loop —
     serialized per-request prefill on admission, memory-bound lockstep
     decode whose duration tracks batch size and mean context length.
+    Admission is block accounting against the replica's modeled HBM
+    budget; ``max_batch`` only carries the global concurrency cap the
+    paper's serving regime assumes (``costmodel.MAX_BATCH``).
     """
 
     def __init__(self, replicas: Sequence[Config] | ServingPlan,
-                 models: Optional[Sequence[ModelProfile]] = None):
+                 models: Optional[Sequence[ModelProfile]] = None, *,
+                 block_size: int = DEFAULT_BLOCK_SIZE):
         if isinstance(replicas, ServingPlan):
             replicas = replicas.replicas
+        self.block_size = block_size
         self.configs: List[Config] = []
         self.models: List[ModelProfile] = []
+        self.kv_managers: List[Optional[KVCacheManager]] = []
         self._model_table = models
         for cfg in replicas:
             self.add_replica(cfg)
@@ -99,14 +127,18 @@ class CostModelExecutor(Executor):
             self.models.append(self._model_table[config.model_index])
         else:
             self.models.append(config.model)
+        self.kv_managers.append(make_kv_manager(
+            config, self.models[-1], self.block_size))
 
     def decode_quota(self, req: Request) -> int:
         return max(1, req.output_len)
 
     def max_batch(self, rep: int, workload_index: int) -> int:
-        cfg, model = self.configs[rep], self.models[rep]
-        return int(costmodel.max_batch_size(cfg.stages, model,
-                                            WORKLOAD_TYPES[workload_index]))
+        del rep, workload_index
+        return costmodel.MAX_BATCH
+
+    def kv_manager(self, rep: int) -> Optional[KVCacheManager]:
+        return self.kv_managers[rep]
 
     def prefill(self, rep: int, states: Sequence[RequestState]
                 ) -> Sequence[float]:
@@ -133,7 +165,10 @@ class CostModelExecutor(Executor):
 
 class _EngineGroup:
     """One admission cohort decoding together on a real engine (shared
-    prompt shape -> shared cache tensors; lockstep position counter)."""
+    prompt shape -> shared cache tensors; lockstep position counter).
+    Only used on archs the paged path does not cover (hybrid/recurrent
+    mixers); pure-attention replicas decode through one shared
+    ``PagedEngineCache`` instead."""
 
     def __init__(self, req_ids: List[int], caches, tok, pos: int):
         self.req_ids = set(req_ids)
@@ -147,9 +182,13 @@ class EngineExecutor(Executor):
 
     Trace token lengths are cost-model scale; real generation runs at
     runtime scale — synthetic prompts of ``input_len`` tokens and at most
-    ``max_new`` generated tokens per request — exactly like the old
-    ``HeterogeneousServer`` did, but now batch formation comes from the
-    shared continuous-batching scheduler instead of fixed-size chunking.
+    ``max_new`` generated tokens per request.  Admission accounting runs at
+    *trace* scale through the same :class:`KVCacheManager` budget the
+    cost-model backend uses (so both make identical admission decisions);
+    execution-side KV storage is *physically paged*: each pure-attention
+    replica owns real block pools and per-sequence block tables
+    (:class:`PagedEngineCache`) and decodes every live sequence — across
+    admission cohorts — in one shape-stable lockstep call.
     """
 
     max_steps_per_event = 1
@@ -157,16 +196,26 @@ class EngineExecutor(Executor):
     def __init__(self, plan: ServingPlan | Sequence[Config],
                  arch_cfgs: Sequence, *,
                  params_per_model: Optional[Dict[int, object]] = None,
+                 models: Optional[Sequence[ModelProfile]] = None,
                  max_batch: int = 8, input_len: int = 16, max_new: int = 8,
-                 seed: int = 0):
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 engine_block_size: int = DEFAULT_ENGINE_BLOCK_SIZE,
+                 paged: Optional[bool] = None, seed: int = 0):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
         self.arch_cfgs = list(arch_cfgs)
         self.params_per_model = params_per_model or {}
+        self._model_table = models
         self.max_batch_cap = max_batch
         self.input_len = input_len
         self.max_new = max_new
+        self.block_size = block_size
+        self.engine_block_size = engine_block_size
+        self.paged_enabled = paged
         self.engines: List = []
+        self.configs: List[Config] = []
+        self.kv_managers: List[Optional[KVCacheManager]] = []
         self._groups: List[List[_EngineGroup]] = []
+        self._paged: List[Optional[PagedEngineCache]] = []
         for cfg in replicas:
             self.add_replica(cfg)
         self._base_replicas = len(self.engines)
@@ -186,7 +235,18 @@ class EngineExecutor(Executor):
         # transient plan: drop them so replica indices line up with a fresh
         # ServingRuntime built over the base plan.
         del self.engines[self._base_replicas:]
+        del self.configs[self._base_replicas:]
+        del self.kv_managers[self._base_replicas:]
         self._groups = [[] for _ in self.engines]
+        self._paged = [None] * len(self.engines)   # rebuilt at first prefill
+        for i, cfg in enumerate(self.configs):
+            self.kv_managers[i] = make_kv_manager(
+                cfg, self._model_of(cfg), self.block_size)
+
+    def _model_of(self, config: Config) -> ModelProfile:
+        if self._model_table is not None:
+            return self._model_table[config.model_index]
+        return config.model
 
     def add_replica(self, config: Config) -> None:
         from repro.serving.engine import ReplicaEngine  # lazy: avoids cycle
@@ -194,13 +254,42 @@ class EngineExecutor(Executor):
         self.engines.append(ReplicaEngine(
             arch, params=self.params_per_model.get(config.model_index),
             seed=config.model_index))
+        self.configs.append(config)
+        self.kv_managers.append(make_kv_manager(
+            config, self._model_of(config), self.block_size))
         self._groups.append([])
+        self._paged.append(None)
 
     def decode_quota(self, req: Request) -> int:
-        return max(0, min(max(1, req.output_len), self.max_new) - 1)
+        # min(output_len, max_new - 1) decode steps after the prefill token:
+        # equals the cost-model backend's quota whenever the runtime budget
+        # covers the trace (output_len < max_new), so both backends walk
+        # identical token-growth curves through the KV manager.
+        return max(0, min(max(1, req.output_len), self.max_new - 1))
 
     def max_batch(self, rep: int, workload_index: int) -> int:
         return self.max_batch_cap
+
+    def kv_manager(self, rep: int) -> Optional[KVCacheManager]:
+        return self.kv_managers[rep]
+
+    def _paged_cache(self, rep: int) -> Optional[PagedEngineCache]:
+        """Lazily build replica ``rep``'s physical block pools (sized for
+        the current runtime scale); None when the arch is not paged-capable
+        or paging was explicitly disabled."""
+        if self._paged[rep] is None:
+            engine = self.engines[rep]
+            use = (engine.paged_supported if self.paged_enabled is None
+                   else self.paged_enabled and engine.paged_supported)
+            if not use:
+                return None
+            arch = engine.cfg
+            n_prefix = arch.num_patches if arch.frontend != "none" else 0
+            self._paged[rep] = PagedEngineCache(
+                arch, num_slots=max(1, self.max_batch_cap),
+                t_max=self.input_len + n_prefix + self.max_new,
+                block_size=self.engine_block_size)
+        return self._paged[rep]
 
     def prefill(self, rep: int, states: Sequence[RequestState]
                 ) -> Sequence[float]:
@@ -217,7 +306,12 @@ class EngineExecutor(Executor):
             n_prefix = arch.num_patches
             prefix = jnp.asarray(self._rng.normal(
                 0, 0.02, size=(b, n_prefix, arch.d_model)), jnp.bfloat16)
-        t_max = self.input_len + n_prefix + self.max_new
+        t_prompt = self.input_len + n_prefix
+        paged = self._paged_cache(rep)
+        # Paged replicas only need the prompt's K/V from prefill (decode
+        # tokens land in the block pools); dense cohorts carry the full
+        # generation budget in their contiguous caches.
+        t_max = t_prompt if paged is not None else t_prompt + self.max_new
         t0 = time.perf_counter()
         tok, caches = engine.prefill_batch(prompts, t_max,
                                            prefix_embeds=prefix)
@@ -225,9 +319,12 @@ class EngineExecutor(Executor):
         elapsed = time.perf_counter() - t0
         self.generated_tokens += b
         self.compute_s += elapsed
-        self._groups[rep].append(_EngineGroup(
-            [s.req.req_id for s in states], caches, tok,
-            self.input_len + n_prefix))
+        if paged is not None:
+            paged.admit_cohort([s.req.req_id for s in states], caches,
+                               np.asarray(tok), t_prompt)
+        else:
+            self._groups[rep].append(_EngineGroup(
+                [s.req.req_id for s in states], caches, tok, t_prompt))
         return [elapsed] * b
 
     def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
@@ -238,6 +335,20 @@ class EngineExecutor(Executor):
         import jax
         del step_time     # unknown ahead of time; the clock uses wall time
         assert k == 1, "EngineExecutor decodes one real token per event"
+        paged = self._paged[rep]
+        if paged is not None:
+            assert {s.req.req_id for s in states} == set(paged._slot_of), \
+                "paged decode expects the replica's full active set"
+            pools, tables, lengths, toks = paged.step_args()
+            t0 = time.perf_counter()
+            tok, new_pools = self.engines[rep].paged_decode(
+                pools, tables, lengths, toks)
+            jax.block_until_ready(tok)
+            elapsed = time.perf_counter() - t0
+            paged.commit_step(tok, new_pools)
+            self.generated_tokens += len(states)
+            self.compute_s += elapsed
+            return elapsed
         ids = {s.req.req_id for s in states}
         total = 0.0
         for g in self._groups[rep]:
@@ -256,6 +367,10 @@ class EngineExecutor(Executor):
         return total
 
     def release(self, rep: int, state: RequestState) -> None:
+        paged = self._paged[rep]
+        if paged is not None:
+            paged.release(state.req.req_id)
+            return
         groups = self._groups[rep]
         for g in groups:
             if state.req.req_id in g.req_ids:

@@ -1,0 +1,25 @@
+"""Paged KV-cache subsystem: the memory model both executors admit by.
+
+* :mod:`allocator` — fixed-size block ids from a free list.
+* :mod:`manager` — symbolic per-replica block accounting (admission,
+  lockstep growth, preemption feasibility) at trace-scale tokens.
+* :mod:`budget` — per-replica block budgets from the hardware catalog and
+  cost model (``kv_free_bytes``: HBM minus weights minus overhead).
+* :mod:`paged` — real block-backed ``(num_blocks, block_size, KV, D)``
+  pools + block tables for the engine backend's paged decode.
+"""
+from repro.runtime.kvcache.allocator import BlockAllocator
+from repro.runtime.kvcache.budget import (DEFAULT_BLOCK_SIZE, block_bytes,
+                                          make_kv_manager, num_kv_blocks,
+                                          state_overhead_blocks)
+from repro.runtime.kvcache.manager import (KVCacheManager, batch_tokens,
+                                           blocks_for_tokens, logical_tokens)
+from repro.runtime.kvcache.paged import (DEFAULT_ENGINE_BLOCK_SIZE,
+                                         PagedEngineCache)
+
+__all__ = [
+    "BlockAllocator", "DEFAULT_BLOCK_SIZE", "DEFAULT_ENGINE_BLOCK_SIZE",
+    "KVCacheManager", "PagedEngineCache", "batch_tokens", "block_bytes",
+    "blocks_for_tokens", "logical_tokens", "make_kv_manager",
+    "num_kv_blocks", "state_overhead_blocks",
+]

@@ -1,0 +1,56 @@
+"""Fixed-size KV block allocator.
+
+The unit of KV-cache memory is a *block* of ``block_size`` token slots
+(vLLM's PagedAttention unit).  :class:`BlockAllocator` hands out block ids
+from a free list; the engine backend uses the ids to index real
+``(num_blocks, block_size, KV, D)`` pool tensors, while the admission-side
+:class:`~repro.runtime.kvcache.manager.KVCacheManager` only needs the
+counts.  Block id 0 is reserved by callers that need a scratch target for
+masked writes (see ``paged.py``); the allocator itself is id-agnostic.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` block ids.
+
+    Ids run ``first_id .. first_id + num_blocks - 1``; allocation is LIFO
+    (most-recently-freed first) so a steady-state workload keeps touching
+    the same hot blocks.
+    """
+
+    def __init__(self, num_blocks: int, *, first_id: int = 0):
+        if num_blocks < 0:
+            raise ValueError(f"num_blocks must be >= 0, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.first_id = first_id
+        self._free: List[int] = list(range(first_id + num_blocks - 1,
+                                           first_id - 1, -1))
+        self._allocated: set = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` block ids; raises ``MemoryError`` if unavailable
+        (callers must check ``free_blocks`` / go through the manager)."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"requested {n} blocks, {len(self._free)} free")
+        ids = [self._free.pop() for _ in range(n)]
+        self._allocated.update(ids)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            if i not in self._allocated:
+                raise ValueError(f"double free / unknown block id {i}")
+            self._allocated.discard(i)
+            self._free.append(i)

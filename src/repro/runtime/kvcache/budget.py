@@ -1,0 +1,75 @@
+"""Per-replica KV block budgets derived from the hardware catalog.
+
+The paper's thesis is that GPU types differ most in *memory*, so the
+resource the scheduler optimizes — KV-cache capacity — must be modeled the
+same way at prediction and execution time.  This module turns a replica
+:class:`~repro.core.plan.Config` (devices x TP x PP from ``core.catalog``)
+plus a :class:`~repro.core.costmodel.ModelProfile` into a concrete block
+budget using the identical ``kv_free_bytes`` formula the planner's batch
+cap uses: usable HBM minus weights minus runtime overhead.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.core.costmodel import ModelProfile, kv_free_bytes
+from repro.core.plan import Config
+
+from repro.runtime.kvcache.manager import KVCacheManager
+
+# Logical (trace-scale) tokens per KV block.  16 matches vLLM's default and
+# keeps per-request rounding waste under one percent at paper-scale context
+# lengths (~500..3000 tokens).
+DEFAULT_BLOCK_SIZE = 16
+
+
+def block_bytes(model: ModelProfile, block_size: int) -> float:
+    """HBM bytes one block of ``block_size`` token slots occupies (all
+    attention layers of the model)."""
+    return block_size * model.kv_bytes_per_token
+
+
+def num_kv_blocks(config: Config, model: ModelProfile,
+                  block_size: int = DEFAULT_BLOCK_SIZE) -> int:
+    """How many KV blocks this replica's free HBM holds (0 if the weights
+    alone do not fit)."""
+    bb = block_bytes(model, block_size)
+    if bb <= 0:
+        return 0
+    free = kv_free_bytes(config.stages, model)
+    return max(0, int(free // bb))
+
+
+def state_overhead_blocks(model: ModelProfile, block_size: int) -> int:
+    """Constant per-sequence recurrent-state cost (SSM/xLSTM), expressed in
+    blocks so the manager can charge it at admission."""
+    if model.state_bytes_per_seq <= 0:
+        return 0
+    bb = block_bytes(model, block_size)
+    if bb <= 0:
+        return 0
+    return math.ceil(model.state_bytes_per_seq / bb)
+
+
+def make_kv_manager(config: Config, model: ModelProfile,
+                    block_size: int = DEFAULT_BLOCK_SIZE
+                    ) -> Optional[KVCacheManager]:
+    """Build the admission-side manager for one replica.
+
+    Models with no per-token KV growth but constant recurrent state
+    (pure SSM/xLSTM stacks) get *state-only* accounting: one block per
+    sequence, the pool sized by how many sequences' state the free HBM
+    holds.  Only models with no KV *and* no state return None (nothing to
+    account — the concurrency cap alone governs them)."""
+    if block_bytes(model, block_size) > 0:
+        return KVCacheManager(
+            num_kv_blocks(config, model, block_size), block_size,
+            window=model.window,
+            state_blocks=state_overhead_blocks(model, block_size))
+    if model.state_bytes_per_seq > 0:
+        free = kv_free_bytes(config.stages, model)
+        return KVCacheManager(
+            max(0, int(free // model.state_bytes_per_seq)), 0,
+            state_blocks=1)
+    return None

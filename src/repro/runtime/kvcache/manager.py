@@ -1,0 +1,165 @@
+"""Block-table KV-cache accounting for one replica.
+
+:class:`KVCacheManager` is the *admission-side* view of a replica's KV
+memory: it tracks how many fixed-size token blocks each in-flight request
+holds and answers the three questions the continuous-batching scheduler
+asks —
+
+* **admit**: can a queued request's prompt (+ first token) be allocated
+  right now?  (A small watermark is held back so a freshly admitted
+  request cannot immediately force a preemption.)
+* **grow**: how many lockstep decode steps can the whole active batch
+  advance before the pool is exhausted?
+* **free**: a request finished / was preempted — return its blocks.
+
+Token counts are *logical* (trace-scale) tokens; sliding-window models
+stop growing at ``window`` tokens (the ring buffer reuses its own blocks)
+and recurrent state costs a constant ``state_blocks`` per sequence.  Both
+executor backends size their manager from the same
+``repro.core.costmodel.kv_free_bytes`` budget, so prediction and execution
+make identical admission decisions on the same trace.
+
+One deliberate safety valve: a request admitted *solo* (empty replica) is
+always accepted even if it overflows the budget — the legacy scheduler
+guaranteed one-at-a-time progress on undersized replicas, and starving a
+replica would deadlock the trace.  Overflow is recorded in
+``overflow_admissions`` so results stay auditable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Sequence, Tuple
+
+
+def blocks_for_tokens(tokens: int, block_size: int, *,
+                      window: int = 0) -> int:
+    """Blocks needed to hold ``tokens`` logical tokens of KV history.
+    ``block_size == 0`` means the model appends no per-token KV (pure
+    recurrent stacks): history costs nothing, only ``state_blocks`` do."""
+    if block_size <= 0:
+        return 0
+    held = min(tokens, window) if window > 0 else tokens
+    return max(0, math.ceil(held / block_size))
+
+
+class KVCacheManager:
+    """Per-replica block accounting (symbolic: counts, not tensors)."""
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 window: int = 0, state_blocks: int = 0,
+                 watermark_frac: float = 0.01):
+        if block_size < 0:
+            raise ValueError(f"block_size must be >= 0, got {block_size}")
+        if block_size == 0 and state_blocks <= 0:
+            raise ValueError("state-only accounting needs state_blocks > 0")
+        self.num_blocks = max(0, int(num_blocks))
+        self.block_size = int(block_size)
+        self.window = int(window)
+        self.state_blocks = int(state_blocks)
+        # Held-back slack for admission only (vLLM's watermark): growth of
+        # the already-running batch may still use it.
+        self.watermark = max(1, math.ceil(watermark_frac * self.num_blocks))
+        self._held: Dict[int, int] = {}     # req_id -> blocks held
+        self.used_blocks = 0
+        self.peak_used = 0
+        self.overflow_admissions = 0
+        self.admitted = 0
+        self.freed = 0
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def free_blocks(self) -> int:
+        return self.num_blocks - self.used_blocks
+
+    def blocks_for(self, tokens: int) -> int:
+        return blocks_for_tokens(tokens, self.block_size,
+                                 window=self.window) + self.state_blocks
+
+    def holds(self, req_id: int) -> bool:
+        return req_id in self._held
+
+    # ---------------------------------------------------------- admission
+
+    def admit(self, req_id: int, tokens: int, *, solo: bool = False) -> bool:
+        """Reserve blocks for a request entering prefill with ``tokens``
+        logical tokens (prompt + first output token).  ``solo`` marks the
+        only-request-on-the-replica case, which is always admitted."""
+        assert req_id not in self._held, f"request {req_id} already held"
+        need = self.blocks_for(tokens)
+        if not solo and self.used_blocks + need + self.watermark > self.num_blocks:
+            return False
+        if solo and self.used_blocks + need > self.num_blocks:
+            self.overflow_admissions += 1
+        self._held[req_id] = need
+        self.used_blocks += need
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        self.admitted += 1
+        return True
+
+    # ------------------------------------------------------------- growth
+
+    def feasible_steps(self, batch: Sequence[Tuple[int, int]],
+                       k: int) -> int:
+        """Largest ``k' <= k`` such that every ``(req_id, tokens)`` in the
+        lockstep batch can grow by ``k'`` tokens within the pool.  Returns 0
+        when not even one step fits (caller preempts or overflows)."""
+        def fits(step: int) -> bool:
+            need = sum(self.blocks_for(tok + step) - self._held[rid]
+                       for rid, tok in batch)
+            return self.used_blocks + need <= self.num_blocks
+
+        if fits(k):
+            return k
+        lo, hi = 0, k - 1          # need(step) is monotone: binary search
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if fits(mid):
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    def grow(self, req_id: int, tokens: int, *,
+             allow_overflow: bool = False) -> bool:
+        """Ensure ``req_id`` holds enough blocks for ``tokens`` logical
+        tokens.  Returns False (state unchanged) when the pool is exhausted
+        and overflow is not allowed."""
+        need = self.blocks_for(tokens) - self._held[req_id]
+        if need <= 0:
+            return True
+        if self.used_blocks + need > self.num_blocks and not allow_overflow:
+            return False
+        self._held[req_id] += need
+        self.used_blocks += need
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return True
+
+    # ------------------------------------------------------------ release
+
+    def free(self, req_id: int) -> None:
+        held = self._held.pop(req_id, 0)
+        self.used_blocks -= held
+        if held:
+            self.freed += 1
+
+    def reset(self) -> None:
+        self._held.clear()
+        self.used_blocks = 0
+        self.peak_used = 0
+        self.overflow_admissions = 0
+        self.admitted = 0
+        self.freed = 0
+
+
+def logical_tokens(input_len: int, quota: int, remaining: int) -> int:
+    """Logical KV tokens a request holds mid-decode: the prompt, the first
+    token from prefill, and every decode step taken so far."""
+    return input_len + 1 + (quota - remaining)
+
+
+def batch_tokens(states: Iterable) -> Sequence[Tuple[int, int]]:
+    """(req_id, logical tokens) pairs for a batch of RequestStates."""
+    return [(s.req.req_id,
+             logical_tokens(s.req.input_len, s.quota, s.remaining))
+            for s in states]

@@ -1,0 +1,139 @@
+"""Physical block-backed KV cache for one real engine replica.
+
+Where :class:`~repro.runtime.kvcache.manager.KVCacheManager` does symbolic
+trace-scale accounting for admission, :class:`PagedEngineCache` owns the
+*actual tensors* behind a replica's decode: per-layer K/V pools shaped
+``(n_periods, num_blocks, block_size, KV, D)``, one shared
+:class:`~repro.runtime.kvcache.allocator.BlockAllocator`, and per-slot
+block tables.  Prefill still runs contiguous (one cohort shares a prompt
+shape), then the cohort's prompt K/V is scattered into freshly allocated
+blocks; from then on every sequence on the replica decodes through the
+block table in one shape-stable lockstep call — continuous batching across
+admission cohorts at the *tensor* level, not just the scheduler level.
+
+Physical block id 0 is a reserved scratch block: empty slots' tables point
+at it, so the masked writes of inactive lanes land somewhere harmless and
+the decode step never needs a gather-free special case.
+
+Slots are runtime-scale (``t_max`` = prompt + generated tokens on this
+container), so the pool is sized to hold every slot at full length —
+admission control (and therefore preemption) is the symbolic manager's
+job; this layer proves the plan executes through real paged storage.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.runtime.kvcache.allocator import BlockAllocator
+
+DEFAULT_ENGINE_BLOCK_SIZE = 8
+
+
+class PagedEngineCache:
+    """Block pools + tables + slot bookkeeping for one ReplicaEngine."""
+
+    def __init__(self, cfg, num_slots: int, t_max: int,
+                 block_size: int = DEFAULT_ENGINE_BLOCK_SIZE):
+        import jax.numpy as jnp
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_slots = max(1, num_slots)
+        self.t_max = t_max
+        self.blocks_per_seq = max(1, math.ceil(t_max / block_size))
+        # +1 for the reserved scratch block at id 0
+        self.num_blocks = 1 + self.num_slots * self.blocks_per_seq
+        np_, kv, dh = cfg.n_periods, cfg.n_kv_heads, cfg.head_dim
+        self.pools = [
+            {"k": jnp.zeros((np_, self.num_blocks, block_size, kv, dh),
+                            jnp.bfloat16),
+             "v": jnp.zeros((np_, self.num_blocks, block_size, kv, dh),
+                            jnp.bfloat16)}
+            for _ in cfg.period]
+        self.allocator = BlockAllocator(self.num_blocks - 1, first_id=1)
+        self.tables = np.zeros((self.num_slots, self.blocks_per_seq),
+                               np.int32)
+        self.lengths = np.zeros(self.num_slots, np.int32)
+        self.tokens = np.zeros(self.num_slots, np.int32)
+        self._free_slots: List[int] = list(range(self.num_slots - 1, -1, -1))
+        self._slot_of: Dict[int, int] = {}
+        self._blocks_of: Dict[int, List[int]] = {}
+
+    @property
+    def active_slots(self) -> int:
+        return len(self._slot_of)
+
+    def slot_of(self, req_id: int) -> int:
+        return self._slot_of[req_id]
+
+    # ---------------------------------------------------------- admission
+
+    def admit_cohort(self, req_ids: Sequence[int], prompt_caches,
+                     first_tokens, t_prompt: int) -> None:
+        """Bind one prefilled cohort to slots: allocate each sequence's
+        blocks, scatter the cohort's contiguous prompt K/V into them, and
+        record lengths/last-tokens.  ``prompt_caches`` is the engine's
+        per-layer list of ``{"k","v"}`` with leaves
+        ``(n_periods, b, t_cache, KV, D)`` where ``t_cache >= t_prompt``."""
+        import jax.numpy as jnp
+        b = len(req_ids)
+        if b > len(self._free_slots):
+            raise MemoryError(f"{b} sequences for {len(self._free_slots)} "
+                              f"free slots")
+        bs = self.block_size
+        nb = math.ceil(t_prompt / bs)
+        slots = [self._free_slots.pop() for _ in range(b)]
+        flat_ids: List[int] = []
+        for rid, slot in zip(req_ids, slots):
+            ids = self.allocator.alloc(self.blocks_per_seq)
+            self._slot_of[rid] = slot
+            self._blocks_of[rid] = ids
+            self.tables[slot, :] = ids
+            flat_ids.extend(ids[:nb])
+        idx = jnp.asarray(flat_ids, jnp.int32)
+        for i, cache in enumerate(prompt_caches):
+            for key in ("k", "v"):
+                leaf = cache[key][:, :, :t_prompt]          # (np, b, t_p, ...)
+                pad = nb * bs - t_prompt
+                if pad:
+                    leaf = jnp.pad(leaf, ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+                np_, _, _, kv, dh = leaf.shape
+                leaf = leaf.reshape(np_, b * nb, bs, kv, dh)
+                self.pools[i][key] = self.pools[i][key].at[:, idx].set(
+                    leaf.astype(self.pools[i][key].dtype))
+        toks = np.asarray(first_tokens, np.int32)
+        for j, (rid, slot) in enumerate(zip(req_ids, slots)):
+            self.lengths[slot] = t_prompt
+            self.tokens[slot] = toks[j]
+
+    # --------------------------------------------------------------- step
+
+    def step_args(self):
+        """(pools, tables, lengths, tokens) for one lockstep decode call."""
+        import jax.numpy as jnp
+        return (self.pools, jnp.asarray(self.tables),
+                jnp.asarray(self.lengths), jnp.asarray(self.tokens))
+
+    def commit_step(self, new_tokens, new_pools) -> None:
+        """Record one decode step's results: every *occupied* slot consumed
+        one cache position and produced one token."""
+        self.pools = new_pools
+        toks = np.asarray(new_tokens)
+        for slot in self._slot_of.values():
+            self.lengths[slot] += 1
+            self.tokens[slot] = toks[slot]
+
+    # ------------------------------------------------------------ release
+
+    def release(self, req_id: int) -> None:
+        slot = self._slot_of.pop(req_id, None)
+        if slot is None:
+            return
+        self.allocator.free(self._blocks_of.pop(req_id))
+        self.tables[slot, :] = 0          # scratch block: writes are inert
+        self.lengths[slot] = 0
+        self.tokens[slot] = 0
+        self._free_slots.append(slot)

@@ -48,6 +48,8 @@ class RequestState:
     finished_at: float = math.nan
     quota: int = 0                 # decode steps after the first token
     remaining: int = 0             # decode steps left
+    preemptions: int = 0           # times evicted from KV cache (recompute)
+    admission_index: int = -1      # replica-local admission sequence number
 
     @property
     def ttft(self) -> float:
@@ -103,6 +105,12 @@ class RuntimeResult:
     def dropped(self) -> int:
         """Requests no replica could serve (no matching model replica)."""
         return sum(1 for r in self.records if r.replica < 0)
+
+    @property
+    def num_preemptions(self) -> int:
+        """Total KV-cache evictions (each re-enters the queue and pays a
+        recompute prefill)."""
+        return sum(r.preemptions for r in self.records)
 
     @cached_property
     def latencies(self) -> np.ndarray:

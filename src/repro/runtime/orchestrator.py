@@ -134,8 +134,15 @@ class ServingRuntime:
             pos += 1
         self._advance_all()
         busy = np.array([r.busy for r in self.replicas])
+        info = dict(self.info)
+        info["preemptions"] = float(sum(r.preempted for r in self.replicas))
+        kv_peaks = [m.peak_used for m in
+                    (self.executor.kv_manager(r.index) for r in self.replicas)
+                    if m is not None]
+        if kv_peaks:
+            info["kv_peak_blocks"] = float(max(kv_peaks))
         return RuntimeResult(records=states, per_replica_busy=busy,
-                             info=dict(self.info))
+                             info=info)
 
     def _advance_all(self, until: float = math.inf) -> None:
         for rep in self.replicas:

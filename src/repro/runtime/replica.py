@@ -10,24 +10,35 @@ jit'd token generation and the clock advances by measured wall time.
 
 Semantics (inherited from the validated simulator, now shared):
 
-* admission groups every queued request that has arrived and fits under the
-  KV-memory batch cap (mixed workload classes take the min cap), paying the
-  group's prefill before decode resumes;
+* admission groups every queued request that has arrived and fits under
+  both the backend's concurrency cap and the replica's **KV block budget**
+  (:class:`~repro.runtime.kvcache.KVCacheManager`): a request is admitted
+  when its prompt (+ first token) blocks can be reserved, in FCFS order —
+  memory, not a fixed ``max_batch``, is what bounds the batch;
 * decode advances the whole active batch in lockstep steps; the scheduler
-  fast-forwards at most ``executor.max_steps_per_event`` steps and never
-  overshoots the next queued arrival (so admission happens mid-flight);
+  fast-forwards at most ``executor.max_steps_per_event`` steps, never
+  overshoots the next queued arrival (so admission happens mid-flight),
+  and never outgrows the block pool: when the next step does not fit, the
+  most-recently-admitted request is **preempted by recompute** — its
+  blocks are freed and it re-enters the queue to prefill again later
+  (recorded in ``RequestState.preemptions``);
 * a ``draining`` replica (removed by a replan) finishes its active batch
-  but admits nothing new.
+  but admits nothing new — and never preempts, since its queue can no
+  longer drain through admission;
+* a replica always makes progress: a single active request may overflow
+  the budget rather than starve (undersized replicas serve one request at
+  a time, exactly like the legacy fixed-cap scheduler).
 """
 from __future__ import annotations
 
 import bisect
 import math
-from typing import List
+from typing import List, Tuple
 
 from repro.core.plan import Config
 
 from repro.runtime.executor import Executor
+from repro.runtime.kvcache.manager import batch_tokens, logical_tokens
 from repro.runtime.lifecycle import Phase, RequestState
 
 
@@ -43,7 +54,13 @@ class ReplicaRuntime:
         self.now = 0.0
         self.busy = 0.0
         self.completed = 0
+        self.preempted = 0
         self.draining = False
+        self._admission_seq = 0
+        # one tuple of req_ids per prefill group, in admission order —
+        # backend-independent, so tests can assert the cost-model and
+        # engine backends make identical admission decisions
+        self.admission_log: List[Tuple[int, ...]] = []
 
     def enqueue(self, state: RequestState) -> None:
         state.replica = self.index
@@ -58,7 +75,24 @@ class ReplicaRuntime:
         state.phase = Phase.DONE
         state.finished_at = self.now
         self.completed += 1
+        mgr = self.executor.kv_manager(self.index)
+        if mgr is not None:
+            mgr.free(state.req.req_id)
         self.executor.release(self.index, state)
+
+    def _preempt(self, state: RequestState) -> None:
+        """Evict one decoding request to recompute: free its KV blocks and
+        send it back to the queue; it will prefill again when admitted."""
+        self.active.remove(state)
+        mgr = self.executor.kv_manager(self.index)
+        if mgr is not None:
+            mgr.free(state.req.req_id)
+        self.executor.preempt(self.index, state)
+        state.phase = Phase.QUEUED
+        state.preemptions += 1
+        state.remaining = 0
+        self.preempted += 1
+        bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
 
     def _admit(self, until: float = math.inf) -> None:
         """Admit arrived requests in batched groups, paying each group's
@@ -67,6 +101,7 @@ class ReplicaRuntime:
         after ``until`` (so a replan barrier sees a consistent queue)."""
         if self.draining:
             return
+        mgr = self.executor.kv_manager(self.index)
         while self.queue and self.now < until:
             group: List[RequestState] = []
             cap = math.inf
@@ -83,12 +118,19 @@ class ReplicaRuntime:
                                                      nxt.req.workload))
                 if len(self.active) + len(group) + 1 > max(1, int(c)):
                     break
+                solo = not self.active and not group
+                if mgr is not None and not mgr.admit(
+                        nxt.req.req_id, nxt.req.input_len + 1, solo=solo):
+                    break                        # FCFS: no queue jumping
                 self.queue.pop(0)
                 nxt.phase = Phase.PREFILL
+                nxt.admission_index = self._admission_seq
+                self._admission_seq += 1
                 group.append(nxt)
                 cap = c
             if not group:
                 return
+            self.admission_log.append(tuple(s.req.req_id for s in group))
             start = self.now
             offsets = self.executor.prefill(self.index, group)
             for s, off in zip(group, offsets):
@@ -119,18 +161,35 @@ class ReplicaRuntime:
             self._admit(until)
             if not self.active:
                 return True   # admitted requests completed at the first token
-        batch = list(self.active)
-        t_step = self.executor.step_time(self.index, batch)
-        k = min(s.remaining for s in batch)
-        k = min(k, self.executor.max_steps_per_event)
-        if self.queue and t_step > 0:
-            next_arrival = self.queue[0].req.arrival
-            if next_arrival > self.now:
-                k = max(1, min(k, int((next_arrival - self.now)
+        mgr = self.executor.kv_manager(self.index)
+        while True:
+            batch = list(self.active)
+            t_step = self.executor.step_time(self.index, batch)
+            k = min(s.remaining for s in batch)
+            k = min(k, self.executor.max_steps_per_event)
+            if self.queue and t_step > 0:
+                next_arrival = self.queue[0].req.arrival
+                if next_arrival > self.now:
+                    k = max(1, min(k, int((next_arrival - self.now)
+                                          / max(t_step, 1e-12)) + 1))
+            if until < math.inf and t_step > 0:
+                k = max(1, min(k, int((until - self.now)
                                       / max(t_step, 1e-12)) + 1))
-        if until < math.inf and t_step > 0:
-            k = max(1, min(k, int((until - self.now)
-                                  / max(t_step, 1e-12)) + 1))
+            if mgr is None:
+                break
+            k_fit = mgr.feasible_steps(batch_tokens(batch), k)
+            if k_fit >= 1:
+                k = k_fit
+                break
+            if len(batch) == 1 or self.draining:
+                break   # progress guarantee: overflow instead of starving
+            self._preempt(max(batch, key=lambda s: s.admission_index))
+        if mgr is not None:
+            for s in batch:
+                mgr.grow(s.req.req_id,
+                         logical_tokens(s.req.input_len, s.quota,
+                                        s.remaining) + k,
+                         allow_overflow=True)
         duration = self.executor.decode(self.index, batch, k, t_step)
         self.now += duration
         self.busy += duration

@@ -7,6 +7,7 @@ counter (continuous batching across buckets happens in the server layer).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -18,6 +19,21 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ArchConfig
+
+# Prefill compilations are cached per t_max; distinct prompt+generation
+# budgets used to pin one compiled function each, forever.  Rounding t_max
+# up to the next power of two collapses the distinct shapes to O(log T)
+# buckets, and the LRU bound caps total retained compilations.
+PREFILL_CACHE_MAX = 8
+MIN_T_BUCKET = 16
+
+
+def bucket_t_max(t_max: int) -> int:
+    """Round a requested cache length up to a power-of-two bucket."""
+    b = MIN_T_BUCKET
+    while b < t_max:
+        b *= 2
+    return b
 
 
 @dataclasses.dataclass
@@ -40,16 +56,26 @@ class ReplicaEngine:
         self.long_mode = long_mode
         self.params = params if params is not None else M.init_params(
             cfg, jax.random.PRNGKey(seed))
-        self._prefill = {}
+        self._prefill: "collections.OrderedDict[int, object]" = \
+            collections.OrderedDict()
         self._step = jax.jit(
             functools.partial(M.decode_step, cfg, long_mode=long_mode))
+        self._paged_step = None
 
     def _prefill_fn(self, t_max: int):
-        if t_max not in self._prefill:
-            self._prefill[t_max] = jax.jit(
-                functools.partial(M.prefill, self.cfg, t_max=t_max,
+        """Compiled prefill for the power-of-two bucket covering ``t_max``
+        (bounded LRU — see ``bucket_t_max``).  The returned caches are
+        sized to the bucket; callers treat ``t_max`` as a lower bound."""
+        bucket = bucket_t_max(t_max)
+        if bucket in self._prefill:
+            self._prefill.move_to_end(bucket)
+        else:
+            self._prefill[bucket] = jax.jit(
+                functools.partial(M.prefill, self.cfg, t_max=bucket,
                                   long_mode=self.long_mode))
-        return self._prefill[t_max]
+            while len(self._prefill) > PREFILL_CACHE_MAX:
+                self._prefill.popitem(last=False)
+        return self._prefill[bucket]
 
     def prefill_batch(self, prompts: jax.Array, t_max: int,
                       prefix_embeds: Optional[jax.Array] = None):
@@ -69,6 +95,22 @@ class ReplicaEngine:
         logits, caches = self._step(self.params, caches, tok,
                                     jnp.asarray(pos, jnp.int32))
         return M.greedy_sample(logits), caches
+
+    @property
+    def paged_supported(self) -> bool:
+        return M.paged_supported(self.cfg)
+
+    def paged_decode(self, pools, block_tables: jax.Array,
+                     lengths: jax.Array, tok: jax.Array):
+        """One greedy lockstep step over every slot of a paged replica;
+        returns (next_token (S,), new_pools).  Shape-stable: one compile
+        per replica regardless of which slots are live."""
+        if self._paged_step is None:
+            self._paged_step = jax.jit(
+                functools.partial(M.paged_decode_step, self.cfg))
+        logits, pools = self._paged_step(self.params, pools, block_tables,
+                                         lengths, tok)
+        return M.greedy_sample(logits), pools
 
     def generate(self, prompts: jax.Array, max_new: int,
                  prefix_embeds: Optional[jax.Array] = None

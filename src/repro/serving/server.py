@@ -41,11 +41,13 @@ class HeterogeneousServer:
 
     def __init__(self, plan: ServingPlan, arch_cfgs: Sequence[ArchConfig],
                  *, params_per_model: Optional[Dict[int, object]] = None,
-                 max_batch: int = 8):
+                 max_batch: int = 8, models=None,
+                 paged: Optional[bool] = None):
         self.plan = plan
         self.executor = EngineExecutor(plan, arch_cfgs,
                                        params_per_model=params_per_model,
-                                       max_batch=max_batch)
+                                       models=models, max_batch=max_batch,
+                                       paged=paged)
 
     @property
     def engines(self):

@@ -1,0 +1,270 @@
+"""Paged KV-cache subsystem tests: block allocator, admission accounting,
+preemption-by-recompute, budget property under random traces, and the
+backend-equivalence acceptance check (cost-model and engine executors make
+identical admission decisions on the same trace)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import Request, Trace
+from repro.runtime import CostModelExecutor, ServingRuntime
+from repro.runtime.kvcache import (BlockAllocator, KVCacheManager,
+                                   make_kv_manager, num_kv_blocks)
+
+BS = 16
+# kv_bytes_per_token = 2 * 2 layers * 2 kv_heads * 64 head_dim * 2 B = 1024
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+BLOCK_BYTES = BS * TINY.kv_bytes_per_token
+
+
+def _replica(num_blocks: int) -> Config:
+    """A one-device replica whose modeled HBM budget holds exactly
+    ``num_blocks`` KV blocks of BS tokens."""
+    free = (num_blocks + 0.5) * BLOCK_BYTES
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("kv-test", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x")
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(config: Config, n_requests: int) -> ServingPlan:
+    return ServingPlan(replicas=[config], assignment=np.ones((1, 1)),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=config.cost)
+
+
+def _trace(reqs) -> Trace:
+    return Trace("kv", tuple(reqs))
+
+
+# ----------------------------------------------------------- unit: allocator
+
+def test_block_allocator_ids_cycle():
+    a = BlockAllocator(4, first_id=1)
+    ids = a.alloc(3)
+    assert sorted(ids) == [1, 2, 3]
+    assert (a.used_blocks, a.free_blocks) == (3, 1)
+    a.free(ids[:2])
+    assert a.free_blocks == 3
+    more = a.alloc(3)
+    assert a.free_blocks == 0 and len(set(more) | {ids[2]}) == 4
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+    a.free([more[0]])
+    with pytest.raises(ValueError):
+        a.free([more[0]])   # double free
+
+
+# ------------------------------------------------------------- unit: manager
+
+def test_manager_admission_watermark_and_growth():
+    m = KVCacheManager(num_blocks=5, block_size=BS)
+    assert m.watermark == 1
+    assert m.admit(0, 31, solo=True)            # 2 blocks
+    assert m.admit(1, 31)                       # 2 + watermark 1 <= 5
+    assert not m.admit(2, 31)                   # would need 7 > 5
+    assert m.used_blocks == 4
+    # both can grow one token (still inside block 2), not past block 3 x2
+    assert m.feasible_steps([(0, 31), (1, 31)], 4) == 1
+    m.free(1)
+    assert m.feasible_steps([(0, 31)], 4) == 4
+    assert m.grow(0, 35)
+    assert m.used_blocks == 3
+    m.free(0)
+    assert m.used_blocks == 0 and m.peak_used == 4
+
+
+def test_manager_solo_overflow_keeps_progress():
+    m = KVCacheManager(num_blocks=1, block_size=BS)
+    assert not m.admit(7, 100)                  # 7 blocks never fit
+    assert m.admit(7, 100, solo=True)           # but a lone request runs
+    assert m.overflow_admissions == 1
+    assert m.grow(7, 200, allow_overflow=True)
+    m.free(7)
+    assert m.used_blocks == 0
+
+
+def test_manager_window_caps_growth():
+    m = KVCacheManager(num_blocks=10, block_size=BS, window=32)
+    assert m.blocks_for(1000) == 2              # ring buffer: 32 tokens max
+    assert m.admit(0, 1000)
+    assert m.feasible_steps([(0, 1000)], 10**6) == 10**6
+
+
+# ------------------------------------------------------------ budget sizing
+
+def test_budget_matches_costmodel_free_bytes():
+    cfg = _replica(num_blocks=5)
+    assert num_kv_blocks(cfg, TINY, BS) == 5
+    mgr = make_kv_manager(cfg, TINY, BS)
+    assert mgr.num_blocks == 5
+    free = costmodel.kv_free_bytes(cfg.stages, TINY)
+    assert mgr.num_blocks * BLOCK_BYTES <= free < (mgr.num_blocks + 1) * BLOCK_BYTES
+
+
+def test_state_only_accounting_for_recurrent_models():
+    """Pure-recurrent profiles (no per-token KV, constant state) still get
+    memory-based admission: one state block per sequence, pool sized by
+    free HBM / state bytes."""
+    ssm = ModelProfile(name="ssm", n_layers=2, d_model=256, n_kv_heads=0,
+                       head_dim=64, params_total=2e6, params_active=2e6,
+                       state_bytes_per_seq=float(BLOCK_BYTES))
+    cfg = _replica(5)   # free HBM = 5.5 state units
+    mgr = make_kv_manager(cfg, ssm, BS)
+    assert mgr is not None and mgr.num_blocks == 5
+    assert mgr.blocks_for(10**6) == 1        # history costs nothing
+    assert mgr.admit(0, 30, solo=True) and mgr.admit(1, 30)
+    assert mgr.used_blocks == 2
+    assert mgr.feasible_steps([(0, 30), (1, 30)], 10**6) == 10**6
+    # no per-token KV and no state -> nothing to account
+    no_mem = ModelProfile(name="none", n_layers=2, d_model=256, n_kv_heads=0,
+                          head_dim=64, params_total=2e6, params_active=2e6)
+    assert make_kv_manager(cfg, no_mem, BS) is None
+
+
+# ------------------------------------------- integration: preemption (cost)
+
+def _overflow_requests(n=3, input_len=30, output_len=4):
+    return [Request(req_id=i, workload=0, input_len=input_len,
+                    output_len=output_len, arrival=0.0) for i in range(n)]
+
+
+def test_overflow_trace_preempts_and_completes():
+    """Acceptance: a trace that outgrows a small replica's HBM budget
+    triggers preemption/recompute — never an over-budget batch — and every
+    request still completes."""
+    cfg = _replica(num_blocks=5)
+    trace = _trace(_overflow_requests())
+    executor = CostModelExecutor([cfg], [TINY])
+    runtime = ServingRuntime(_plan(cfg, trace.num_requests), executor)
+    res = runtime.run(trace)
+    assert res.num_completed == trace.num_requests
+    assert res.num_preemptions > 0
+    assert res.info["preemptions"] == res.num_preemptions
+    mgr = executor.kv_manager(0)
+    assert mgr.peak_used <= mgr.num_blocks      # the budget held throughout
+    assert mgr.overflow_admissions == 0
+    assert mgr.used_blocks == 0                 # everything freed
+    # a preempted request re-entered the queue and paid prefill again
+    assert len(runtime.replicas[0].admission_log) > 1
+    readmitted = [rid for g in runtime.replicas[0].admission_log for rid in g]
+    assert len(readmitted) > trace.num_requests
+
+
+def test_ample_budget_never_preempts():
+    cfg = _replica(num_blocks=50)
+    trace = _trace(_overflow_requests())
+    res = ServingRuntime(_plan(cfg, 3), CostModelExecutor([cfg], [TINY])
+                         ).run(trace)
+    assert res.num_completed == 3
+    assert res.num_preemptions == 0
+
+
+# --------------------------------- acceptance: backend admission equivalence
+
+def test_cost_and_engine_backends_make_identical_admission_decisions():
+    """The same synthetic overflow trace through both executors: identical
+    admission cohorts (by request id), identical preemption counts — block
+    accounting, not backend timing, decides who runs when memory is
+    scarce."""
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.runtime import EngineExecutor
+
+    cfg = _replica(num_blocks=5)
+    reqs = _overflow_requests(n=3, input_len=30, output_len=4)
+    trace = _trace(reqs)
+    plan = _plan(cfg, len(reqs))
+
+    cost_rt = ServingRuntime(plan, CostModelExecutor([cfg], [TINY]))
+    cost_res = cost_rt.run(trace)
+
+    # max_new=5 -> engine decode quota min(output_len, 4) == 4 == cost quota:
+    # both backends walk the same token-growth curve through the manager
+    engine = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                            models=[TINY], max_batch=8, input_len=8,
+                            max_new=5)
+    eng_rt = ServingRuntime(plan, engine)
+    eng_res = eng_rt.run(trace)
+
+    assert cost_res.num_completed == eng_res.num_completed == 3
+    assert (cost_rt.replicas[0].admission_log
+            == eng_rt.replicas[0].admission_log)
+    cost_pre = {r.req.req_id: r.preemptions for r in cost_res.records}
+    eng_pre = {r.req.req_id: r.preemptions for r in eng_res.records}
+    assert cost_pre == eng_pre
+    assert cost_res.num_preemptions > 0
+    # the engine's preempted requests really recomputed through real blocks
+    paged = engine._paged[0]
+    assert paged is not None
+    assert paged.allocator.used_blocks == 0     # all physical blocks freed
+
+
+# ----------------------------------------------- property: budget invariant
+
+def test_block_usage_never_exceeds_budget_property():
+    """Across random traces, the sum of blocks allocated on a replica never
+    exceeds its modeled HBM budget (and all blocks are freed at the end)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        num_blocks=st.integers(min_value=6, max_value=40),
+        reqs=st.lists(
+            st.tuples(st.integers(1, 40),       # input_len
+                      st.integers(1, 20),       # output_len
+                      st.floats(0.0, 5.0)),     # arrival
+            min_size=1, max_size=25),
+    )
+    def run(num_blocks, reqs):
+        # every single request fits the budget (<= ceil(61/16) + 0 = 4 < 6
+        # blocks), so admission never needs the solo-overflow escape hatch
+        cfg = _replica(num_blocks)
+        trace = _trace([Request(req_id=i, workload=0, input_len=il,
+                                output_len=ol, arrival=ar)
+                        for i, (il, ol, ar) in enumerate(reqs)])
+        executor = CostModelExecutor([cfg], [TINY])
+        res = ServingRuntime(_plan(cfg, len(reqs)), executor).run(trace)
+        mgr = executor.kv_manager(0)
+        assert res.num_completed == trace.num_requests
+        assert mgr.peak_used <= mgr.num_blocks
+        assert mgr.overflow_admissions == 0
+        assert mgr.used_blocks == 0
+        peak_bytes = mgr.peak_used * BLOCK_BYTES
+        assert peak_bytes <= costmodel.kv_free_bytes(cfg.stages, TINY)
+
+    run()
+
+
+def test_block_usage_budget_random_traces_seeded():
+    """Hypothesis-free version of the budget property (always runs)."""
+    rng = np.random.default_rng(0)
+    for _ in range(15):
+        num_blocks = int(rng.integers(6, 41))
+        n = int(rng.integers(1, 26))
+        cfg = _replica(num_blocks)
+        trace = _trace([Request(req_id=i, workload=0,
+                                input_len=int(rng.integers(1, 41)),
+                                output_len=int(rng.integers(1, 21)),
+                                arrival=float(rng.uniform(0, 5)))
+                        for i in range(n)])
+        executor = CostModelExecutor([cfg], [TINY])
+        res = ServingRuntime(_plan(cfg, n), executor).run(trace)
+        mgr = executor.kv_manager(0)
+        assert res.num_completed == n
+        assert mgr.peak_used <= mgr.num_blocks
+        assert mgr.overflow_admissions == 0
+        assert mgr.used_blocks == 0
+
+
+def test_manager_blocks_for_matches_ceil():
+    m = KVCacheManager(10, BS)
+    for tokens in (1, BS - 1, BS, BS + 1, 5 * BS):
+        assert m.blocks_for(tokens) == math.ceil(tokens / BS)

@@ -13,7 +13,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
 from repro.models import moe as MOE
 from repro.models import transformer as T
 from repro.models.config import ArchConfig, LayerDesc, ATTN, MOE as FFN_MOE
