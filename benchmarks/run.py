@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_tpu_catalog     hardware adaptation (TPU slice catalog)
   bench_kernels         Pallas kernels (interpret mode)
   bench_roofline        deliverable (g): dry-run roofline table
+  bench_runtime_overlap concurrent vs sequential engine execution
 """
 from __future__ import annotations
 
@@ -38,6 +39,7 @@ MODULES = [
     "bench_tpu_catalog",
     "bench_kernels",
     "bench_roofline",
+    "bench_runtime_overlap",
 ]
 
 

@@ -7,14 +7,20 @@
   3. EXECUTE the plan with real JAX model replicas through the *same*
      runtime scheduler — the EngineExecutor generates real tokens batch-for-
      batch with the plan evaluation (reduced-config Llama3 on CPU; full
-     configs are exercised by the multi-pod dry-run).
+     configs are exercised by the multi-pod dry-run).  Replicas execute
+     CONCURRENTLY: the global event heap dispatches each replica's
+     prefill/decode calls onto per-replica actor workers,
+  4. demonstrate ONLINE AUTOSCALING: a deliberately under-provisioned plan
+     served under a ScalePolicy that watches queue depth / KV watermark
+     and rents extra replicas mid-trace (cost-model backend).
 
     PYTHONPATH=src python examples/serve_heterogeneous.py
 """
 from repro.configs import get_config
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
                         make_trace, simulate, solve, solve_homogeneous)
-from repro.runtime import SLO
+from repro.core.scheduler import ScalePolicy
+from repro.runtime import SLO, CostModelExecutor, ServingRuntime
 from repro.serving import HeterogeneousServer
 
 
@@ -46,9 +52,9 @@ def main():
         except (RuntimeError, ValueError) as e:
             print(f"homo-{gpu:<6}: infeasible ({e})")
 
-    print("\n== executing the plan with real JAX replicas ==")
+    print("\n== executing the plan with real JAX replicas (concurrent) ==")
     cfg = get_config("llama3-8b").reduced()
-    server = HeterogeneousServer(plan, [cfg], max_batch=8)
+    server = HeterogeneousServer(plan, [cfg], max_batch=8, concurrent=True)
     stats = server.serve(trace, input_len=8, max_new=4)
     res = stats.result
     print(f"served {stats.completed} requests "
@@ -58,23 +64,49 @@ def main():
     print(f"executed ttft_p90 {res.ttft_percentile(90):.2f}s, "
           f"tpot_p90 {res.tpot_percentile(90):.3f}s "
           f"(same scheduler, measured step times)")
+    overlap = server.executor.compute_s / max(stats.wall_s, 1e-9)
+    print(f"overlap: {server.executor.compute_s:.1f}s of in-call compute in "
+          f"{stats.wall_s:.1f}s wall ({overlap:.2f}x — per-replica actor "
+          f"workers run prefill/decode in parallel)")
 
-    print("\n== KV-cache accounting (paged block admission) ==")
+    print("\n== per-replica breakdown (result.info['per_replica']) ==")
     # Both backends admit by block accounting against the same modeled HBM
     # budget; the engine additionally decodes through real block pools.
-    for i, mgr in enumerate(server.executor.kv_managers):
-        if mgr is None:
-            continue
+    for row in res.info["per_replica"]:
+        i = row["replica"]
         paged = server.executor._paged[i]
         backing = (f"paged pool: {paged.num_blocks} x "
                    f"{paged.block_size}-token blocks" if paged is not None
                    else "dense cohort caches")
-        unit = f"{mgr.block_size} tokens" if mgr.block_size else "state"
-        print(f"  [{i}] budget {mgr.num_blocks} blocks x {unit}, "
-              f"peak used {mgr.peak_used} "
-              f"({100 * mgr.peak_used / max(mgr.num_blocks, 1):.1f}%) — "
+        print(f"  [{i}] {row['config']}: busy {row['busy_s']:.1f}s, "
+              f"completed {row['completed']}, "
+              f"kv peak {row['kv_peak_blocks']}/{row['kv_blocks']} blocks — "
               f"{backing}")
     print(f"preemptions (recompute): {int(res.info.get('preemptions', 0))}")
+
+    print("\n== online autoscaling (utilization-driven) ==")
+    # Under-provision on purpose: keep only the first replica, then let the
+    # ScalePolicy rent the rest back as the queue builds (cost backend).
+    from repro.core.plan import ServingPlan
+    small = ServingPlan(replicas=plan.replicas[:1],
+                        assignment=plan.assignment[:1],
+                        demands=plan.demands, makespan=plan.makespan,
+                        cost=plan.replicas[0].cost)
+    static = simulate(small, trace, [LLAMA3_8B])
+    policy = ScalePolicy(candidates=list(plan.replicas), budget=budget,
+                         interval=max(static.makespan / 50, 1e-3),
+                         window=2, queue_high=2.0, cooldown=1)
+    runtime = ServingRuntime(small, CostModelExecutor(small.replicas,
+                                                      [LLAMA3_8B]))
+    auto = runtime.run(trace, autoscale=policy)
+    print(f"static 1-replica: goodput {static.goodput(slo):.2f} req/s, "
+          f"makespan {static.makespan:.1f}s")
+    print(f"autoscaled      : goodput {auto.goodput(slo):.2f} req/s, "
+          f"makespan {auto.makespan:.1f}s "
+          f"({int(auto.info.get('autoscale_adds', 0))} adds, "
+          f"{int(auto.info.get('autoscale_drains', 0))} drains)")
+    for d in runtime.scale_log:
+        print(f"  t={d.time:8.2f}s {d.action:5s} {d.config_key} ({d.reason})")
 
 
 if __name__ == "__main__":

@@ -220,3 +220,181 @@ def _only_tp(tp: int) -> Callable:
             return 0.0
         return config_throughput(cfg.stages, cfg.model, w)
     return fn
+
+
+# ------------------------------------------------------------- autoscaling
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSnapshot:
+    """One replica's load observation at an autoscale tick (produced by
+    ``ServingRuntime._snapshot``; consumed by :class:`ScalePolicy`)."""
+
+    index: int
+    config: Config
+    queue_len: int          # requests queued, not yet admitted
+    active: int             # requests decoding
+    kv_used_frac: float     # used / total KV blocks (0 when unmanaged)
+    draining: bool
+    step_time_s: float = 0.0   # backend's decode-step estimate (engine:
+                               # EMA of measured durations; 0 if unknown)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """One online scaling action: the plan to replan to, plus provenance."""
+
+    time: float
+    action: str             # "add" | "drain"
+    config_key: str
+    reason: str
+    plan: ServingPlan
+
+
+def scaled_plan(base: ServingPlan, replicas: Sequence[Config], *,
+                throughput_fn: Optional[Callable] = None) -> ServingPlan:
+    """A plan over an online-rescaled replica set: same demands as
+    ``base``, assignment re-derived throughput-proportionally (the MILP is
+    not re-solved online — the autoscaler reacts in milliseconds; the
+    solver refines at the next offline replan).  ``throughput_fn`` follows
+    the ``solve()`` contract: called as ``fn(config, WorkloadType)``."""
+    def h(cfg: Config, w: int) -> float:
+        if throughput_fn is not None:
+            return throughput_fn(cfg, WORKLOAD_TYPES[w])
+        return config_throughput(cfg.stages, cfg.model, WORKLOAD_TYPES[w])
+
+    R, D = len(replicas), len(base.demands)
+    x = np.zeros((R, D))
+    for d, (m, w, _) in enumerate(base.demands):
+        rates = np.array([h(cfg, w) if cfg.model_index == m else 0.0
+                          for cfg in replicas])
+        total = rates.sum()
+        if total > 0:
+            x[:, d] = rates / total
+    makespan = 0.0
+    for i, cfg in enumerate(replicas):
+        t = sum(x[i, d] * base.demands[d][2] / h(cfg, base.demands[d][1])
+                for d in range(D) if x[i, d] > 0)
+        makespan = max(makespan, t)
+    return ServingPlan(replicas=list(replicas), assignment=x,
+                       demands=base.demands, makespan=makespan,
+                       cost=sum(c.cost for c in replicas),
+                       solver_info=dict(base.solver_info or {},
+                                        autoscaled=1.0))
+
+
+class ScalePolicy:
+    """Utilization-driven online autoscaler.
+
+    Watches per-replica **queue depth** and **KV watermark** over a sliding
+    window of ``window`` ticks (one tick every ``interval`` seconds of
+    serving time) and emits at most one action per decision:
+
+    * **add** — when the windowed mean queue depth per live replica
+      reaches ``queue_high`` or the mean KV utilization reaches
+      ``kv_high``, rent the best-value affordable config from
+      ``candidates`` (total live cost stays within ``budget``);
+    * **drain** — when load falls below ``queue_low`` *and* ``kv_low``
+      and some live replica is idle, release the most expensive idle
+      replica (never below ``min_replicas``, never stranding a model
+      that still has demand).
+
+    After any action the window is cleared and the next ``cooldown`` ticks
+    are skipped (counting down while the window refills, so the reaction
+    delay before the next possible decision is ``max(cooldown, window)``
+    ticks).  The runtime
+    applies decisions as rebalancing replans
+    (:class:`~repro.runtime.orchestrator.ReplanEvent`), closing the loop
+    between the MILP planner's static plan and observed load.
+    """
+
+    def __init__(self, candidates: Sequence[Config], budget: float, *,
+                 interval: float = 0.5, window: int = 3,
+                 queue_high: float = 3.0, queue_low: float = 0.25,
+                 kv_high: float = 0.85, kv_low: float = 0.25,
+                 cooldown: int = 2, min_replicas: int = 1,
+                 throughput_fn: Optional[Callable] = None):
+        if interval <= 0:
+            raise ValueError(f"interval must be > 0, got {interval}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.candidates = list(candidates)
+        self.budget = float(budget)
+        self.interval = float(interval)
+        self.window = int(window)
+        self.queue_high = queue_high
+        self.queue_low = queue_low
+        self.kv_high = kv_high
+        self.kv_low = kv_low
+        self.cooldown = int(cooldown)
+        self.min_replicas = int(min_replicas)
+        self.throughput_fn = throughput_fn
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear observation history (called by the runtime at run start)."""
+        self._history: List[Tuple[float, float]] = []
+        self._cool = 0
+
+    def _arm_cooldown(self) -> None:
+        self._history.clear()
+        self._cool = self.cooldown
+
+    def _value(self, cfg: Config, plan: ServingPlan) -> float:
+        """Throughput-per-dollar of a candidate on the plan's demand mix.
+        ``throughput_fn`` follows the ``solve()`` contract
+        (``fn(config, WorkloadType)``)."""
+        def h(c: Config, w: int) -> float:
+            if self.throughput_fn is not None:
+                return self.throughput_fn(c, WORKLOAD_TYPES[w])
+            return config_throughput(c.stages, c.model, WORKLOAD_TYPES[w])
+        gain = sum(lam * h(cfg, w) for (m, w, lam) in plan.demands
+                   if m == cfg.model_index)
+        return gain / max(cfg.cost, 1e-9)
+
+    def update(self, now: float, snapshots: Sequence[ReplicaSnapshot],
+               plan: ServingPlan) -> Optional[ScaleDecision]:
+        """Observe one tick; returns a decision or None."""
+        live = [s for s in snapshots if not s.draining]
+        if not live:
+            return None
+        self._history.append((
+            float(np.mean([s.queue_len for s in live])),
+            float(np.mean([s.kv_used_frac for s in live]))))
+        del self._history[:-self.window]
+        if self._cool > 0:           # counts down even while the cleared
+            self._cool -= 1          # window refills: reaction delay is
+            return None              # max(cooldown, window) ticks
+        if len(self._history) < self.window:
+            return None
+        queue_depth = float(np.mean([q for q, _ in self._history]))
+        kv_util = float(np.mean([k for _, k in self._history]))
+        reason = f"queue={queue_depth:.2f},kv={kv_util:.2f}"
+        cfgs = [s.config for s in live]
+        cost_now = sum(c.cost for c in cfgs)
+        if queue_depth >= self.queue_high or kv_util >= self.kv_high:
+            afford = [c for c in self.candidates
+                      if cost_now + c.cost <= self.budget + 1e-9
+                      and self._value(c, plan) > 0]   # must serve demand
+            if not afford:
+                return None
+            best = max(afford, key=lambda c: self._value(c, plan))
+            self._arm_cooldown()
+            return ScaleDecision(
+                time=now, action="add", config_key=best.key, reason=reason,
+                plan=scaled_plan(plan, cfgs + [best],
+                                 throughput_fn=self.throughput_fn))
+        if (len(live) > self.min_replicas and queue_depth <= self.queue_low
+                and kv_util <= self.kv_low):
+            needed = {m for (m, _, lam) in plan.demands if lam > 0}
+            idle = [s for s in live if s.queue_len == 0 and s.active == 0]
+            for victim in sorted(idle, key=lambda s: -s.config.cost):
+                rest = list(cfgs)
+                rest.remove(victim.config)
+                if needed <= {c.model_index for c in rest}:
+                    self._arm_cooldown()
+                    return ScaleDecision(
+                        time=now, action="drain",
+                        config_key=victim.config.key, reason=reason,
+                        plan=scaled_plan(plan, rest,
+                                         throughput_fn=self.throughput_fn))
+        return None

@@ -6,8 +6,15 @@ streaming dispatch, online replanning) behind two executor backends:
 * ``CostModelExecutor`` — analytical step times from ``repro.core.costmodel``
   (drives ``repro.core.simulator.simulate``), and
 * ``EngineExecutor`` — real token generation via JAX ``ReplicaEngine``
-  replicas (drives ``repro.serving.HeterogeneousServer``).
+  replicas (drives ``repro.serving.HeterogeneousServer``), executed
+  concurrently across replicas on actor-style workers.
+
+Time is modeled as a single global event heap (the orchestrator always
+fires the earliest event across replicas); pass a
+``repro.core.scheduler.ScalePolicy`` to ``ServingRuntime.run`` for
+utilization-driven online autoscaling.
 """
+from repro.runtime.actor import ReplicaWorker
 from repro.runtime.executor import (CostModelExecutor, EngineExecutor,
                                     Executor)
 from repro.runtime.kvcache import (BlockAllocator, KVCacheManager,
@@ -15,13 +22,13 @@ from repro.runtime.kvcache import (BlockAllocator, KVCacheManager,
                                    num_kv_blocks)
 from repro.runtime.lifecycle import (Phase, RequestState, RuntimeResult, SLO)
 from repro.runtime.orchestrator import ReplanEvent, ServingRuntime
-from repro.runtime.replica import ReplicaRuntime
+from repro.runtime.replica import PendingEvent, ReplicaRuntime
 from repro.runtime.router import AssignmentRouter
 
 __all__ = [
     "AssignmentRouter", "BlockAllocator", "CostModelExecutor",
     "EngineExecutor", "Executor", "KVCacheManager", "PagedEngineCache",
-    "Phase", "ReplanEvent", "ReplicaRuntime", "RequestState",
-    "RuntimeResult", "SLO", "ServingRuntime", "make_kv_manager",
-    "num_kv_blocks",
+    "PendingEvent", "Phase", "ReplanEvent", "ReplicaRuntime",
+    "ReplicaWorker", "RequestState", "RuntimeResult", "SLO",
+    "ServingRuntime", "make_kv_manager", "num_kv_blocks",
 ]

@@ -1,0 +1,63 @@
+"""Actor-style per-replica workers for concurrent engine execution.
+
+Each :class:`ReplicaWorker` owns one daemon thread and a mailbox
+(the actor pattern, à la xoscar): the orchestrator submits one executor
+call at a time per replica and gets a :class:`concurrent.futures.Future`
+back, which the global event heap resolves into the replica's clock when
+it completes.  Per-replica serialization is the concurrency contract —
+a replica's prefill/decode calls never overlap *each other*, only calls
+of *different* replicas overlap in wall time.
+
+An optional JAX device pins every call the worker runs (one accelerator
+per replica in deployment; a no-op on a single-device container).
+"""
+from __future__ import annotations
+
+import contextlib
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Callable, Optional
+
+
+class ReplicaWorker:
+    """One mailbox thread executing a replica's backend calls in order."""
+
+    def __init__(self, name: str, device: Optional[object] = None):
+        self.name = name
+        self.device = device
+        self._mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._thread = threading.Thread(target=self._loop, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    def submit(self, fn: Callable[[], object]) -> Future:
+        """Enqueue ``fn`` on this worker's thread; returns its Future."""
+        fut: Future = Future()
+        self._mailbox.put((fn, fut))
+        return fut
+
+    def _device_scope(self):
+        if self.device is None:
+            return contextlib.nullcontext()
+        import jax
+        return jax.default_device(self.device)
+
+    def _loop(self) -> None:
+        while True:
+            item = self._mailbox.get()
+            if item is None:
+                return
+            fn, fut = item
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                with self._device_scope():
+                    fut.set_result(fn())
+            except BaseException as exc:  # propagate through the future
+                fut.set_exception(exc)
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Drain the mailbox and stop the thread (idempotent)."""
+        self._mailbox.put(None)
+        self._thread.join(timeout=timeout)

@@ -47,9 +47,17 @@ class Executor(abc.ABC):
     ``max_steps_per_event`` bounds how many lockstep decode steps the
     scheduler may fast-forward per event: unbounded for analytical backends
     (O(#requests) events), 1 for real engines (every token is a real call).
+
+    ``concurrent`` declares the backend's threading contract: when True the
+    runtime may run :meth:`prefill` / :meth:`decode` on per-replica worker
+    threads (calls for *one* replica are always serialized; calls for
+    different replicas may overlap in wall time).  Every other method is
+    only ever called from the orchestrator thread, and never while that
+    replica has an executor call in flight.
     """
 
     max_steps_per_event: int = 10**9
+    concurrent: bool = False
 
     @abc.abstractmethod
     def add_replica(self, config: Config) -> None:
@@ -79,6 +87,12 @@ class Executor(abc.ABC):
     @abc.abstractmethod
     def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
         """Predicted duration of one lockstep decode step (0 if unknown)."""
+
+    def step_time_estimate(self, rep: int) -> float:
+        """Batch-free decode-step estimate for observability and the
+        autoscaler's :class:`~repro.core.scheduler.ReplicaSnapshot` (0 when
+        the backend has no standing estimate)."""
+        return 0.0
 
     @abc.abstractmethod
     def decode(self, rep: int, states: Sequence[RequestState], k: int,
@@ -171,6 +185,7 @@ class _EngineGroup:
     ``PagedEngineCache`` instead."""
 
     def __init__(self, req_ids: List[int], caches, tok, pos: int):
+        self.order = list(req_ids)     # lane -> req_id (fixed at prefill)
         self.req_ids = set(req_ids)
         self.caches = caches
         self.tok = tok
@@ -200,7 +215,8 @@ class EngineExecutor(Executor):
                  max_batch: int = 8, input_len: int = 16, max_new: int = 8,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  engine_block_size: int = DEFAULT_ENGINE_BLOCK_SIZE,
-                 paged: Optional[bool] = None, seed: int = 0):
+                 paged: Optional[bool] = None, concurrent: bool = True,
+                 seed: int = 0):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
         self.arch_cfgs = list(arch_cfgs)
         self.params_per_model = params_per_model or {}
@@ -211,11 +227,15 @@ class EngineExecutor(Executor):
         self.block_size = block_size
         self.engine_block_size = engine_block_size
         self.paged_enabled = paged
+        self.concurrent = concurrent
         self.engines: List = []
         self.configs: List[Config] = []
         self.kv_managers: List[Optional[KVCacheManager]] = []
         self._groups: List[List[_EngineGroup]] = []
         self._paged: List[Optional[PagedEngineCache]] = []
+        self._gen_tokens: List[int] = []
+        self._compute_s: List[float] = []
+        self._step_ema: List[float] = []
         for cfg in replicas:
             self.add_replica(cfg)
         self._base_replicas = len(self.engines)
@@ -228,9 +248,11 @@ class EngineExecutor(Executor):
             self.input_len = input_len
         if max_new is not None:
             self.max_new = max_new
-        self._rng = np.random.default_rng(seed)
-        self.generated_tokens = 0
-        self.compute_s = 0.0       # measured seconds inside jit'd calls
+        self._seed = seed
+        # Per-request token trail (req_id -> every token emitted for it,
+        # including recompute re-prefills) — interleaving-independent, so
+        # concurrent and sequential runs must produce identical trails.
+        self.token_log: Dict[int, List[int]] = {}
         # Engines appended by a previous run's replan belong to that run's
         # transient plan: drop them so replica indices line up with a fresh
         # ServingRuntime built over the base plan.
@@ -239,26 +261,59 @@ class EngineExecutor(Executor):
         del self.kv_managers[self._base_replicas:]
         self._groups = [[] for _ in self.engines]
         self._paged = [None] * len(self.engines)   # rebuilt at first prefill
+        self._gen_tokens = [0] * len(self.engines)
+        self._compute_s = [0.0] * len(self.engines)
+        self._step_ema = [0.0] * len(self.engines)
         for i, cfg in enumerate(self.configs):
             self.kv_managers[i] = make_kv_manager(
                 cfg, self._model_of(cfg), self.block_size)
+
+    # Counters are kept per replica (each replica's executor calls are
+    # serialized on its own worker thread, so no locks are needed) and
+    # aggregated on demand.
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(self._gen_tokens)
+
+    @property
+    def compute_s(self) -> float:
+        """Total measured seconds inside jit'd calls, summed over replicas
+        (under concurrent execution wall time can be well below this)."""
+        return sum(self._compute_s)
 
     def _model_of(self, config: Config) -> ModelProfile:
         if self._model_table is not None:
             return self._model_table[config.model_index]
         return config.model
 
+    def device_for(self, rep: int):
+        """Device a concurrent replica worker should pin its calls to —
+        round-robin over ``jax.devices()`` when more than one is visible
+        (e.g. ``--xla_force_host_platform_device_count``), else None."""
+        if not self.concurrent:
+            return None
+        import jax
+        devices = jax.devices()
+        if len(devices) <= 1:
+            return None
+        return devices[rep % len(devices)]
+
     def add_replica(self, config: Config) -> None:
         from repro.serving.engine import ReplicaEngine  # lazy: avoids cycle
         arch = self.arch_cfgs[config.model_index]
+        index = len(self.engines)
         self.engines.append(ReplicaEngine(
             arch, params=self.params_per_model.get(config.model_index),
-            seed=config.model_index))
+            seed=config.model_index, device=self.device_for(index)))
         self.configs.append(config)
         self.kv_managers.append(make_kv_manager(
             config, self._model_of(config), self.block_size))
         self._groups.append([])
         self._paged.append(None)
+        self._gen_tokens.append(0)
+        self._compute_s.append(0.0)
+        self._step_ema.append(0.0)
 
     def decode_quota(self, req: Request) -> int:
         # min(output_len, max_new - 1) decode steps after the prefill token:
@@ -291,21 +346,37 @@ class EngineExecutor(Executor):
                 block_size=self.engine_block_size)
         return self._paged[rep]
 
+    def _prompt_arrays(self, arch, states: Sequence[RequestState]):
+        """Synthetic prompt (and optional multimodal prefix) for a cohort.
+        Drawn from a *per-request* RNG keyed on (seed, req_id) so every
+        request's tokens are independent of how executor calls interleave
+        across replicas — concurrent and sequential runs generate
+        identical prompts, hence identical outputs."""
+        import jax.numpy as jnp
+        rows, prefix_rows = [], []
+        n_prefix = arch.num_patches if arch.frontend != "none" else 0
+        for s in states:
+            rng = np.random.default_rng((self._seed, s.req.req_id))
+            rows.append(rng.integers(0, arch.vocab_size,
+                                     size=self.input_len))
+            if n_prefix:
+                prefix_rows.append(rng.normal(
+                    0, 0.02, size=(n_prefix, arch.d_model)))
+        prompts = jnp.asarray(np.stack(rows), jnp.int32)
+        prefix = (jnp.asarray(np.stack(prefix_rows), jnp.bfloat16)
+                  if n_prefix else None)
+        return prompts, prefix, n_prefix
+
+    def _log_token(self, req_id: int, token: int) -> None:
+        self.token_log.setdefault(req_id, []).append(int(token))
+
     def prefill(self, rep: int, states: Sequence[RequestState]
                 ) -> Sequence[float]:
         import jax
-        import jax.numpy as jnp
         engine = self.engines[rep]
         arch = engine.cfg
         b = len(states)
-        prompts = jnp.asarray(self._rng.integers(
-            0, arch.vocab_size, size=(b, self.input_len)), jnp.int32)
-        prefix = None
-        n_prefix = 0
-        if arch.frontend != "none":
-            n_prefix = arch.num_patches
-            prefix = jnp.asarray(self._rng.normal(
-                0, 0.02, size=(b, n_prefix, arch.d_model)), jnp.bfloat16)
+        prompts, prefix, n_prefix = self._prompt_arrays(arch, states)
         t_prompt = self.input_len + n_prefix
         paged = self._paged_cache(rep)
         # Paged replicas only need the prompt's K/V from prefill (decode
@@ -317,23 +388,43 @@ class EngineExecutor(Executor):
                                            prefix_embeds=prefix)
         jax.block_until_ready(tok)
         elapsed = time.perf_counter() - t0
-        self.generated_tokens += b
-        self.compute_s += elapsed
+        self._gen_tokens[rep] += b
+        self._compute_s[rep] += elapsed
+        first = np.asarray(tok)
+        for s, t in zip(states, first):
+            self._log_token(s.req.req_id, t)
         if paged is not None:
             paged.admit_cohort([s.req.req_id for s in states], caches,
-                               np.asarray(tok), t_prompt)
+                               first, t_prompt)
         else:
             self._groups[rep].append(_EngineGroup(
                 [s.req.req_id for s in states], caches, tok, t_prompt))
         return [elapsed] * b
 
     def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
-        return 0.0   # unknown ahead of time; max_steps_per_event=1 anyway
+        """EMA of this replica's measured lockstep decode durations (0.0
+        until the first decode) instead of the old constant 0.0.  With
+        ``max_steps_per_event=1`` the scheduler's chunk clamps are already
+        at one step, so today this feeds the autoscaler's snapshots and
+        ``info["per_replica"]["step_time_s"]``; a backend that raises
+        ``max_steps_per_event`` gets real arrival/barrier clamps for free."""
+        return self._step_ema[rep]
+
+    def step_time_estimate(self, rep: int) -> float:
+        return self._step_ema[rep]
+
+    EMA_ALPHA = 0.3
+
+    def _record_step(self, rep: int, elapsed: float) -> None:
+        ema = self._step_ema[rep]
+        self._step_ema[rep] = (elapsed if ema == 0.0
+                               else self.EMA_ALPHA * elapsed
+                               + (1.0 - self.EMA_ALPHA) * ema)
 
     def decode(self, rep: int, states: Sequence[RequestState], k: int,
                step_time: float) -> float:
         import jax
-        del step_time     # unknown ahead of time; the clock uses wall time
+        del step_time     # predicted (EMA); the clock uses measured wall time
         assert k == 1, "EngineExecutor decodes one real token per event"
         paged = self._paged[rep]
         if paged is not None:
@@ -346,8 +437,13 @@ class EngineExecutor(Executor):
             jax.block_until_ready(tok)
             elapsed = time.perf_counter() - t0
             paged.commit_step(tok, new_pools)
-            self.generated_tokens += len(states)
-            self.compute_s += elapsed
+            slot_tok = np.asarray(tok)
+            for s in states:
+                self._log_token(s.req.req_id,
+                                slot_tok[paged.slot_of(s.req.req_id)])
+            self._gen_tokens[rep] += len(states)
+            self._compute_s[rep] += elapsed
+            self._record_step(rep, elapsed)
             return elapsed
         ids = {s.req.req_id for s in states}
         total = 0.0
@@ -361,9 +457,15 @@ class EngineExecutor(Executor):
             jax.block_until_ready(tok)
             elapsed = time.perf_counter() - t0
             g.tok, g.caches, g.pos = tok, caches, g.pos + 1
-            self.generated_tokens += live
-            self.compute_s += elapsed
+            lane_tok = np.asarray(tok)
+            for lane, rid in enumerate(g.order):
+                if rid in g.req_ids and rid in ids:
+                    self._log_token(rid, lane_tok[lane])
+            self._gen_tokens[rep] += live
+            self._compute_s[rep] += elapsed
             total += elapsed
+        if total > 0:
+            self._record_step(rep, total)
         return total
 
     def release(self, rep: int, state: RequestState) -> None:

@@ -79,6 +79,11 @@ class KVCacheManager:
     def holds(self, req_id: int) -> bool:
         return req_id in self._held
 
+    def held_blocks(self, req_id: int) -> int:
+        """Blocks currently reserved by ``req_id`` (0 when not held) — the
+        recompute cost a ``fewest-blocks`` preemption victim would free."""
+        return self._held.get(req_id, 0)
+
     # ---------------------------------------------------------- admission
 
     def admit(self, req_id: int, tokens: int, *, solo: bool = False) -> bool:

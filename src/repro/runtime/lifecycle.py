@@ -87,11 +87,15 @@ class RuntimeResult:
 
     Backwards-compatible with the old ``SimResult`` API: ``makespan``,
     ``throughput``, ``latencies``, ``per_replica_busy``, ``percentile(s)``.
+    ``info`` carries scalar counters (``preemptions``, ``kv_peak_blocks``,
+    ``autoscale_adds`` …) plus the structured ``per_replica`` breakdown
+    (busy seconds, completions, KV peak/budget blocks, preemptions per
+    replica).
     """
 
     records: List[RequestState]
     per_replica_busy: np.ndarray
-    info: Dict[str, float] = dataclasses.field(default_factory=dict)
+    info: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @cached_property
     def completed(self) -> List[RequestState]:

@@ -10,6 +10,19 @@ cost-model *prediction* (``CostModelExecutor``) or real token *execution*
 (``EngineExecutor``); both travel the identical admission/batching/routing
 code path and report the same TTFT/TPOT/goodput metrics.
 
+Time model — one **global event heap**: every replica is an event
+generator (:meth:`~repro.runtime.replica.ReplicaRuntime.next_event_time` /
+``begin_step``/``complete_step``) and the runtime always pops the
+globally-earliest event, so arrivals, admissions, decode steps, replans,
+and autoscale decisions interleave in true time order across replicas.
+When the executor is concurrent (``EngineExecutor``), popped events are
+*executed* on per-replica actor workers
+(:class:`~repro.runtime.actor.ReplicaWorker`) so prefill/decode calls of
+different replicas overlap in wall time, their futures resolving back
+into the heap.  ``mode="sequential"`` keeps the legacy
+replica-at-a-time loop as the equivalence baseline (byte-identical
+schedules on the cost-model backend, asserted in ``tests/test_runtime``).
+
 Online replanning: pass :class:`ReplanEvent` s (e.g. the output of
 ``repro.core.scheduler.replan`` when a spot pool is reclaimed).  At each
 event time the runtime matches the new plan's replicas against the live
@@ -17,10 +30,19 @@ pool by config key — survivors keep their clock, queue, and active batch;
 removed replicas drain their active batch but their *queued* requests
 migrate through the new plan's router to surviving/new replicas; arrivals
 after the event are routed by the new plan.
+
+Autoscaling: pass a :class:`~repro.core.scheduler.ScalePolicy` as
+``autoscale`` — the runtime samples per-replica queue depth and KV
+watermark every ``policy.interval`` seconds of serving time and applies
+the policy's add/drain decisions as online replans (with queue
+rebalancing, so a scale-up immediately relieves a backlogged survivor).
+Decisions are recorded in :attr:`scale_log` and counted in
+``result.info``.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -29,10 +51,13 @@ import numpy as np
 from repro.core.plan import ServingPlan
 from repro.core.workloads import Trace
 
+from repro.runtime.actor import ReplicaWorker
 from repro.runtime.executor import Executor
 from repro.runtime.lifecycle import RequestState, RuntimeResult
 from repro.runtime.replica import ReplicaRuntime
 from repro.runtime.router import AssignmentRouter
+
+MODES = ("events", "sequential")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,16 +71,23 @@ class ReplanEvent:
 class ServingRuntime:
     """One continuous-batching core behind both prediction and execution."""
 
-    def __init__(self, plan: ServingPlan, executor: Executor):
+    def __init__(self, plan: ServingPlan, executor: Executor, *,
+                 mode: str = "events", preempt_policy: str = "latest"):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.plan = plan
         self.executor = executor
+        self.mode = mode
+        self.preempt_policy = preempt_policy
         self.replicas: List[ReplicaRuntime] = [
-            ReplicaRuntime(i, cfg, executor)
+            ReplicaRuntime(i, cfg, executor, preempt_policy=preempt_policy)
             for i, cfg in enumerate(plan.replicas)]
         self.router = AssignmentRouter(plan)
         # router's plan-local replica j -> global ReplicaRuntime
         self._route_map: List[ReplicaRuntime] = list(self.replicas)
-        self.info: Dict[str, float] = {}
+        self.info: Dict[str, object] = {}
+        self.scale_log: List[object] = []     # ScaleDecision records
+        self._workers: Dict[int, ReplicaWorker] = {}
 
     # ------------------------------------------------------------- dispatch
 
@@ -70,15 +102,27 @@ class ServingRuntime:
 
     # -------------------------------------------------------------- replan
 
-    def _apply_replan(self, event: ReplanEvent) -> None:
+    def _apply_replan(self, event: ReplanEvent, *,
+                      rebalance: bool = False) -> None:
+        """Switch the live pool to ``event.plan``.  ``rebalance`` (used by
+        the autoscaler) additionally re-routes every *queued* request of
+        surviving replicas through the new plan's router, so an added
+        replica immediately shares a survivor's backlog."""
         new_plan = event.plan
         live = [r for r in self.replicas if not r.draining]
         claimed: set = set()
         kept = 0
         new_map: List[ReplicaRuntime] = []
         for cfg in new_plan.replicas:
-            match = next((r for r in live if r.config.key == cfg.key
-                          and r.index not in claimed), None)
+            # Among same-key candidates, keep the one with the most
+            # outstanding work (ties: lowest index, the legacy order) —
+            # so when the autoscaler drains one of several identical
+            # replicas, the *idle* instance is the one released.
+            candidates = [r for r in live if r.config.key == cfg.key
+                          and r.index not in claimed]
+            match = max(candidates,
+                        key=lambda r: (len(r.active) + len(r.queue),
+                                       -r.index)) if candidates else None
             if match is not None:
                 claimed.add(match.index)
                 # An idle survivor's clock may lag the replan point; clamp so
@@ -90,7 +134,8 @@ class ServingRuntime:
             else:
                 idx = len(self.replicas)
                 self.executor.add_replica(cfg)
-                rep = ReplicaRuntime(idx, cfg, self.executor)
+                rep = ReplicaRuntime(idx, cfg, self.executor,
+                                     preempt_policy=self.preempt_policy)
                 rep.now = event.time          # spun up at the replan point
                 self.replicas.append(rep)
                 new_map.append(rep)
@@ -99,52 +144,200 @@ class ServingRuntime:
             if r.index not in claimed:
                 r.draining = True             # finish active, admit nothing
                 migrated.extend(r.strip_queue())
+        if rebalance:
+            for r in new_map:
+                migrated.extend(r.strip_queue())
         self.router = AssignmentRouter(new_plan)
         self._route_map = new_map
         for state in sorted(migrated, key=lambda s: s.req.arrival):
             self._dispatch(state, at=event.time)   # rerouted now, not on arrival
-        self.info["replicas_kept"] = self.info.get("replicas_kept", 0) + kept
-        self.info["replicas_added"] = (self.info.get("replicas_added", 0)
-                                       + len(new_plan.replicas) - kept)
-        self.info["replicas_drained"] = (self.info.get("replicas_drained", 0)
-                                         + len(live) - kept)
-        self.info["requests_migrated"] = (self.info.get("requests_migrated", 0)
-                                          + len(migrated))
+        self._bump("replicas_kept", kept)
+        self._bump("replicas_added", len(new_plan.replicas) - kept)
+        self._bump("replicas_drained", len(live) - kept)
+        self._bump("requests_migrated", len(migrated))
+
+    def _bump(self, key: str, n: float) -> None:
+        self.info[key] = float(self.info.get(key, 0)) + n
+
+    # ---------------------------------------------------------- autoscaling
+
+    def _snapshot(self):
+        """Per-replica load observations for the scale policy."""
+        from repro.core.scheduler import ReplicaSnapshot
+        snaps = []
+        for r in self.replicas:
+            mgr = self.executor.kv_manager(r.index)
+            kv = 0.0
+            if mgr is not None and mgr.num_blocks > 0:
+                kv = mgr.used_blocks / mgr.num_blocks
+            snaps.append(ReplicaSnapshot(
+                index=r.index, config=r.config, queue_len=len(r.queue),
+                active=len(r.active), kv_used_frac=float(kv),
+                draining=r.draining,
+                step_time_s=self.executor.step_time_estimate(r.index)))
+        return snaps
+
+    def _autoscale_tick(self, t: float, policy) -> None:
+        decision = policy.update(t, self._snapshot(), self.router.plan)
+        if decision is None:
+            return
+        self.scale_log.append(decision)
+        self._bump("autoscale_adds" if decision.action == "add"
+                   else "autoscale_drains", 1)
+        self._apply_replan(ReplanEvent(time=t, plan=decision.plan),
+                           rebalance=True)
 
     # ----------------------------------------------------------------- run
 
     def run(self, trace: Trace, *,
-            replan: Union[ReplanEvent, Sequence[ReplanEvent], None] = None
-            ) -> RuntimeResult:
-        """Serve the trace; returns per-request records + aggregate metrics."""
+            replan: Union[ReplanEvent, Sequence[ReplanEvent], None] = None,
+            autoscale=None) -> RuntimeResult:
+        """Serve the trace; returns per-request records + aggregate metrics.
+
+        ``replan`` passes pre-planned :class:`ReplanEvent` s; ``autoscale``
+        optionally passes a :class:`~repro.core.scheduler.ScalePolicy`
+        that emits further replans online from observed load.
+        """
         events: List[ReplanEvent] = (
             [replan] if isinstance(replan, ReplanEvent)
             else sorted(replan, key=lambda e: e.time) if replan else [])
         order = sorted(trace.requests, key=lambda q: q.arrival)
         states = [RequestState(req=req) for req in order]
         pos = 0
-        for event in events:
-            while pos < len(states) and order[pos].arrival <= event.time:
-                self._dispatch(states[pos])
-                pos += 1
-            self._advance_all(until=event.time)
-            self._apply_replan(event)
-        while pos < len(states):
-            self._dispatch(states[pos])
-            pos += 1
-        self._advance_all()
+        ei = 0
+        tick = math.inf
+        if autoscale is not None:
+            autoscale.reset()
+            tick = (order[0].arrival if order else 0.0) + autoscale.interval
+        try:
+            while True:
+                next_replan = (events[ei].time if ei < len(events)
+                               else math.inf)
+                barrier = min(next_replan, tick)
+                while pos < len(states) and order[pos].arrival <= barrier:
+                    self._dispatch(states[pos])
+                    pos += 1
+                self._advance_all(until=barrier)
+                if barrier == math.inf:
+                    break
+                if next_replan <= tick:
+                    self._apply_replan(events[ei])
+                    ei += 1
+                else:
+                    self._autoscale_tick(tick, autoscale)
+                    tick += autoscale.interval
+                    if (pos >= len(states) and ei >= len(events)
+                            and all(r.next_event_time() == math.inf
+                                    for r in self.replicas)):
+                        break     # trace fully served: stop ticking
+        finally:
+            self._close_workers()
         busy = np.array([r.busy for r in self.replicas])
         info = dict(self.info)
         info["preemptions"] = float(sum(r.preempted for r in self.replicas))
-        kv_peaks = [m.peak_used for m in
-                    (self.executor.kv_manager(r.index) for r in self.replicas)
-                    if m is not None]
+        per_replica: List[Dict[str, object]] = []
+        kv_peaks: List[float] = []
+        for r in self.replicas:
+            mgr = self.executor.kv_manager(r.index)
+            if mgr is not None:
+                kv_peaks.append(mgr.peak_used)
+            per_replica.append({
+                "replica": r.index,
+                "config": r.config.key,
+                "busy_s": float(r.busy),
+                "completed": r.completed,
+                "preemptions": r.preempted,
+                "draining": r.draining,
+                "kv_peak_blocks": mgr.peak_used if mgr is not None else None,
+                "kv_blocks": mgr.num_blocks if mgr is not None else None,
+                "step_time_s": self.executor.step_time_estimate(r.index),
+            })
+        info["per_replica"] = per_replica
         if kv_peaks:
             info["kv_peak_blocks"] = float(max(kv_peaks))
+        if autoscale is not None:
+            info["autoscale_events"] = float(len(self.scale_log))
         return RuntimeResult(records=states, per_replica_busy=busy,
                              info=info)
 
+    # ------------------------------------------------------------- advance
+
     def _advance_all(self, until: float = math.inf) -> None:
-        for rep in self.replicas:
-            while rep.step(until=until):
-                pass
+        """Advance every replica until no event can start before ``until``
+        (atomic events may complete past it)."""
+        if self.mode == "sequential":
+            for rep in self.replicas:
+                while rep.step(until=until):
+                    pass
+        elif getattr(self.executor, "concurrent", False) \
+                and len(self.replicas) > 1:
+            self._advance_concurrent(until)
+        else:
+            self._advance_events(until)
+
+    def _advance_events(self, until: float = math.inf) -> None:
+        """Global event heap: always fire the event with the earliest
+        start time across all replicas."""
+        heap: List = []
+        for r in self.replicas:
+            t = r.next_event_time()
+            if t < until:
+                heapq.heappush(heap, (t, r.index))
+        while heap:
+            _, i = heapq.heappop(heap)
+            rep = self.replicas[i]
+            if not rep.step_event(until):
+                continue
+            t2 = rep.next_event_time()
+            if t2 < until:
+                heapq.heappush(heap, (t2, i))
+
+    def _advance_concurrent(self, until: float = math.inf) -> None:
+        """Event heap with overlapped execution: planned events are
+        submitted to per-replica actor workers in global time order and
+        their futures resolve back into the heap."""
+        import concurrent.futures as cf
+        heap: List = []
+        for r in self.replicas:
+            t = r.next_event_time()
+            if t < until:
+                heapq.heappush(heap, (t, r.index))
+        inflight: Dict[cf.Future, tuple] = {}
+        while heap or inflight:
+            while heap:
+                _, i = heapq.heappop(heap)
+                rep = self.replicas[i]
+                pending = rep.begin_step(until)
+                if pending is None:
+                    continue
+                fut = self._worker(i).submit(
+                    lambda p=pending, i=i: p.execute(self.executor, i))
+                inflight[fut] = (rep, pending)
+            if not inflight:
+                break
+            done, _ = cf.wait(list(inflight),
+                              return_when=cf.FIRST_COMPLETED)
+            for fut in done:
+                rep, pending = inflight.pop(fut)
+                rep.complete_step(pending, fut.result())
+                t2 = rep.next_event_time()
+                if t2 < until:
+                    heapq.heappush(heap, (t2, rep.index))
+
+    # ------------------------------------------------------------- workers
+
+    def _worker(self, index: int) -> ReplicaWorker:
+        worker = self._workers.get(index)
+        if worker is None:
+            device = None
+            device_for = getattr(self.executor, "device_for", None)
+            if device_for is not None:
+                device = device_for(index)
+            worker = ReplicaWorker(f"replica-worker-{index}", device=device)
+            self._workers[index] = worker
+        return worker
+
+    def _close_workers(self) -> None:
+        workers, self._workers = self._workers, {}
+        for worker in workers.values():
+            worker.close()

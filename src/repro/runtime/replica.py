@@ -18,22 +18,39 @@ Semantics (inherited from the validated simulator, now shared):
 * decode advances the whole active batch in lockstep steps; the scheduler
   fast-forwards at most ``executor.max_steps_per_event`` steps, never
   overshoots the next queued arrival (so admission happens mid-flight),
-  and never outgrows the block pool: when the next step does not fit, the
-  most-recently-admitted request is **preempted by recompute** — its
-  blocks are freed and it re-enters the queue to prefill again later
-  (recorded in ``RequestState.preemptions``);
+  and never outgrows the block pool: when the next step does not fit, one
+  request is **preempted by recompute** — its blocks are freed and it
+  re-enters the queue to prefill again later (recorded in
+  ``RequestState.preemptions``).  The victim is chosen by
+  ``preempt_policy``: ``"latest"`` (vLLM recompute default: the
+  most-recently-admitted request) or ``"fewest-blocks"`` (the cheapest
+  recompute: the request holding the fewest KV blocks);
 * a ``draining`` replica (removed by a replan) finishes its active batch
   but admits nothing new — and never preempts, since its queue can no
   longer drain through admission;
 * a replica always makes progress: a single active request may overflow
   the budget rather than starve (undersized replicas serve one request at
   a time, exactly like the legacy fixed-cap scheduler).
+
+Two equivalent drive modes:
+
+* **sequential** — :meth:`ReplicaRuntime.step` advances one compound event
+  (admission groups and/or one decode chunk) and the orchestrator loops
+  each replica to exhaustion (the pre-event-heap behavior, kept as the
+  equivalence baseline);
+* **event** — :meth:`next_event_time` / :meth:`begin_step` /
+  :meth:`complete_step` split every event into *plan* (pure bookkeeping on
+  the orchestrator thread) → *execute* (the executor call, which a
+  concurrent backend may run on a per-replica worker thread) → *commit*,
+  so a global event heap can pop the earliest event across replicas and
+  overlap executor calls in wall time.  Both modes produce byte-identical
+  schedules on the analytical backend (asserted in ``tests/test_runtime``).
 """
 from __future__ import annotations
 
 import bisect
 import math
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.plan import Config
 
@@ -41,14 +58,50 @@ from repro.runtime.executor import Executor
 from repro.runtime.kvcache.manager import batch_tokens, logical_tokens
 from repro.runtime.lifecycle import Phase, RequestState
 
+PREEMPT_POLICIES = ("latest", "fewest-blocks")
+
+
+class PendingEvent:
+    """One planned-but-not-yet-executed replica event.
+
+    ``kind`` is ``"prefill"`` (``batch`` is the admission group) or
+    ``"decode"`` (``batch``/``k``/``t_step`` are the lockstep chunk).
+    ``until`` records the barrier the event was planned under so
+    completion can reproduce the sequential scheduler's post-event
+    admission gating exactly.
+    """
+
+    __slots__ = ("kind", "batch", "k", "t_step", "until")
+
+    def __init__(self, kind: str, batch: Sequence[RequestState], *,
+                 k: int = 0, t_step: float = 0.0, until: float = math.inf):
+        self.kind = kind
+        self.batch = batch
+        self.k = k
+        self.t_step = t_step
+        self.until = until
+
+    def execute(self, executor: Executor, rep: int):
+        """Run the executor side of this event (the only part that may run
+        off the orchestrator thread).  Returns the executor's result —
+        prefill offsets or the decode duration."""
+        if self.kind == "prefill":
+            return executor.prefill(rep, self.batch)
+        return executor.decode(rep, self.batch, self.k, self.t_step)
+
 
 class ReplicaRuntime:
     """Event-driven continuous batching for one replica."""
 
-    def __init__(self, index: int, config: Config, executor: Executor):
+    def __init__(self, index: int, config: Config, executor: Executor, *,
+                 preempt_policy: str = "latest"):
+        if preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"preempt_policy must be one of "
+                             f"{PREEMPT_POLICIES}, got {preempt_policy!r}")
         self.index = index
         self.config = config
         self.executor = executor
+        self.preempt_policy = preempt_policy
         self.queue: List[RequestState] = []    # sorted by arrival
         self.active: List[RequestState] = []
         self.now = 0.0
@@ -57,6 +110,10 @@ class ReplicaRuntime:
         self.preempted = 0
         self.draining = False
         self._admission_seq = 0
+        # event mode: after a completed event, whether the next event should
+        # attempt admission before decoding (mirrors the sequential step's
+        # trailing `_admit`)
+        self._admit_turn = False
         # one tuple of req_ids per prefill group, in admission order —
         # backend-independent, so tests can assert the cost-model and
         # engine backends make identical admission decisions
@@ -80,6 +137,16 @@ class ReplicaRuntime:
             mgr.free(state.req.req_id)
         self.executor.release(self.index, state)
 
+    def _pick_victim(self, batch: Sequence[RequestState]) -> RequestState:
+        """Choose the preemption victim per ``preempt_policy``."""
+        if self.preempt_policy == "fewest-blocks":
+            mgr = self.executor.kv_manager(self.index)
+            # cheapest recompute first; break ties toward latest-admitted
+            # so the policy degenerates to the default on uniform holdings
+            return min(batch, key=lambda s: (
+                mgr.held_blocks(s.req.req_id), -s.admission_index))
+        return max(batch, key=lambda s: s.admission_index)
+
     def _preempt(self, state: RequestState) -> None:
         """Evict one decoding request to recompute: free its KV blocks and
         send it back to the queue; it will prefill again when admitted."""
@@ -94,73 +161,56 @@ class ReplicaRuntime:
         self.preempted += 1
         bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
 
-    def _admit(self, until: float = math.inf) -> None:
-        """Admit arrived requests in batched groups, paying each group's
-        prefill; loops so arrivals landing during a prefill window are
-        admitted before decode resumes.  Admission never *starts* at or
-        after ``until`` (so a replan barrier sees a consistent queue)."""
-        if self.draining:
-            return
-        mgr = self.executor.kv_manager(self.index)
-        while self.queue and self.now < until:
-            group: List[RequestState] = []
-            cap = math.inf
-            for s in self.active:
-                cap = min(cap, self.executor.max_batch(self.index,
-                                                       s.req.workload))
-            while self.queue:
-                nxt = self.queue[0]
-                if nxt.req.arrival > self.now:
-                    if self.active or group:
-                        break
-                    self.now = nxt.req.arrival   # idle: jump to next arrival
-                c = min(cap, self.executor.max_batch(self.index,
-                                                     nxt.req.workload))
-                if len(self.active) + len(group) + 1 > max(1, int(c)):
-                    break
-                solo = not self.active and not group
-                if mgr is not None and not mgr.admit(
-                        nxt.req.req_id, nxt.req.input_len + 1, solo=solo):
-                    break                        # FCFS: no queue jumping
-                self.queue.pop(0)
-                nxt.phase = Phase.PREFILL
-                nxt.admission_index = self._admission_seq
-                self._admission_seq += 1
-                group.append(nxt)
-                cap = c
-            if not group:
-                return
-            self.admission_log.append(tuple(s.req.req_id for s in group))
-            start = self.now
-            offsets = self.executor.prefill(self.index, group)
-            for s, off in zip(group, offsets):
-                s.phase = Phase.DECODE
-                s.admitted_at = start
-                s.first_token_at = start + off
-                s.quota = self.executor.decode_quota(s.req)
-                s.remaining = s.quota
-            self.now = start + offsets[-1]
-            self.busy += offsets[-1]
-            for s in group:
-                if s.remaining <= 0:    # quota exhausted by the first token
-                    self._finish(s)
-                else:
-                    self.active.append(s)
+    # ------------------------------------------------------------ planning
 
-    def step(self, until: float = math.inf) -> bool:
-        """Advance one event (admission and/or lockstep decode).  Returns
-        False when no event can start strictly before ``until`` — atomic
-        events may still complete past it."""
-        if self.now >= until:
-            return False
-        if not self.active:
-            if not self.queue or self.draining:
-                return False
-            if self.queue[0].req.arrival >= until:
-                return False
-            self._admit(until)
-            if not self.active:
-                return True   # admitted requests completed at the first token
+    def _plan_admission_group(self, until: float = math.inf
+                              ) -> Optional[List[RequestState]]:
+        """One iteration of the admission loop: pop every queued request
+        that has arrived and fits (count cap + KV blocks, FCFS) into one
+        prefill group, reserving its blocks.  Returns None when no group
+        can start (admission never *starts* at or after ``until``, so a
+        replan barrier sees a consistent queue)."""
+        if self.draining or not self.queue or self.now >= until:
+            return None
+        mgr = self.executor.kv_manager(self.index)
+        group: List[RequestState] = []
+        cap = math.inf
+        for s in self.active:
+            cap = min(cap, self.executor.max_batch(self.index,
+                                                   s.req.workload))
+        while self.queue:
+            nxt = self.queue[0]
+            if nxt.req.arrival > self.now:
+                if self.active or group:
+                    break
+                if nxt.req.arrival >= until:
+                    break   # the jump would start admission at/after the
+                            # barrier (e.g. arrival == replan time): defer,
+                            # exactly like the event heap does
+                self.now = nxt.req.arrival   # idle: jump to next arrival
+            c = min(cap, self.executor.max_batch(self.index,
+                                                 nxt.req.workload))
+            if len(self.active) + len(group) + 1 > max(1, int(c)):
+                break
+            solo = not self.active and not group
+            if mgr is not None and not mgr.admit(
+                    nxt.req.req_id, nxt.req.input_len + 1, solo=solo):
+                break                        # FCFS: no queue jumping
+            self.queue.pop(0)
+            nxt.phase = Phase.PREFILL
+            nxt.admission_index = self._admission_seq
+            self._admission_seq += 1
+            group.append(nxt)
+            cap = c
+        if not group:
+            return None
+        self.admission_log.append(tuple(s.req.req_id for s in group))
+        return group
+
+    def _plan_decode(self, until: float = math.inf) -> PendingEvent:
+        """Choose the next lockstep decode chunk: batch, step count (never
+        overshooting the next queued arrival or ``until``), preempting when
+        the chunk cannot fit the block pool, then reserving the growth."""
         mgr = self.executor.kv_manager(self.index)
         while True:
             batch = list(self.active)
@@ -183,23 +233,142 @@ class ReplicaRuntime:
                 break
             if len(batch) == 1 or self.draining:
                 break   # progress guarantee: overflow instead of starving
-            self._preempt(max(batch, key=lambda s: s.admission_index))
+            self._preempt(self._pick_victim(batch))
         if mgr is not None:
             for s in batch:
                 mgr.grow(s.req.req_id,
                          logical_tokens(s.req.input_len, s.quota,
                                         s.remaining) + k,
                          allow_overflow=True)
-        duration = self.executor.decode(self.index, batch, k, t_step)
+        return PendingEvent("decode", batch, k=k, t_step=t_step, until=until)
+
+    # ---------------------------------------------------------- completion
+
+    def _complete_prefill(self, group: Sequence[RequestState],
+                          offsets: Sequence[float]) -> None:
+        start = self.now
+        for s, off in zip(group, offsets):
+            s.phase = Phase.DECODE
+            s.admitted_at = start
+            s.first_token_at = start + off
+            s.quota = self.executor.decode_quota(s.req)
+            s.remaining = s.quota
+        self.now = start + offsets[-1]
+        self.busy += offsets[-1]
+        for s in group:
+            if s.remaining <= 0:    # quota exhausted by the first token
+                self._finish(s)
+            else:
+                self.active.append(s)
+
+    def _complete_decode(self, pending: PendingEvent,
+                         duration: float) -> None:
         self.now += duration
         self.busy += duration
         still: List[RequestState] = []
-        for s in batch:
-            s.remaining -= k
+        for s in pending.batch:
+            s.remaining -= pending.k
             if s.remaining <= 0:
                 self._finish(s)
             else:
                 still.append(s)
         self.active = still
+
+    # ------------------------------------------------- event-mode interface
+
+    def next_event_time(self) -> float:
+        """Earliest time this replica's next event can start (``inf`` when
+        it has nothing to do).  The orchestrator's global heap is keyed on
+        this."""
+        if self.active:
+            return self.now
+        if self.queue and not self.draining:
+            return max(self.now, self.queue[0].req.arrival)
+        return math.inf
+
+    def begin_step(self, until: float = math.inf) -> Optional[PendingEvent]:
+        """Plan (but do not execute) the next event starting strictly
+        before ``until``: all queue/KV bookkeeping happens here, on the
+        orchestrator thread; the returned event's :meth:`PendingEvent.execute`
+        is the only part that may run elsewhere.  Returns None when no
+        event can start."""
+        if self.now >= until:
+            return None
+        if not self.active:
+            if not self.queue or self.draining:
+                return None
+            if self.queue[0].req.arrival >= until:
+                return None
+            group = self._plan_admission_group(until)
+            if group is None:
+                return None
+            self._admit_turn = True
+            return PendingEvent("prefill", group, until=until)
+        if self._admit_turn:
+            group = self._plan_admission_group(until)
+            if group is not None:
+                return PendingEvent("prefill", group, until=until)
+            self._admit_turn = False
+        return self._plan_decode(until)
+
+    def complete_step(self, pending: PendingEvent, result) -> None:
+        """Commit an executed event: advance the clock by the executor's
+        measured/predicted duration and retire finished requests."""
+        if pending.kind == "prefill":
+            self._complete_prefill(pending.batch, result)
+        else:
+            self._complete_decode(pending, result)
+        # The sequential scheduler re-attempts admission right after every
+        # event *only* while still inside the barrier; reproduce that gate
+        # so both modes admit at identical clocks.
+        self._admit_turn = self.now < pending.until
+
+    def step_event(self, until: float = math.inf) -> bool:
+        """Plan + execute + commit one event synchronously (the event-heap
+        path for non-concurrent executors).  Returns False when no event
+        can start strictly before ``until``."""
+        pending = self.begin_step(until)
+        if pending is None:
+            return False
+        self.complete_step(pending, pending.execute(self.executor,
+                                                    self.index))
+        return True
+
+    # --------------------------------------------- sequential-mode interface
+
+    def _admit(self, until: float = math.inf) -> None:
+        """Admit arrived requests in batched groups, paying each group's
+        prefill; loops so arrivals landing during a prefill window are
+        admitted before decode resumes."""
+        while True:
+            group = self._plan_admission_group(until)
+            if group is None:
+                return
+            self._complete_prefill(group,
+                                   self.executor.prefill(self.index, group))
+
+    def step(self, until: float = math.inf) -> bool:
+        """Advance one compound event (admission and/or lockstep decode).
+        Returns False when no event can start strictly before ``until`` —
+        atomic events may still complete past it.  This is the sequential
+        drive mode; the event heap uses :meth:`begin_step` /
+        :meth:`complete_step` instead."""
+        if self.now >= until:
+            return False
+        if not self.active:
+            if not self.queue or self.draining:
+                return False
+            if self.queue[0].req.arrival >= until:
+                return False
+            self._admit(until)
+            if not self.active:
+                return True   # admitted requests completed at the first token
+            if self.now >= until:
+                return True   # prefill crossed the barrier: decode may not
+                              # *start* at/after until (event mode defers it
+                              # identically, keeping the modes byte-equal)
+        pending = self._plan_decode(until)
+        self._complete_decode(pending, pending.execute(self.executor,
+                                                       self.index))
         self._admit(until)
         return True

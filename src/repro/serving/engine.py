@@ -10,6 +10,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -23,8 +24,7 @@ from repro.models.config import ArchConfig
 # Prefill compilations are cached per t_max; distinct prompt+generation
 # budgets used to pin one compiled function each, forever.  Rounding t_max
 # up to the next power of two collapses the distinct shapes to O(log T)
-# buckets, and the LRU bound caps total retained compilations.
-PREFILL_CACHE_MAX = 8
+# buckets, and the shared-LRU bound below caps total retained compilations.
 MIN_T_BUCKET = 16
 
 
@@ -34,6 +34,32 @@ def bucket_t_max(t_max: int) -> int:
     while b < t_max:
         b *= 2
     return b
+
+
+# Jitted callables are pure in (params, inputs), so replicas of the same
+# architecture share them: N same-model replicas compile once instead of N
+# times, and a replica added mid-run by the autoscaler joins *warm* — no
+# compile latency lands on its measured clock.  Keyed by ArchConfig value
+# (hashable frozen dataclass) + mode; LRU-bounded like the per-engine
+# prefill cache.  The lock only guards the dict (wrapper creation is lazy;
+# XLA compilation happens at first call, outside it) — concurrent replica
+# workers hit this on every prefill-bucket lookup.
+SHARED_JIT_MAX = 64
+_shared_jit_cache: "collections.OrderedDict[tuple, object]" = \
+    collections.OrderedDict()
+_shared_jit_lock = threading.Lock()
+
+
+def _shared_jit(key: tuple, make):
+    with _shared_jit_lock:
+        fn = _shared_jit_cache.get(key)
+        if fn is not None:
+            _shared_jit_cache.move_to_end(key)
+            return fn
+        fn = _shared_jit_cache[key] = make()
+        while len(_shared_jit_cache) > SHARED_JIT_MAX:
+            _shared_jit_cache.popitem(last=False)
+    return fn
 
 
 @dataclasses.dataclass
@@ -51,31 +77,33 @@ class ReplicaEngine:
     """One model replica with jit-compiled prefill/decode."""
 
     def __init__(self, cfg: ArchConfig, params=None, *, seed: int = 0,
-                 long_mode: bool = False):
+                 long_mode: bool = False, device=None):
         self.cfg = cfg
         self.long_mode = long_mode
+        self.device = device
         self.params = params if params is not None else M.init_params(
             cfg, jax.random.PRNGKey(seed))
-        self._prefill: "collections.OrderedDict[int, object]" = \
-            collections.OrderedDict()
-        self._step = jax.jit(
-            functools.partial(M.decode_step, cfg, long_mode=long_mode))
+        if device is not None:
+            # One accelerator per replica: computations follow the params'
+            # placement, so concurrent replicas execute on distinct devices.
+            self.params = jax.device_put(self.params, device)
+        self._step = _shared_jit(
+            ("step", cfg, long_mode),
+            lambda: jax.jit(functools.partial(M.decode_step, cfg,
+                                              long_mode=long_mode)))
         self._paged_step = None
 
     def _prefill_fn(self, t_max: int):
         """Compiled prefill for the power-of-two bucket covering ``t_max``
-        (bounded LRU — see ``bucket_t_max``).  The returned caches are
-        sized to the bucket; callers treat ``t_max`` as a lower bound."""
+        (bounded LRU, shared across same-arch replicas — see
+        ``bucket_t_max`` / ``_shared_jit``).  The returned caches are sized
+        to the bucket; callers treat ``t_max`` as a lower bound."""
         bucket = bucket_t_max(t_max)
-        if bucket in self._prefill:
-            self._prefill.move_to_end(bucket)
-        else:
-            self._prefill[bucket] = jax.jit(
-                functools.partial(M.prefill, self.cfg, t_max=bucket,
-                                  long_mode=self.long_mode))
-            while len(self._prefill) > PREFILL_CACHE_MAX:
-                self._prefill.popitem(last=False)
-        return self._prefill[bucket]
+        return _shared_jit(
+            ("prefill", self.cfg, self.long_mode, bucket),
+            lambda: jax.jit(functools.partial(M.prefill, self.cfg,
+                                              t_max=bucket,
+                                              long_mode=self.long_mode)))
 
     def prefill_batch(self, prompts: jax.Array, t_max: int,
                       prefix_embeds: Optional[jax.Array] = None):
@@ -106,8 +134,10 @@ class ReplicaEngine:
         returns (next_token (S,), new_pools).  Shape-stable: one compile
         per replica regardless of which slots are live."""
         if self._paged_step is None:
-            self._paged_step = jax.jit(
-                functools.partial(M.paged_decode_step, self.cfg))
+            self._paged_step = _shared_jit(
+                ("paged", self.cfg),
+                lambda: jax.jit(functools.partial(M.paged_decode_step,
+                                                  self.cfg)))
         logits, pools = self._paged_step(self.params, pools, block_tables,
                                          lengths, tok)
         return M.greedy_sample(logits), pools

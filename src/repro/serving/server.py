@@ -42,29 +42,33 @@ class HeterogeneousServer:
     def __init__(self, plan: ServingPlan, arch_cfgs: Sequence[ArchConfig],
                  *, params_per_model: Optional[Dict[int, object]] = None,
                  max_batch: int = 8, models=None,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None, concurrent: bool = True):
         self.plan = plan
         self.executor = EngineExecutor(plan, arch_cfgs,
                                        params_per_model=params_per_model,
                                        models=models, max_batch=max_batch,
-                                       paged=paged)
+                                       paged=paged, concurrent=concurrent)
 
     @property
     def engines(self):
         return self.executor.engines
 
     def serve(self, trace: Trace, *, input_len: int = 16, max_new: int = 8,
-              seed: int = 0, replan: Optional[ReplanEvent] = None
-              ) -> ServeStats:
+              seed: int = 0, replan: Optional[ReplanEvent] = None,
+              autoscale=None, mode: str = "events") -> ServeStats:
         """Serve every request in the trace with synthetic prompts of
         ``input_len`` tokens and at most ``max_new`` generated tokens per
         request (trace token lengths are cost-model scale; runtime scale
-        stays CPU-sized)."""
+        stays CPU-sized).  ``autoscale`` optionally passes a
+        :class:`repro.core.scheduler.ScalePolicy` for online scaling;
+        ``mode="sequential"`` forces the legacy replica-at-a-time loop
+        (used by equivalence tests)."""
         self.executor.configure(input_len=input_len, max_new=max_new,
                                 seed=seed)
-        runtime = ServingRuntime(self.plan, self.executor)
+        runtime = ServingRuntime(self.plan, self.executor, mode=mode)
+        self.last_runtime = runtime     # scale_log / admission_log access
         t0 = time.perf_counter()
-        result = runtime.run(trace, replan=replan)
+        result = runtime.run(trace, replan=replan, autoscale=autoscale)
         wall = time.perf_counter() - t0
         return ServeStats(
             completed=result.num_completed,

@@ -1,0 +1,262 @@
+"""Utilization-driven autoscaler tests: ScalePolicy decision logic (unit)
+and the runtime's online scale-up/drain loop on both backends (the
+cost-model integration is deterministic; the engine acceptance run shows a
+bursty trace triggering >= 1 online replan that improves goodput)."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.plan import Config, ServingPlan
+from repro.core.scheduler import (ReplicaSnapshot, ScalePolicy, scaled_plan)
+from repro.core.workloads import Request, Trace
+from repro.runtime import CostModelExecutor, ServingRuntime, SLO
+
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+
+
+def _replica(num_blocks: int = 64, *, speed: float = 1.0,
+             price: float = 1.0) -> Config:
+    """One-device replica holding ``num_blocks`` 16-token KV blocks."""
+    block_bytes = 16 * TINY.kv_bytes_per_token
+    free = (num_blocks + 0.5) * block_bytes
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("scale-test", 1e12 * speed, 1e9 * speed, mem, price,
+                     8, 1e11, 1e9, "x")
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(configs, n_requests: float) -> ServingPlan:
+    R = len(configs)
+    return ServingPlan(replicas=list(configs),
+                       assignment=np.full((R, 1), 1.0 / R),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=sum(c.cost for c in configs))
+
+
+def _snap(i, cfg, queue=0, active=0, kv=0.0, draining=False):
+    return ReplicaSnapshot(index=i, config=cfg, queue_len=queue,
+                           active=active, kv_used_frac=kv,
+                           draining=draining)
+
+
+# ------------------------------------------------------------- policy unit
+
+def test_policy_adds_on_sustained_queue_pressure():
+    cfg = _replica()
+    plan = _plan([cfg], 10)
+    policy = ScalePolicy([cfg], budget=3 * cfg.cost, window=2, cooldown=0,
+                         queue_high=4.0)
+    assert policy.update(0.1, [_snap(0, cfg, queue=9)], plan) is None  # window
+    d = policy.update(0.2, [_snap(0, cfg, queue=9)], plan)
+    assert d is not None and d.action == "add"
+    assert d.config_key == cfg.key
+    assert len(d.plan.replicas) == 2
+    # the emitted plan's assignment is a valid router input
+    np.testing.assert_allclose(d.plan.assignment.sum(axis=0), 1.0)
+
+
+def test_policy_respects_budget():
+    cfg = _replica()
+    plan = _plan([cfg], 10)
+    policy = ScalePolicy([cfg], budget=1.5 * cfg.cost, window=1, cooldown=0)
+    assert policy.update(0.1, [_snap(0, cfg, queue=50)], plan) is None
+
+
+def test_policy_never_adds_a_candidate_that_cannot_serve_demand():
+    """A candidate for a model with no demand has zero value: renting it
+    cannot relieve the backlog, so the policy must not spend on it."""
+    cfg = _replica()
+    other_model = Config(stages=cfg.stages, model_index=1, model=TINY)
+    plan = _plan([cfg], 10)                  # all demand is model 0
+    policy = ScalePolicy([other_model], budget=10 * cfg.cost, window=1,
+                         cooldown=0)
+    assert policy.update(0.1, [_snap(0, cfg, queue=50)], plan) is None
+
+
+def test_policy_adds_on_kv_watermark():
+    cfg = _replica()
+    plan = _plan([cfg], 10)
+    policy = ScalePolicy([cfg], budget=4 * cfg.cost, window=1, cooldown=0,
+                         kv_high=0.9)
+    d = policy.update(0.1, [_snap(0, cfg, queue=0, active=3, kv=0.95)], plan)
+    assert d is not None and d.action == "add"
+
+
+def test_policy_cooldown_suppresses_back_to_back_actions():
+    cfg = _replica()
+    plan = _plan([cfg], 10)
+    policy = ScalePolicy([cfg], budget=9 * cfg.cost, window=1, cooldown=2)
+    assert policy.update(0.1, [_snap(0, cfg, queue=9)], plan) is not None
+    # window cleared + 2 cooldown ticks: next two observations are absorbed
+    assert policy.update(0.2, [_snap(0, cfg, queue=9)], plan) is None
+    assert policy.update(0.3, [_snap(0, cfg, queue=9)], plan) is None
+    assert policy.update(0.4, [_snap(0, cfg, queue=9)], plan) is not None
+
+
+def test_policy_drains_idle_replica_but_keeps_minimum():
+    a, b = _replica(), _replica()
+    plan = _plan([a, b], 10)
+    policy = ScalePolicy([a], budget=4 * a.cost, window=1, cooldown=0,
+                         min_replicas=1)
+    d = policy.update(1.0, [_snap(0, a), _snap(1, b)], plan)
+    assert d is not None and d.action == "drain"
+    assert len(d.plan.replicas) == 1
+    # at min_replicas, an idle pool must NOT drain further
+    policy.reset()
+    assert policy.update(2.0, [_snap(0, a)], _plan([a], 10)) is None
+
+
+def test_policy_drain_never_strands_a_model():
+    a = _replica()
+    b = Config(stages=a.stages, model_index=1, model=TINY)
+    plan = ServingPlan(replicas=[a, b], assignment=np.eye(2),
+                       demands=[(0, 0, 5.0), (1, 0, 5.0)], makespan=1.0,
+                       cost=a.cost + b.cost)
+    policy = ScalePolicy([a], budget=10.0, window=1, cooldown=0,
+                         min_replicas=1)
+    # both idle, but each is the last replica of its model: no drain
+    assert policy.update(1.0, [_snap(0, a), _snap(1, b)], plan) is None
+
+
+def test_scaled_plan_covers_demands():
+    a, b = _replica(), _replica(speed=2.0)
+    base = _plan([a], 20)
+    plan2 = scaled_plan(base, [a, b])
+    assert plan2.cost == a.cost + b.cost
+    np.testing.assert_allclose(plan2.assignment.sum(axis=0), 1.0)
+    # faster replica takes the larger share
+    assert plan2.assignment[1, 0] > plan2.assignment[0, 0]
+
+
+def test_drain_releases_idle_instance_among_identical_replicas():
+    """When two replicas share a config key and the policy drains one, the
+    *idle* instance must be the one released — the busy survivor keeps its
+    queue and active batch."""
+    from repro.runtime.lifecycle import RequestState
+    from repro.runtime.orchestrator import ReplanEvent
+    cfg = _replica()
+    plan = _plan([cfg, cfg], 4)
+    runtime = ServingRuntime(plan, CostModelExecutor(plan.replicas, [TINY]))
+    busy = runtime.replicas[1]
+    busy.enqueue(RequestState(req=Request(req_id=7, workload=0, input_len=8,
+                                          output_len=4, arrival=0.0)))
+    runtime._apply_replan(ReplanEvent(time=1.0, plan=_plan([cfg], 4)))
+    assert runtime.replicas[0].draining and not busy.draining
+    assert len(busy.queue) == 1          # survivor kept its backlog
+
+
+# --------------------------------------------- cost-model runtime integration
+
+@pytest.fixture(scope="module")
+def burst_setup():
+    cfg = _replica(speed=0.01)
+    n = 80
+    reqs = tuple(Request(req_id=i, workload=0, input_len=64, output_len=128,
+                         arrival=0.0) for i in range(n))
+    trace = Trace("burst", reqs)
+    plan = _plan([cfg], n)
+    static = ServingRuntime(
+        plan, CostModelExecutor(plan.replicas, [TINY])).run(trace)
+    return cfg, trace, plan, static
+
+
+def test_autoscale_improves_goodput_on_burst(burst_setup):
+    """Acceptance: a bursty trace emits >= 1 online ReplanEvent and beats
+    the static plan's goodput on the same trace."""
+    cfg, trace, plan, static = burst_setup
+    policy = ScalePolicy([cfg], budget=4 * cfg.cost,
+                         interval=static.makespan / 40, window=2,
+                         queue_high=2.0, cooldown=1)
+    runtime = ServingRuntime(plan, CostModelExecutor(plan.replicas, [TINY]))
+    auto = runtime.run(trace, autoscale=policy)
+    assert auto.num_completed == trace.num_requests
+    assert auto.info["autoscale_events"] >= 1
+    assert auto.info["autoscale_adds"] >= 1
+    assert len(runtime.scale_log) == auto.info["autoscale_events"]
+    slo = SLO()          # unbounded: goodput == throughput
+    assert auto.goodput(slo) > static.goodput(slo)
+    assert auto.makespan < static.makespan
+    # scale-up rebalanced the backlog onto the added replica(s)
+    assert auto.info["requests_migrated"] > 0
+    added = [row for row in auto.info["per_replica"] if row["replica"] >= 1]
+    assert added and any(row["completed"] > 0 for row in added)
+
+
+def test_autoscale_drains_idle_replica_during_lull(burst_setup):
+    """A long lull after the burst lets the policy release capacity; a
+    late arrival is still served by the surviving pool."""
+    cfg, _, _, static = burst_setup
+    n = 40
+    late_t = static.makespan * 2
+    reqs = tuple(Request(req_id=i, workload=0, input_len=64, output_len=128,
+                         arrival=0.0) for i in range(n))
+    reqs += (Request(req_id=n, workload=0, input_len=64, output_len=16,
+                     arrival=late_t),)
+    trace = Trace("burst+lull", reqs)
+    plan = _plan([cfg, cfg], n + 1)
+    policy = ScalePolicy([cfg], budget=4 * cfg.cost,
+                         interval=static.makespan / 40, window=2,
+                         queue_high=3.0, queue_low=0.5, kv_low=0.5,
+                         cooldown=1)
+    runtime = ServingRuntime(plan, CostModelExecutor(plan.replicas, [TINY]))
+    res = runtime.run(trace, autoscale=policy)
+    assert res.num_completed == trace.num_requests
+    assert res.info.get("autoscale_drains", 0) >= 1
+    assert any(d.action == "drain" for d in runtime.scale_log)
+
+
+def test_autoscale_engine_backend_burst():
+    """Acceptance (engine backend): an autoscale-enabled run on a bursty
+    trace emits >= 1 online ReplanEvent and improves goodput over the
+    static plan — with real token generation, measured clocks, and the
+    added replica spun up through EngineExecutor.add_replica (joining
+    *warm* thanks to the shared jit cache)."""
+    from repro.configs import get_config
+    from repro.serving import HeterogeneousServer
+    cfg = _replica(num_blocks=4096)
+    n = 64
+    trace = Trace("engine-burst", tuple(
+        Request(req_id=i, workload=0, input_len=32, output_len=8,
+                arrival=0.0) for i in range(n)))
+    plan = _plan([cfg], n)
+    arch = get_config("llama3-8b").reduced()
+
+    static_server = HeterogeneousServer(plan, [arch], max_batch=4,
+                                        concurrent=False)
+    static_server.serve(trace, input_len=8, max_new=4)   # warm the jits
+    auto_server = HeterogeneousServer(plan, [arch], max_batch=4,
+                                      concurrent=False)
+
+    # The structural properties (scale event fired, added replica served
+    # backlog, everything completed) must hold on every attempt; the
+    # wall-clock goodput comparison between separately measured runs gets
+    # a few attempts so one OS-scheduling stall on a loaded CI runner
+    # cannot fail the gating job on a timing coin flip.
+    improved = False
+    for _ in range(3):
+        static = static_server.serve(trace, input_len=8, max_new=4)
+        assert static.completed == n
+        # tick a handful of times inside the (warm) static makespan so the
+        # windowed queue-depth trigger fires while the backlog is deep
+        interval = max(static.result.makespan / 20, 1e-4)
+        policy = ScalePolicy([cfg], budget=2 * cfg.cost, interval=interval,
+                             window=2, queue_high=2.0, cooldown=10**6)
+        auto = auto_server.serve(trace, autoscale=policy, input_len=8,
+                                 max_new=4)
+        assert auto.completed == n
+        runtime = auto_server.last_runtime
+        assert len(runtime.scale_log) >= 1
+        assert auto.result.info["autoscale_adds"] >= 1
+        # the added replica really served part of the backlog
+        added = [row for row in auto.result.info["per_replica"]
+                 if row["replica"] >= 1]
+        assert added and any(row["completed"] > 0 for row in added)
+        # goodput(SLO()) == throughput == n / makespan on the same trace
+        if auto.result.goodput(SLO()) > static.result.goodput(SLO()):
+            improved = True
+            break
+    assert improved, "autoscaled run never beat the static plan's goodput"
