@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_kernels         Pallas kernels (interpret mode)
   bench_roofline        deliverable (g): dry-run roofline table
   bench_runtime_overlap concurrent vs sequential engine execution
+  bench_decode_fusion   tokens/s vs decode fusion factor k (dense + paged)
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ MODULES = [
     "bench_kernels",
     "bench_roofline",
     "bench_runtime_overlap",
+    "bench_decode_fusion",
 ]
 
 

@@ -299,7 +299,12 @@ def solve_feasibility(problem: SchedulingProblem, t_hat: float, *,
     res = milp(c=obj, constraints=LinearConstraint(A, c_lb, c_ub),
                integrality=integrality, bounds=Bounds(lb, ub),
                options={"time_limit": time_limit})
-    if res.status not in (0,) or res.x is None:
+    # status 1 = time/iteration limit: HiGHS may still carry a feasible
+    # incumbent (res.x is not None), which is a perfectly good witness that
+    # makespan <= t_hat — rejecting it made the binary search treat "slow
+    # to prove optimal" as "infeasible" and silently degrade plans under
+    # tight time limits (solve_milp already accepts (0, 1) the same way).
+    if res.status not in (0, 1) or res.x is None:
         return None
     sol = res.x
     y = np.array([round(sol[yi(c)]) for c in range(C)], dtype=float)

@@ -11,6 +11,12 @@ Mamba-2 "chunked" algorithm uses.
 
 ``mamba_prefill`` processes a full sequence and returns the final state for
 decode; ``mamba_step`` advances one token against the recurrent state.
+
+Decode-state contract (horizon-fused decode): the ``{"conv", "h"}`` state
+returned by both functions is a fixed-shape, fixed-dtype pytree —
+``conv`` (B, K-1, d_inner) bf16, ``h`` (B, d_inner, d_state) fp32 — so it
+rides a ``jax.lax.scan`` carry unchanged and ``transformer.decode_steps``
+can fuse k Mamba steps into one jit.
 """
 from __future__ import annotations
 

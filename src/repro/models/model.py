@@ -73,6 +73,15 @@ def decode_step(cfg: ArchConfig, params: PyTree, caches: PyTree,
     return T.decode_step(cfg, params, caches, token, pos, long_mode=long_mode)
 
 
+def decode_steps(cfg: ArchConfig, params: PyTree, caches: PyTree,
+                 token: jax.Array, pos: jax.Array, *, k: int,
+                 long_mode: bool = False):
+    """``k`` greedy steps fused into one jit (scan carry over caches);
+    returns (tokens (B, k), caches).  Fused ≡ stepwise token-for-token."""
+    return T.decode_steps(cfg, params, caches, token, pos, k=k,
+                          long_mode=long_mode)
+
+
 def init_cache(cfg: ArchConfig, batch: int, t_max: int,
                long_mode: bool = False) -> PyTree:
     return T.init_cache(cfg, batch, t_max, long_mode)
@@ -87,6 +96,15 @@ def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
                       token: jax.Array):
     return T.paged_decode_step(cfg, params, pools, block_tables, lengths,
                                token)
+
+
+def paged_decode_steps(cfg: ArchConfig, params: PyTree, pools,
+                       block_tables: jax.Array, lengths: jax.Array,
+                       token: jax.Array, *, k: int):
+    """``k`` fused lockstep steps over a paged replica (no slot may cross a
+    block boundary within the chunk); returns (tokens (S, k), pools)."""
+    return T.paged_decode_steps(cfg, params, pools, block_tables, lengths,
+                                token, k=k)
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:

@@ -587,6 +587,38 @@ def decode_step(cfg: ArchConfig, params: PyTree, caches: PyTree,
     return logits, new_caches
 
 
+# ------------------------------------------------- horizon-fused decode
+
+def decode_steps(cfg: ArchConfig, params: PyTree, caches: PyTree,
+                 token: jax.Array, pos: jax.Array, *, k: int,
+                 long_mode: bool = False) -> Tuple[jax.Array, PyTree]:
+    """``k`` greedy decode steps inside one jit via ``lax.scan``.
+
+    The whole cache pytree rides the scan carry (dense ring KV slabs and
+    the recurrent Mamba/xLSTM states are all fixed-shape/fixed-dtype, so
+    the carry is shape-stable) and the sampled tokens accumulate on-device
+    — one dispatch and zero host syncs for the whole horizon.  ``k`` must
+    be static (the engine compiles one variant per power-of-two bucket).
+    Each iteration is the *same* traced body as :func:`decode_step`
+    followed by the same greedy argmax, so a fused chunk is token-for-token
+    identical to ``k`` stepwise calls.
+
+    ``token``: (B,) int32 — the last sampled token; ``pos``: scalar int32
+    (current length; advances by one per step inside the scan).  Returns
+    ``(tokens (B, k), updated caches)``.
+    """
+    def body(carry, i):
+        tok, c = carry
+        logits, c = decode_step(cfg, params, c, tok, pos + i,
+                                long_mode=long_mode)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, c), nxt
+
+    (_, new_caches), toks = jax.lax.scan(
+        body, (token, caches), jnp.arange(k, dtype=jnp.int32))
+    return jnp.swapaxes(toks, 0, 1), new_caches
+
+
 # ---------------------------------------------------- paged decode step
 
 def paged_supported(cfg: ArchConfig) -> bool:
@@ -596,25 +628,22 @@ def paged_supported(cfg: ArchConfig) -> bool:
             and not RF.FLAGS.kv_cache_int8)
 
 
-def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
-                      block_tables: jax.Array, lengths: jax.Array,
-                      token: jax.Array) -> Tuple[jax.Array, Any]:
-    """One lockstep decode step over *every slot* of a paged replica.
-
-    ``pools`` is a per-period-layer list of ``{"k","v"}`` block pools with
-    leaves ``(n_periods, num_blocks, block_size, KV, D)``;
-    ``block_tables`` is ``(S, blocks_per_seq)`` int32; ``lengths`` is
-    ``(S,)`` — the new token of slot ``s`` lands at cache position
-    ``lengths[s]`` (block ``tables[s, lengths[s] // bs]``).  Empty slots
-    pass ``lengths == 0`` with tables pointing at the reserved scratch
-    block; their lanes compute garbage that callers never read.  Returns
-    ``(logits (S, vocab), new_pools)``.
-
-    The layer loop is a plain Python loop (not the period scan): the paged
-    pools must update in place per period via ``.at[]`` indexed writes, and
-    engine archs are reduced-depth so the O(depth) HLO is cheap.
-    """
-    assert paged_supported(cfg), f"{cfg.name}: unsupported paged arch"
+def _paged_decode_core(cfg: ArchConfig, params: PyTree, pools,
+                       block_tables: jax.Array, lengths: jax.Array,
+                       token: jax.Array, blk: jax.Array,
+                       live: jax.Array) -> Tuple[jax.Array, Any]:
+    """Shared body of the paged decode step: one token per slot, with the
+    new K/V landing in block ``blk[s]`` at offset ``lengths[s] % bs``.
+    Callers compute ``blk`` — the single-step entry derives it from
+    ``lengths``; the horizon-fused entry computes it *once* per chunk
+    (chunks never cross a block boundary, so each slot's write block is
+    loop-invariant across the scan).  ``live`` (S,) bool marks occupied
+    slots: every empty slot's table points at the shared scratch block, so
+    their writes collide on the same pool position — a duplicate-index
+    scatter whose winner XLA leaves unspecified.  Zeroing the dead lanes'
+    K/V makes every colliding writer write the same value, so pool
+    contents (and hence every downstream token) are deterministic whatever
+    scatter order the backend picks."""
     s = token.shape[0]
     bs = pools[0]["k"].shape[2]
     mb = block_tables.shape[1]
@@ -622,9 +651,8 @@ def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
     if cfg.scale_embed:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     positions = lengths[:, None]                               # (S, 1)
-    rows = jnp.arange(s)
-    blk = block_tables[rows, lengths // bs]                    # (S,)
     off = lengths % bs
+    lane = live[:, None, None]                                 # (S, 1, 1)
     new_pools = [dict(p) for p in pools]
     for pi in range(cfg.n_periods):
         for i, desc in enumerate(cfg.period):
@@ -632,9 +660,9 @@ def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
             h = L.apply_norm(cfg, p["pre_norm"], x)
             q, k, v = L.project_qkv(cfg, p["mixer"], h, positions)
             kp = new_pools[i]["k"].at[pi, blk, off].set(
-                k[:, 0].astype(new_pools[i]["k"].dtype))
+                jnp.where(lane, k[:, 0], 0).astype(new_pools[i]["k"].dtype))
             vp = new_pools[i]["v"].at[pi, blk, off].set(
-                v[:, 0].astype(new_pools[i]["v"].dtype))
+                jnp.where(lane, v[:, 0], 0).astype(new_pools[i]["v"].dtype))
             new_pools[i] = {"k": kp, "v": vp}
             if RF.FLAGS.use_pallas_attention:
                 from repro.kernels.paged_attention.ops import (
@@ -658,3 +686,62 @@ def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
                 x = x + y
     logits = _logits(cfg, params, x)[:, 0]
     return logits, new_pools
+
+
+def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
+                      block_tables: jax.Array, lengths: jax.Array,
+                      token: jax.Array) -> Tuple[jax.Array, Any]:
+    """One lockstep decode step over *every slot* of a paged replica.
+
+    ``pools`` is a per-period-layer list of ``{"k","v"}`` block pools with
+    leaves ``(n_periods, num_blocks, block_size, KV, D)``;
+    ``block_tables`` is ``(S, blocks_per_seq)`` int32; ``lengths`` is
+    ``(S,)`` — the new token of slot ``s`` lands at cache position
+    ``lengths[s]`` (block ``tables[s, lengths[s] // bs]``).  Empty slots
+    pass ``lengths == 0`` with tables pointing at the reserved scratch
+    block; their lanes compute garbage that callers never read.  Returns
+    ``(logits (S, vocab), new_pools)``.
+
+    The layer loop is a plain Python loop (not the period scan): the paged
+    pools must update in place per period via ``.at[]`` indexed writes, and
+    engine archs are reduced-depth so the O(depth) HLO is cheap.
+    """
+    assert paged_supported(cfg), f"{cfg.name}: unsupported paged arch"
+    bs = pools[0]["k"].shape[2]
+    rows = jnp.arange(token.shape[0])
+    blk = block_tables[rows, lengths // bs]                    # (S,)
+    return _paged_decode_core(cfg, params, pools, block_tables, lengths,
+                              token, blk, lengths > 0)
+
+
+def paged_decode_steps(cfg: ArchConfig, params: PyTree, pools,
+                       block_tables: jax.Array, lengths: jax.Array,
+                       token: jax.Array, *, k: int) -> Tuple[jax.Array, Any]:
+    """``k`` greedy lockstep steps over a paged replica inside one jit.
+
+    Contract: **no slot crosses a block boundary within the chunk** — the
+    caller splits chunks at ``block_size - lengths % block_size`` (see
+    ``PagedEngineCache.steps_to_boundary``), so each slot's write block is
+    computed once and only the in-block offset (and the attention length)
+    advances inside the scan.  Pools ride the scan carry; sampled tokens
+    accumulate on-device.  Each iteration is the same traced body as
+    :func:`paged_decode_step` + the same greedy argmax, so fused ≡ stepwise
+    token-for-token.  Returns ``(tokens (S, k), new_pools)``.
+    """
+    assert paged_supported(cfg), f"{cfg.name}: unsupported paged arch"
+    bs = pools[0]["k"].shape[2]
+    rows = jnp.arange(token.shape[0])
+    blk = block_tables[rows, lengths // bs]        # fixed for the chunk
+    live = lengths > 0   # occupancy at chunk start (empty lanes' in-scan
+                         # lengths tick up from 0 but the slots stay dead)
+
+    def body(carry, i):
+        tok, p = carry
+        logits, p = _paged_decode_core(cfg, params, p, block_tables,
+                                       lengths + i, tok, blk, live)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, p), nxt
+
+    (_, new_pools), toks = jax.lax.scan(
+        body, (token, pools), jnp.arange(k, dtype=jnp.int32))
+    return jnp.swapaxes(toks, 0, 1), new_pools

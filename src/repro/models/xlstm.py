@@ -9,6 +9,12 @@ it.  The sLSTM's memory mixing is genuinely sequential → ``jax.lax.scan``.
 
 All gating is max-stabilized: forget gates are sigmoid (log f = -softplus(-f̃)),
 input gates exponential, with running stabilizer m.
+
+Decode-state contract (horizon-fused decode): both blocks' states are
+fixed-shape fp32 pytrees — mLSTM ``{"c","n","m"}``, sLSTM
+``{"c","n","h","m"}`` — stable under repeated single-token application, so
+they ride a ``jax.lax.scan`` carry and ``transformer.decode_steps`` can
+fuse k recurrent steps into one jit.
 """
 from __future__ import annotations
 

@@ -46,7 +46,9 @@ class Executor(abc.ABC):
 
     ``max_steps_per_event`` bounds how many lockstep decode steps the
     scheduler may fast-forward per event: unbounded for analytical backends
-    (O(#requests) events), 1 for real engines (every token is a real call).
+    (O(#requests) events), ``fused_steps`` for real engines (the whole
+    chunk executes as one horizon-fused device call — see
+    :class:`EngineExecutor`).
 
     ``concurrent`` declares the backend's threading contract: when True the
     runtime may run :meth:`prefill` / :meth:`decode` on per-replica worker
@@ -204,9 +206,23 @@ class EngineExecutor(Executor):
     replica owns real block pools and per-sequence block tables
     (:class:`PagedEngineCache`) and decodes every live sequence — across
     admission cohorts — in one shape-stable lockstep call.
+
+    Decode is **horizon-fused**: the scheduler may hand :meth:`decode` a
+    chunk of up to ``fused_steps`` lockstep steps (it already clamps the
+    chunk at arrivals, barriers, quotas, and the KV block budget — and
+    pre-reserves the chunk's block growth, so preemption decisions are
+    identical to stepwise execution).  The engine runs the whole chunk
+    on-device via scan-based multi-step decode and the executor performs
+    **one host sync and one ``(B, k)`` token transfer per event** instead
+    of one per token; paged replicas additionally split the chunk at KV
+    block boundaries (each fused scan keeps every slot's write block
+    fixed).  ``fused_steps=1`` restores the legacy one-token-per-event
+    behavior with byte-identical token streams and admission logs — the
+    fused scan body is the same traced step, so fusion changes dispatch
+    count, never tokens.
     """
 
-    max_steps_per_event = 1
+    DEFAULT_FUSED_STEPS = 16
 
     def __init__(self, plan: ServingPlan | Sequence[Config],
                  arch_cfgs: Sequence, *,
@@ -216,6 +232,7 @@ class EngineExecutor(Executor):
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  engine_block_size: int = DEFAULT_ENGINE_BLOCK_SIZE,
                  paged: Optional[bool] = None, concurrent: bool = True,
+                 fused_steps: Optional[int] = None,
                  seed: int = 0):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
         self.arch_cfgs = list(arch_cfgs)
@@ -228,6 +245,8 @@ class EngineExecutor(Executor):
         self.engine_block_size = engine_block_size
         self.paged_enabled = paged
         self.concurrent = concurrent
+        self.max_steps_per_event = max(1, int(
+            self.DEFAULT_FUSED_STEPS if fused_steps is None else fused_steps))
         self.engines: List = []
         self.configs: List[Config] = []
         self.kv_managers: List[Optional[KVCacheManager]] = []
@@ -402,12 +421,11 @@ class EngineExecutor(Executor):
         return [elapsed] * b
 
     def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
-        """EMA of this replica's measured lockstep decode durations (0.0
-        until the first decode) instead of the old constant 0.0.  With
-        ``max_steps_per_event=1`` the scheduler's chunk clamps are already
-        at one step, so today this feeds the autoscaler's snapshots and
-        ``info["per_replica"]["step_time_s"]``; a backend that raises
-        ``max_steps_per_event`` gets real arrival/barrier clamps for free."""
+        """Per-step EMA of this replica's measured decode durations (0.0
+        until the first decode): fused chunk durations are normalized by
+        their step count before entering the EMA, so the scheduler's
+        arrival/barrier clamps and the autoscaler's snapshots always see
+        seconds *per token*, whatever the fusion factor."""
         return self._step_ema[rep]
 
     def step_time_estimate(self, rep: int) -> float:
@@ -423,27 +441,46 @@ class EngineExecutor(Executor):
 
     def decode(self, rep: int, states: Sequence[RequestState], k: int,
                step_time: float) -> float:
+        """Run the scheduler's ``k``-step lockstep chunk fused on-device:
+        one host sync and one ``(B, k)`` token transfer per event (per
+        cohort on non-paged archs), with the measured chunk duration
+        normalized to per-step before it feeds the EMA."""
         import jax
+        import jax.numpy as jnp
         del step_time     # predicted (EMA); the clock uses measured wall time
-        assert k == 1, "EngineExecutor decodes one real token per event"
+        k = max(1, int(k))
+        engine = self.engines[rep]
         paged = self._paged[rep]
         if paged is not None:
             assert {s.req.req_id for s in states} == set(paged._slot_of), \
                 "paged decode expects the replica's full active set"
             pools, tables, lengths, toks = paged.step_args()
             t0 = time.perf_counter()
-            tok, new_pools = self.engines[rep].paged_decode(
-                pools, tables, lengths, toks)
-            jax.block_until_ready(tok)
+            blocks = []
+            done = 0
+            while done < k:
+                # each fused scan keeps every slot inside its current KV
+                # block; chunks split at the earliest boundary crossing
+                sub = min(k - done, paged.steps_to_boundary())
+                tok_blk, pools = engine.paged_decode_k(
+                    pools, tables, lengths, toks, sub)
+                blocks.append(tok_blk)
+                toks = tok_blk[:, -1]
+                paged.advance(sub)
+                lengths = jnp.asarray(paged.lengths)
+                done += sub
+            all_toks = (blocks[0] if len(blocks) == 1
+                        else jnp.concatenate(blocks, axis=1))
+            jax.block_until_ready(all_toks)
             elapsed = time.perf_counter() - t0
-            paged.commit_step(tok, new_pools)
-            slot_tok = np.asarray(tok)
+            slot_tok = np.asarray(all_toks)        # one (S, k) transfer
+            paged.commit_chunk(slot_tok[:, -1], pools)
             for s in states:
-                self._log_token(s.req.req_id,
-                                slot_tok[paged.slot_of(s.req.req_id)])
-            self._gen_tokens[rep] += len(states)
+                for t in slot_tok[paged.slot_of(s.req.req_id)]:
+                    self._log_token(s.req.req_id, t)
+            self._gen_tokens[rep] += len(states) * k
             self._compute_s[rep] += elapsed
-            self._record_step(rep, elapsed)
+            self._record_step(rep, elapsed / k)
             return elapsed
         ids = {s.req.req_id for s in states}
         total = 0.0
@@ -452,20 +489,20 @@ class EngineExecutor(Executor):
             if not live:
                 continue
             t0 = time.perf_counter()
-            tok, caches = self.engines[rep].decode_batch(g.caches, g.tok,
-                                                         g.pos)
-            jax.block_until_ready(tok)
+            toks, caches = engine.decode_batch_k(g.caches, g.tok, g.pos, k)
+            jax.block_until_ready(toks)
             elapsed = time.perf_counter() - t0
-            g.tok, g.caches, g.pos = tok, caches, g.pos + 1
-            lane_tok = np.asarray(tok)
+            g.tok, g.caches, g.pos = toks[:, -1], caches, g.pos + k
+            lane_tok = np.asarray(toks)            # one (B, k) transfer
             for lane, rid in enumerate(g.order):
                 if rid in g.req_ids and rid in ids:
-                    self._log_token(rid, lane_tok[lane])
-            self._gen_tokens[rep] += live
+                    for t in lane_tok[lane]:
+                        self._log_token(rid, t)
+            self._gen_tokens[rep] += live * k
             self._compute_s[rep] += elapsed
             total += elapsed
         if total > 0:
-            self._record_step(rep, total)
+            self._record_step(rep, total / k)
         return total
 
     def release(self, rep: int, state: RequestState) -> None:

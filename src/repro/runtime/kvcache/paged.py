@@ -12,8 +12,11 @@ block table in one shape-stable lockstep call — continuous batching across
 admission cohorts at the *tensor* level, not just the scheduler level.
 
 Physical block id 0 is a reserved scratch block: empty slots' tables point
-at it, so the masked writes of inactive lanes land somewhere harmless and
-the decode step never needs a gather-free special case.
+at it, so the writes of inactive lanes land somewhere harmless and the
+decode step never needs a gather-free special case.  (The decode core
+zeroes dead lanes' K/V before the scatter — colliding scratch writes all
+write the same value, keeping pool contents deterministic whatever scatter
+order XLA picks; see ``transformer._paged_decode_core``.)
 
 Slots are runtime-scale (``t_max`` = prompt + generated tokens on this
 container), so the pool is sized to hold every slot at full length —
@@ -117,14 +120,38 @@ class PagedEngineCache:
         return (self.pools, jnp.asarray(self.tables),
                 jnp.asarray(self.lengths), jnp.asarray(self.tokens))
 
+    def steps_to_boundary(self) -> int:
+        """Lockstep steps until the first occupied slot crosses into its
+        next block — the fused-decode chunk cap: within one fused chunk
+        every slot's write block stays fixed, so the scan only advances
+        the in-block offset (``transformer.paged_decode_steps`` contract).
+        Empty slots sit at length 0 (a full block of scratch headroom), so
+        the cap is never below 1 and never above ``block_size``."""
+        bs = self.block_size
+        dists = [bs - int(self.lengths[slot]) % bs
+                 for slot in self._slot_of.values()]
+        return min(dists, default=bs)
+
+    def advance(self, k: int) -> None:
+        """Every occupied slot consumed ``k`` more cache positions (called
+        per fused sub-chunk, *before* the tokens are ever read back)."""
+        for slot in self._slot_of.values():
+            self.lengths[slot] += k
+
+    def commit_chunk(self, last_tokens, new_pools) -> None:
+        """Record a fused chunk's results — lengths were already advanced
+        via :meth:`advance`; adopt the pools and each occupied slot's
+        newest token (``last_tokens`` is host-side, (S,))."""
+        self.pools = new_pools
+        toks = np.asarray(last_tokens)
+        for slot in self._slot_of.values():
+            self.tokens[slot] = toks[slot]
+
     def commit_step(self, new_tokens, new_pools) -> None:
         """Record one decode step's results: every *occupied* slot consumed
         one cache position and produced one token."""
-        self.pools = new_pools
-        toks = np.asarray(new_tokens)
-        for slot in self._slot_of.values():
-            self.lengths[slot] += 1
-            self.tokens[slot] = toks[slot]
+        self.advance(1)
+        self.commit_chunk(new_tokens, new_pools)
 
     # ------------------------------------------------------------ release
 

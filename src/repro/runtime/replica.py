@@ -18,7 +18,12 @@ Semantics (inherited from the validated simulator, now shared):
 * decode advances the whole active batch in lockstep steps; the scheduler
   fast-forwards at most ``executor.max_steps_per_event`` steps, never
   overshoots the next queued arrival (so admission happens mid-flight),
-  and never outgrows the block pool: when the next step does not fit, one
+  and never outgrows the block pool.  The chosen chunk ``k`` is the
+  *fused-decode horizon*: a real engine executes all ``k`` steps in one
+  on-device call (``EngineExecutor`` with ``fused_steps > 1``), so the
+  chunk's KV growth is reserved up front (``mgr.grow(... + k)`` below) —
+  preemption and admission decisions land at the same token positions as
+  stepwise execution.  When the next step does not fit, one
   request is **preempted by recompute** — its blocks are freed and it
   re-enters the queue to prefill again later (recorded in
   ``RequestState.preemptions``).  The victim is chosen by
@@ -225,6 +230,16 @@ class ReplicaRuntime:
             if until < math.inf and t_step > 0:
                 k = max(1, min(k, int((until - self.now)
                                       / max(t_step, 1e-12)) + 1))
+            if k > 1 and t_step <= 0.0 and (
+                    until < math.inf
+                    or (self.queue
+                        and self.queue[0].req.arrival > self.now)):
+                # No step-time estimate yet (a real engine's first chunk):
+                # the arrival/barrier clamps above are inoperative, so a
+                # fused chunk would blast past a pending arrival or replan
+                # barrier.  Take one measured step instead; from the next
+                # event the EMA drives the clamps.
+                k = 1
             if mgr is None:
                 break
             k_fit = mgr.feasible_steps(batch_tokens(batch), k)

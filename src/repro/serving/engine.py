@@ -3,7 +3,10 @@
 The engine executes real token generation (used by the CPU end-to-end
 examples and the runtime tests).  Requests are bucketed by prompt length so a
 batch shares one prefill shape; decode runs greedy with a shared position
-counter (continuous batching across buckets happens in the server layer).
+counter (continuous batching across buckets happens in the server layer) and
+is *horizon-fused*: ``decode_batch_k`` / ``paged_decode_k`` run a whole
+k-step chunk on-device as power-of-two ``lax.scan`` jit pieces, returning
+the ``(B, k)`` token block for a single host transfer per chunk.
 """
 from __future__ import annotations
 
@@ -34,6 +37,19 @@ def bucket_t_max(t_max: int) -> int:
     while b < t_max:
         b *= 2
     return b
+
+
+def pow2_chunks(k: int) -> List[int]:
+    """Binary decomposition of ``k`` into powers of two, largest first
+    (13 -> [8, 4, 1]).  Fused decode runs one jit'd scan per piece, so an
+    arbitrary chunk length costs O(log k) dispatches against O(log k)
+    cached compilations — never a fresh compile per distinct k."""
+    out: List[int] = []
+    while k > 0:
+        c = 1 << (k.bit_length() - 1)
+        out.append(c)
+        k -= c
+    return out
 
 
 # Jitted callables are pure in (params, inputs), so replicas of the same
@@ -124,6 +140,32 @@ class ReplicaEngine:
                                     jnp.asarray(pos, jnp.int32))
         return M.greedy_sample(logits), caches
 
+    def _steps_fn(self, k: int):
+        """Compiled k-step fused decode (scan over :func:`M.decode_steps`),
+        shared across same-arch replicas like every other jit here."""
+        return _shared_jit(
+            ("steps", self.cfg, self.long_mode, k),
+            lambda: jax.jit(functools.partial(M.decode_steps, self.cfg,
+                                              k=k, long_mode=self.long_mode)))
+
+    def decode_batch_k(self, caches, tok: jax.Array, pos: int, k: int):
+        """``k`` greedy lockstep steps with O(log k) jit dispatches and no
+        host syncs: the horizon is split into power-of-two pieces
+        (:func:`pow2_chunks`), each one ``lax.scan`` inside one jit, the
+        last token of each piece feeding the next on-device.  Returns
+        ``(tokens (B, k) device array, caches)`` — callers transfer the
+        whole block with a single ``np.asarray``."""
+        blocks = []
+        p = int(pos)
+        for kk in pow2_chunks(max(1, int(k))):
+            toks, caches = self._steps_fn(kk)(self.params, caches, tok,
+                                              jnp.asarray(p, jnp.int32))
+            blocks.append(toks)
+            tok = toks[:, -1]
+            p += kk
+        toks = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, 1)
+        return toks, caches
+
     @property
     def paged_supported(self) -> bool:
         return M.paged_supported(self.cfg)
@@ -142,10 +184,45 @@ class ReplicaEngine:
                                          lengths, tok)
         return M.greedy_sample(logits), pools
 
+    def _paged_steps_fn(self, k: int):
+        return _shared_jit(
+            ("paged_steps", self.cfg, k),
+            lambda: jax.jit(functools.partial(M.paged_decode_steps,
+                                              self.cfg, k=k)))
+
+    def paged_decode_k(self, pools, block_tables: jax.Array,
+                       lengths: jax.Array, tok: jax.Array, k: int):
+        """``k`` fused greedy lockstep steps over every slot of a paged
+        replica (power-of-two jit pieces, see :meth:`decode_batch_k`).
+
+        Caller contract: **no slot may cross a block boundary within the
+        chunk** — split at ``PagedEngineCache.steps_to_boundary()`` first.
+        Returns ``(tokens (S, k) device array, new_pools)``."""
+        blocks = []
+        live = lengths > 0
+        done = 0
+        for kk in pow2_chunks(max(1, int(k))):
+            # advance only occupied lanes between pieces: empty slots must
+            # stay at length 0 so each piece's dead-lane zeroing (and the
+            # scratch-write determinism it guarantees) keeps seeing them
+            # as empty
+            stepped = jnp.where(live, lengths + done, lengths)
+            toks, pools = self._paged_steps_fn(kk)(
+                self.params, pools, block_tables, stepped, tok)
+            blocks.append(toks)
+            tok = toks[:, -1]
+            done += kk
+        toks = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, 1)
+        return toks, pools
+
     def generate(self, prompts: jax.Array, max_new: int,
                  prefix_embeds: Optional[jax.Array] = None
                  ) -> GenerationResult:
-        """prompts: (B, S) int32.  Greedy decode for max_new tokens."""
+        """prompts: (B, S) int32.  Greedy decode for max_new tokens.
+
+        Decode is horizon-fused (:meth:`decode_batch_k`): tokens accumulate
+        on-device and the whole (B, max_new) block crosses to the host in
+        one transfer — not one ``np.asarray`` per token."""
         b, s = prompts.shape
         n_prefix = prefix_embeds.shape[1] if prefix_embeds is not None else 0
         t_max = s + n_prefix + max_new
@@ -153,12 +230,13 @@ class ReplicaEngine:
         tok, caches = self.prefill_batch(prompts, t_max, prefix_embeds)
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
-        out = [tok]
-        pos = s + n_prefix
-        for i in range(max_new - 1):
-            tok, caches = self.decode_batch(caches, tok, pos + i)
-            out.append(tok)
-        jax.block_until_ready(tok)
+        if max_new > 1:
+            toks, caches = self.decode_batch_k(caches, tok, s + n_prefix,
+                                               max_new - 1)
+            out = jnp.concatenate([tok[:, None], toks], axis=1)
+        else:
+            out = tok[:, None]
+        jax.block_until_ready(out)
         t2 = time.perf_counter()
-        return GenerationResult(tokens=np.stack([np.asarray(t) for t in out], 1),
+        return GenerationResult(tokens=np.asarray(out),
                                 prefill_s=t1 - t0, decode_s=t2 - t1)

@@ -42,12 +42,14 @@ class HeterogeneousServer:
     def __init__(self, plan: ServingPlan, arch_cfgs: Sequence[ArchConfig],
                  *, params_per_model: Optional[Dict[int, object]] = None,
                  max_batch: int = 8, models=None,
-                 paged: Optional[bool] = None, concurrent: bool = True):
+                 paged: Optional[bool] = None, concurrent: bool = True,
+                 fused_steps: Optional[int] = None):
         self.plan = plan
         self.executor = EngineExecutor(plan, arch_cfgs,
                                        params_per_model=params_per_model,
                                        models=models, max_batch=max_batch,
-                                       paged=paged, concurrent=concurrent)
+                                       paged=paged, concurrent=concurrent,
+                                       fused_steps=fused_steps)
 
     @property
     def engines(self):

@@ -1,0 +1,247 @@
+"""Horizon-fused decode tests: k fused greedy steps inside one jit must be
+token-for-token identical to k stepwise calls — at the model layer (dense
+ring caches, paged block pools, recurrent/hybrid state carries) and at the
+runtime layer (identical token streams, admission logs, and preemption
+counts for ``fused_steps=16`` vs ``fused_steps=1``, in both drive modes).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import Request, Trace
+from repro.runtime import CostModelExecutor, EngineExecutor, ServingRuntime
+from repro.serving.engine import pow2_chunks
+
+BS = 16
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+BLOCK_BYTES = BS * TINY.kv_bytes_per_token
+
+# one arch per decode-path family: pure-attention (paged pools), hybrid
+# attention+Mamba, and recurrent xLSTM — all must fuse token-exactly
+ARCHS = ["llama3-8b", "jamba-v0.1-52b", "xlstm-125m"]
+
+
+def _replica(num_blocks: int) -> Config:
+    free = (num_blocks + 0.5) * BLOCK_BYTES
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("kv-test", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x")
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(config: Config, n_requests: int, replicas: int = 1) -> ServingPlan:
+    return ServingPlan(replicas=[config] * replicas,
+                       assignment=np.full((replicas, 1), 1.0 / replicas),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=config.cost * replicas)
+
+
+def _requests(n, input_len=20, output_len=4, arrival=0.0):
+    return [Request(req_id=i, workload=0, input_len=input_len,
+                    output_len=output_len, arrival=arrival)
+            for i in range(n)]
+
+
+# ----------------------------------------------------------- unit helpers
+
+def test_pow2_chunks_cover_exactly():
+    for k in range(1, 40):
+        chunks = pow2_chunks(k)
+        assert sum(chunks) == k
+        assert all(c & (c - 1) == 0 for c in chunks)       # powers of two
+        assert chunks == sorted(chunks, reverse=True)
+
+
+def test_steps_to_boundary_tracks_occupied_slots():
+    from repro.configs import get_config
+    from repro.runtime.kvcache.paged import PagedEngineCache
+    cfg = get_config("llama3-8b").reduced()
+    paged = PagedEngineCache(cfg, num_slots=2, t_max=20, block_size=8)
+    assert paged.steps_to_boundary() == 8          # empty: full scratch block
+    paged._slot_of = {1: 0}
+    paged.lengths[0] = 13                          # 3 tokens to the boundary
+    assert paged.steps_to_boundary() == 3
+    paged.advance(3)
+    assert paged.lengths[0] == 16
+    assert paged.steps_to_boundary() == 8
+
+
+# ------------------------------------------------- model-level equivalence
+
+@pytest.mark.parametrize("arch_name", ARCHS)
+def test_decode_steps_matches_stepwise(arch_name):
+    """k fused steps (one scan) ≡ k single steps: identical greedy tokens
+    and numerically identical caches, for every mixer family."""
+    from repro.configs import get_config
+    from repro.serving.engine import ReplicaEngine
+    cfg = get_config(arch_name).reduced()
+    eng = ReplicaEngine(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    tok, caches = eng.prefill_batch(prompts, 8 + 8)
+    tok_s, caches_s, steps = tok, caches, []
+    for i in range(5):
+        tok_s, caches_s = eng.decode_batch(caches_s, tok_s, 8 + i)
+        steps.append(np.asarray(tok_s))
+    fused, caches_f = eng.decode_batch_k(caches, tok, 8, 5)   # 4 + 1 pieces
+    np.testing.assert_array_equal(np.stack(steps, 1), np.asarray(fused))
+    for a, b in zip(jax.tree.leaves(caches_s), jax.tree.leaves(caches_f)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_steps_matches_stepwise():
+    """Fused paged decode (block-boundary-split chunks) ≡ stepwise paged
+    decode across a boundary crossing."""
+    from repro.configs import get_config
+    from repro.runtime.kvcache.paged import PagedEngineCache
+    from repro.serving.engine import ReplicaEngine
+    cfg = get_config("llama3-8b").reduced()
+    eng = ReplicaEngine(cfg, seed=0)
+    paged = PagedEngineCache(cfg, num_slots=2, t_max=8 + 12, block_size=8)
+    rng = np.random.default_rng(2)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    tok, caches = eng.prefill_batch(prompts, 8)
+    paged.admit_cohort([10, 11], caches, np.asarray(tok), 8)
+    pools0, tables, lengths, toks = paged.step_args()
+
+    pl, ls, tk, step_toks = pools0, lengths, toks, []
+    for _ in range(10):
+        t1, pl = eng.paged_decode(pl, tables, ls, tk)
+        step_toks.append(np.asarray(t1))
+        tk, ls = t1, ls + 1
+
+    pl2, tk2 = pools0, toks
+    ls_host = np.asarray(paged.lengths).copy()
+    blocks, done, subs = [], 0, []
+    while done < 10:
+        sub = min(10 - done,
+                  min(8 - int(ls_host[s]) % 8 for s in (0, 1)))
+        tb, pl2 = eng.paged_decode_k(pl2, tables, jnp.asarray(ls_host),
+                                     tk2, sub)
+        blocks.append(np.asarray(tb))
+        tk2 = tb[:, -1]
+        ls_host[:2] += sub
+        done += sub
+        subs.append(sub)
+    assert subs == [8, 2]                  # split exactly at the boundary
+    np.testing.assert_array_equal(np.stack(step_toks, 1),
+                                  np.concatenate(blocks, 1))
+
+
+# ----------------------------------------------- runtime-level equivalence
+
+def _serve(arch_name, *, fused_steps, mode, paged=None, concurrent=False,
+           replicas=1, n=5, max_batch=2, output_len=5, max_new=6):
+    """One engine-backend run; returns (token_log, admission_logs,
+    preemptions-by-request, completed)."""
+    from repro.configs import get_config
+    cfg = _replica(num_blocks=50)
+    reqs = _requests(n, output_len=output_len)
+    trace = Trace("fuse", tuple(reqs))
+    plan = _plan(cfg, n, replicas=replicas)
+    executor = EngineExecutor(plan, [get_config(arch_name).reduced()],
+                              models=[TINY], max_batch=max_batch,
+                              input_len=8, max_new=max_new, paged=paged,
+                              concurrent=concurrent,
+                              fused_steps=fused_steps)
+    runtime = ServingRuntime(plan, executor, mode=mode)
+    res = runtime.run(trace)
+    assert res.num_completed == n
+    return (executor.token_log,
+            [r.admission_log for r in runtime.replicas],
+            {r.req.req_id: r.preemptions for r in res.records})
+
+
+FAMILIES = [
+    ("llama3-8b", None),        # pure attention -> paged block pools
+    ("llama3-8b", False),       # same arch, dense per-cohort caches
+    ("xlstm-125m", None),       # recurrent states (paged unsupported)
+]
+
+
+@pytest.mark.parametrize("arch_name,paged", FAMILIES,
+                         ids=["paged", "dense", "recurrent"])
+@pytest.mark.parametrize("mode", ["sequential", "events"])
+def test_fused_runtime_matches_stepwise(arch_name, paged, mode):
+    """fused_steps=16 vs fused_steps=1 through the full serving runtime:
+    byte-identical token streams, admission cohorts, and preemption counts
+    — fusion changes dispatch count, never scheduling or tokens."""
+    stepwise = _serve(arch_name, fused_steps=1, mode=mode, paged=paged)
+    fused = _serve(arch_name, fused_steps=16, mode=mode, paged=paged)
+    assert fused[0] == stepwise[0]          # token streams
+    assert fused[1] == stepwise[1]          # admission logs
+    assert fused[2] == stepwise[2]          # preemptions
+
+
+def test_fused_concurrent_matches_stepwise_sequential():
+    """Fused chunks + concurrent per-replica workers (2 replicas) still
+    reproduce the stepwise sequential token streams."""
+    stepwise = _serve("llama3-8b", fused_steps=1, mode="sequential",
+                      replicas=2, n=6)
+    fused = _serve("llama3-8b", fused_steps=16, mode="events",
+                   concurrent=True, replicas=2, n=6)
+    assert fused[0] == stepwise[0]
+    assert fused[1] == stepwise[1]
+    assert fused[2] == stepwise[2]
+
+
+def test_fused_preemption_matches_cost_backend():
+    """The KV-overflow acceptance trace (cost vs engine identical admission
+    / preemption) must hold with fused chunks: the scheduler pre-reserves
+    the fused horizon's block growth, so preemption decisions are
+    position-identical to stepwise execution."""
+    from repro.configs import get_config
+    cfg = _replica(num_blocks=5)
+    reqs = _requests(3, input_len=30, output_len=4)
+    trace = Trace("overflow", tuple(reqs))
+    plan = _plan(cfg, 3)
+
+    cost_rt = ServingRuntime(plan, CostModelExecutor([cfg], [TINY]))
+    cost_res = cost_rt.run(trace)
+    assert cost_res.num_preemptions > 0
+
+    logs = {}
+    for fused_steps in (1, 16):
+        engine = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                                models=[TINY], max_batch=8, input_len=8,
+                                max_new=5, fused_steps=fused_steps)
+        rt = ServingRuntime(plan, engine)
+        res = rt.run(trace)
+        assert res.num_completed == 3
+        logs[fused_steps] = (
+            engine.token_log,
+            [r.admission_log for r in rt.replicas],
+            {r.req.req_id: r.preemptions for r in res.records})
+        assert (logs[fused_steps][1]
+                == [r.admission_log for r in cost_rt.replicas])
+        assert logs[fused_steps][2] == {
+            r.req.req_id: r.preemptions for r in cost_res.records}
+    assert logs[1] == logs[16]              # fused ≡ stepwise, tokens too
+
+
+def test_generate_single_transfer_tokens_deterministic():
+    """Satellite: ``ReplicaEngine.generate`` accumulates on-device and
+    returns the same greedy tokens as the stepwise decode loop."""
+    from repro.configs import get_config
+    from repro.serving.engine import ReplicaEngine
+    cfg = get_config("llama3-8b").reduced()
+    eng = ReplicaEngine(cfg, seed=0)
+    rng = np.random.default_rng(7)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    gen = eng.generate(prompts, max_new=6)
+    assert gen.tokens.shape == (2, 6)
+    tok, caches = eng.prefill_batch(prompts, 8 + 6)
+    out = [np.asarray(tok)]
+    for i in range(5):
+        tok, caches = eng.decode_batch(caches, tok, 8 + i)
+        out.append(np.asarray(tok))
+    np.testing.assert_array_equal(gen.tokens, np.stack(out, 1))

@@ -101,3 +101,44 @@ def test_budget_monotonicity(trace):
     t15 = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 15.0, tol=0.5).makespan
     t60 = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0, tol=0.5).makespan
     assert t60 <= t15 * 1.02
+
+
+def test_feasibility_accepts_time_limit_incumbent(trace, monkeypatch):
+    """HiGHS status 1 (time/iteration limit) with a feasible incumbent must
+    be accepted by solve_feasibility, exactly as solve_milp accepts (0, 1)
+    — rejecting it made binary search treat "slow to prove optimal" as
+    "infeasible" and silently degrade plans under tight time limits."""
+    from repro.core import build_problem, milp as milp_mod
+    from repro.core.milp import solve_feasibility
+
+    problem = build_problem([LLAMA3_70B], trace, GPU_CATALOG,
+                            AVAILABILITY_SNAPSHOTS["avail1"], budget=30.0)
+    t_hat = problem.makespan_upper_bound()        # generously feasible
+    witness = solve_feasibility(problem, t_hat)
+    assert witness is not None
+    y0, x0 = witness
+
+    real_milp = milp_mod.milp
+
+    class _TimeLimited:
+        def __init__(self, res):
+            self.status = 1                       # limit hit, incumbent kept
+            self.x = res.x
+            self.message = "time limit"
+
+    def fake_milp(*args, **kwargs):
+        return _TimeLimited(real_milp(*args, **kwargs))
+
+    monkeypatch.setattr(milp_mod, "milp", fake_milp)
+    witness1 = solve_feasibility(problem, t_hat)
+    assert witness1 is not None
+    np.testing.assert_allclose(witness1[0], y0)
+
+    # status 1 *without* an incumbent (x is None) must still return None
+    class _NoIncumbent:
+        status = 1
+        x = None
+        message = "time limit, no solution"
+
+    monkeypatch.setattr(milp_mod, "milp", lambda *a, **k: _NoIncumbent())
+    assert solve_feasibility(problem, t_hat) is None
