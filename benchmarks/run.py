@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_roofline        deliverable (g): dry-run roofline table
   bench_runtime_overlap concurrent vs sequential engine execution
   bench_decode_fusion   tokens/s vs decode fusion factor k (dense + paged)
+  bench_online_serving  live submit()/streaming session vs trace replay
 """
 from __future__ import annotations
 
@@ -42,6 +43,7 @@ MODULES = [
     "bench_roofline",
     "bench_runtime_overlap",
     "bench_decode_fusion",
+    "bench_online_serving",
 ]
 
 

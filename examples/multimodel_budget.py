@@ -1,41 +1,47 @@
 """Multi-model serving under one budget (App E) + budget-scaling study
 (App K): how the scheduler splits heterogeneous resources between Llama3-8B
 and Llama3-70B as the budget grows, and how the heterogeneity advantage
-varies with budget.
+varies with budget — one DeploymentSpec, swept with .with_budget().
 
     PYTHONPATH=src python examples/multimodel_budget.py
 """
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
-                        LLAMA3_70B, make_trace, simulate, solve,
-                        solve_homogeneous)
+                        LLAMA3_70B, DeploymentSpec, make_trace, plan,
+                        simulate)
 
 
 def main():
-    models = [LLAMA3_8B, LLAMA3_70B]
-    trace = make_trace("trace1", num_requests=600, model_mix=(0.8, 0.2),
-                       seed=0)
-    avail = AVAILABILITY_SNAPSHOTS["avail2"]
+    base = DeploymentSpec(
+        models=[LLAMA3_8B, LLAMA3_70B],
+        workload=make_trace("trace1", num_requests=600, model_mix=(0.8, 0.2),
+                            seed=0),
+        catalog=GPU_CATALOG,
+        availability=AVAILABILITY_SNAPSHOTS["avail2"],
+        budget=15.0,
+    )
 
     print(f"{'budget':>7} {'ours rps':>9} {'best-homo rps':>13} "
           f"{'8B share':>9} {'70B share':>10}  composition")
     for budget in (15.0, 30.0, 60.0):
-        plan = solve(models, trace, GPU_CATALOG, avail, budget)
-        ours = simulate(plan, trace, models).throughput
+        spec = base.with_budget(budget)
+        deployment = plan(spec)
+        ours = simulate(deployment, spec.workload, spec.models).throughput
         cost = {0: 0.0, 1: 0.0}
-        for cfg in plan.replicas:
+        for cfg in deployment.replicas:
             cost[cfg.model_index] += cfg.cost
         total = max(sum(cost.values()), 1e-9)
         best = 0.0
         for gpu in ("H100", "A6000", "4090"):
             try:
-                homo = solve_homogeneous(models, trace, GPU_CATALOG, gpu,
-                                         budget)
-                best = max(best, simulate(homo, trace, models).throughput)
+                homo = plan(spec, strategy="homogeneous", gpu_type=gpu)
+                best = max(best,
+                           simulate(homo, spec.workload,
+                                    spec.models).throughput)
             except (RuntimeError, ValueError):
                 continue
         print(f"{budget:>7.0f} {ours:>9.2f} {best:>13.2f} "
               f"{100*cost[0]/total:>8.1f}% {100*cost[1]/total:>9.1f}%  "
-              f"{plan.composition()}")
+              f"{deployment.composition()}")
 
 
 if __name__ == "__main__":

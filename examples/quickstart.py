@@ -1,33 +1,39 @@
-"""Quickstart: schedule a cost-efficient heterogeneous serving plan.
+"""Quickstart: declare a deployment, plan it, evaluate it.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Reproduces the paper's core loop in ~20 lines: take a workload trace, a
-real-time GPU availability snapshot, and a price budget; solve for the GPU
-composition + deployment configurations + workload assignment; evaluate the
-plan in the cluster simulator.
+Reproduces the paper's core loop in ~20 lines with the declarative API:
+describe *what* to serve (models, workload trace, GPU catalog, real-time
+availability snapshot, price budget) as a DeploymentSpec, hand it to
+plan() (the MILP planner; strategies "homogeneous" / "uniform" / "fixed"
+give the paper's baselines from the same spec), and evaluate the plan in
+the cluster simulator.
 """
 import sys
 
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_70B,
-                        make_trace, simulate, solve)
+                        DeploymentSpec, make_trace, plan, simulate)
 
 
 def main():
     budget = float(sys.argv[1]) if len(sys.argv) > 1 else 30.0
 
-    # 1. A workload trace: 1000 requests, Swiss-AI-Center mixture (Table 4).
-    trace = make_trace("trace1", num_requests=1000, seed=0)
+    # 1. Declare the deployment: a 1000-request Swiss-AI-Center trace
+    #    (Table 4) against the Vast.ai availability snapshot (Table 3).
+    spec = DeploymentSpec(
+        models=[LLAMA3_70B],
+        workload=make_trace("trace1", num_requests=1000, seed=0),
+        catalog=GPU_CATALOG,
+        availability=AVAILABILITY_SNAPSHOTS["avail1"],
+        budget=budget,
+    )
 
-    # 2. Real-time availability (paper Table 3, Vast.ai snapshot 1).
-    availability = AVAILABILITY_SNAPSHOTS["avail1"]
+    # 2. Plan: binary-search-on-T over the MILP (App F).
+    deployment = plan(spec)          # strategy="milp" is the default
+    print(deployment.summary())
 
-    # 3. Solve: binary-search-on-T over the MILP (App F).
-    plan = solve([LLAMA3_70B], trace, GPU_CATALOG, availability, budget)
-    print(plan.summary())
-
-    # 4. Evaluate with the event-driven cluster simulator.
-    result = simulate(plan, trace, [LLAMA3_70B])
+    # 3. Evaluate with the event-driven cluster simulator.
+    result = simulate(deployment, spec.workload, spec.models)
     print(f"\nsimulated: {result.throughput:.2f} req/s over "
           f"{result.makespan:.0f}s makespan")
     print("latency percentiles:",

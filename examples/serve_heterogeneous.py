@@ -1,50 +1,52 @@
 """End-to-end serving driver (the paper's kind of system is a *server*):
 
-  1. schedule a heterogeneous plan for a trace + budget (MILP core),
+  1. declare the deployment (DeploymentSpec) and plan it (MILP core),
   2. evaluate it against homogeneous baselines on the unified event-driven
      runtime (cost-model backend): streaming dispatch at arrival time,
      continuous batching, per-request TTFT/TPOT and goodput under an SLO,
-  3. EXECUTE the plan with real JAX model replicas through the *same*
-     runtime scheduler — the EngineExecutor generates real tokens batch-for-
-     batch with the plan evaluation (reduced-config Llama3 on CPU; full
-     configs are exercised by the multi-pod dry-run).  Replicas execute
-     CONCURRENTLY: the global event heap dispatches each replica's
-     prefill/decode calls onto per-replica actor workers,
+  3. open a LIVE SESSION over the plan — repro.serve(plan) — and submit
+     requests online: each submit() returns a handle whose .tokens()
+     iterator streams the engine's real tokens as its replica decodes
+     them, concurrently across replicas (reduced-config Llama3 on CPU;
+     set REPRO_EXAMPLES_BACKEND=cost for a token-free dry run, as the CI
+     examples-smoke job does),
   4. demonstrate ONLINE AUTOSCALING: a deliberately under-provisioned plan
-     served under a ScalePolicy that watches queue depth / KV watermark
-     and rents extra replicas mid-trace (cost-model backend).
+     served under a ScalePolicy built from the same spec
+     (ScalePolicy.from_spec), renting replicas back as the queue builds.
 
     PYTHONPATH=src python examples/serve_heterogeneous.py
 """
-from repro.configs import get_config
+import os
+
+import repro
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
-                        make_trace, simulate, solve, solve_homogeneous)
+                        DeploymentSpec, make_trace, plan, simulate)
 from repro.core.scheduler import ScalePolicy
 from repro.runtime import SLO, CostModelExecutor, ServingRuntime
-from repro.serving import HeterogeneousServer
 
 
 def main():
-    budget = 12.0
     trace = make_trace("trace3", num_requests=120, arrival_rate=4.0, seed=0)
-    avail = AVAILABILITY_SNAPSHOTS["avail2"]
     slo = SLO(ttft=20.0, tpot=0.5)
+    spec = DeploymentSpec(models=[LLAMA3_8B], workload=trace,
+                          catalog=GPU_CATALOG,
+                          availability=AVAILABILITY_SNAPSHOTS["avail2"],
+                          budget=12.0, slo=slo)
 
     print("== scheduling ==")
-    plan = solve([LLAMA3_8B], trace, GPU_CATALOG, avail, budget)
-    print(plan.summary())
+    deployment = plan(spec)
+    print(deployment.summary())
 
     print("\n== plan quality vs homogeneous baselines (runtime-predicted) ==")
-    ours = simulate(plan, trace, [LLAMA3_8B])
+    ours = simulate(deployment, trace, spec.models)
     print(f"ours      : {ours.throughput:.2f} req/s, p90 "
           f"{ours.percentile(90):.1f}s, ttft_p90 "
           f"{ours.ttft_percentile(90):.1f}s, goodput {ours.goodput(slo):.2f} "
           f"req/s ({100 * ours.slo_attainment(slo):.0f}% in SLO)")
     for gpu in ("H100", "A6000", "4090"):
         try:
-            homo = solve_homogeneous([LLAMA3_8B], trace, GPU_CATALOG, gpu,
-                                     budget)
-            sim = simulate(homo, trace, [LLAMA3_8B])
+            homo = plan(spec, strategy="homogeneous", gpu_type=gpu)
+            sim = simulate(homo, trace, spec.models)
             print(f"homo-{gpu:<6}: {sim.throughput:.2f} req/s, "
                   f"p90 {sim.percentile(90):.1f}s, "
                   f"goodput {sim.goodput(slo):.2f} req/s "
@@ -52,52 +54,51 @@ def main():
         except (RuntimeError, ValueError) as e:
             print(f"homo-{gpu:<6}: infeasible ({e})")
 
-    print("\n== executing the plan with real JAX replicas (concurrent) ==")
-    cfg = get_config("llama3-8b").reduced()
-    server = HeterogeneousServer(plan, [cfg], max_batch=8, concurrent=True)
-    stats = server.serve(trace, input_len=8, max_new=4)
-    res = stats.result
-    print(f"served {stats.completed} requests "
-          f"({stats.generated_tokens} tokens) on {len(plan.replicas)} "
-          f"replicas in {stats.wall_s:.1f}s -> {stats.tokens_per_s:.0f} tok/s")
-    print(f"requests per replica: {stats.per_replica_requests}")
-    print(f"executed ttft_p90 {res.ttft_percentile(90):.2f}s, "
-          f"tpot_p90 {res.tpot_percentile(90):.3f}s "
-          f"(same scheduler, measured step times)")
-    overlap = server.executor.compute_s / max(stats.wall_s, 1e-9)
-    print(f"overlap: {server.executor.compute_s:.1f}s of in-call compute in "
-          f"{stats.wall_s:.1f}s wall ({overlap:.2f}x — per-replica actor "
-          f"workers run prefill/decode in parallel)")
+    print("\n== live session: online submit() + token streaming ==")
+    backend = os.environ.get("REPRO_EXAMPLES_BACKEND", "engine")
+    if backend == "engine":
+        from repro.configs import get_config
+        cfg = get_config("llama3-8b").reduced()
+        session = repro.serve(deployment, arch_cfgs=[cfg], input_len=8,
+                              max_new=4, max_batch=8, slo=slo)
+    else:   # token-free capacity dry run through the identical session code
+        session = repro.serve(deployment, backend="cost", models=spec.models,
+                              slo=slo)
+    with session:
+        first = session.submit("why are heterogeneous GPUs cheaper?",
+                               workload=4, output_len=3)
+        streamed = list(first.tokens(timeout=300))
+        print(f"request 0 streamed {len(streamed)} tokens: {streamed}")
+        handles = [session.submit(workload=r.workload, input_len=r.input_len,
+                                  output_len=r.output_len)
+                   for r in trace.requests[:40]]
+        for h in handles:
+            h.result(timeout=300)
+    res = session.result
+    print(f"served {res.num_completed} requests live on "
+          f"{len(deployment.replicas)} replicas "
+          f"(ttft_p90 {res.ttft_percentile(90):.3f}s wall, "
+          f"{100 * res.slo_attainment(slo):.0f}% in SLO)")
+    print(f"request 0: ttft {first.ttft:.3f}s, tpot {first.tpot:.4f}s, "
+          f"slo_met={first.slo_met()}")
 
     print("\n== per-replica breakdown (result.info['per_replica']) ==")
-    # Both backends admit by block accounting against the same modeled HBM
-    # budget; the engine additionally decodes through real block pools.
     for row in res.info["per_replica"]:
-        i = row["replica"]
-        paged = server.executor._paged[i]
-        backing = (f"paged pool: {paged.num_blocks} x "
-                   f"{paged.block_size}-token blocks" if paged is not None
-                   else "dense cohort caches")
-        print(f"  [{i}] {row['config']}: busy {row['busy_s']:.1f}s, "
-              f"completed {row['completed']}, "
-              f"kv peak {row['kv_peak_blocks']}/{row['kv_blocks']} blocks — "
-              f"{backing}")
+        print(f"  [{row['replica']}] {row['config']}: "
+              f"busy {row['busy_s']:.2f}s, completed {row['completed']}, "
+              f"kv peak {row['kv_peak_blocks']}/{row['kv_blocks']} blocks")
     print(f"preemptions (recompute): {int(res.info.get('preemptions', 0))}")
 
-    print("\n== online autoscaling (utilization-driven) ==")
+    print("\n== online autoscaling (utilization-driven, same spec) ==")
     # Under-provision on purpose: keep only the first replica, then let the
     # ScalePolicy rent the rest back as the queue builds (cost backend).
-    from repro.core.plan import ServingPlan
-    small = ServingPlan(replicas=plan.replicas[:1],
-                        assignment=plan.assignment[:1],
-                        demands=plan.demands, makespan=plan.makespan,
-                        cost=plan.replicas[0].cost)
-    static = simulate(small, trace, [LLAMA3_8B])
-    policy = ScalePolicy(candidates=list(plan.replicas), budget=budget,
-                         interval=max(static.makespan / 50, 1e-3),
-                         window=2, queue_high=2.0, cooldown=1)
+    small = deployment.subset([0])
+    static = simulate(small, trace, spec.models)
+    policy = ScalePolicy.from_spec(
+        spec, deployment, interval=max(static.makespan / 50, 1e-3),
+        window=2, queue_high=2.0, cooldown=1)
     runtime = ServingRuntime(small, CostModelExecutor(small.replicas,
-                                                      [LLAMA3_8B]))
+                                                      spec.models))
     auto = runtime.run(trace, autoscale=policy)
     print(f"static 1-replica: goodput {static.goodput(slo):.2f} req/s, "
           f"makespan {static.makespan:.1f}s")

@@ -1,45 +1,50 @@
-"""Beyond-paper scheduler extensions in action:
+"""Beyond-paper scheduler extensions in action (declarative edition):
 
   1. SLO-constrained min-cost planning — "finish the trace within T seconds,
-     spend as little as possible" (the dual of the paper's min-T-under-budget);
+     spend as little as possible": the same DeploymentSpec with
+     objective="cost" (the dual of the paper's min-T-under-budget);
   2. availability-drop replanning — the H100 pool is reclaimed *mid-trace*
-     (the paper's Fig-2 fluctuation): the scheduler re-solves around it and
-     the event-driven runtime applies the new plan online, keeping surviving
-     replicas warm and migrating queued requests off the reclaimed ones.
+     (the paper's Fig-2 fluctuation): repro.core.replan re-solves the spec
+     against the new snapshot and the event-driven runtime applies the new
+     plan online, keeping surviving replicas warm and migrating queued
+     requests off the reclaimed ones.
 
     PYTHONPATH=src python examples/slo_and_replan.py
 """
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_70B,
-                        make_trace, simulate, solve)
-from repro.core.scheduler import replan, solve_min_cost
+                        DeploymentSpec, make_trace, plan, replan, simulate)
 from repro.runtime import SLO, ReplanEvent
 
 
 def main():
-    trace = make_trace("trace1", num_requests=400, seed=0)
-    avail = AVAILABILITY_SNAPSHOTS["avail1"]
+    spec = DeploymentSpec(models=[LLAMA3_70B],
+                          workload=make_trace("trace1", num_requests=400,
+                                              seed=0),
+                          catalog=GPU_CATALOG,
+                          availability=AVAILABILITY_SNAPSHOTS["avail1"],
+                          budget=60.0)
 
     print("== min-T under budget (the paper's objective) ==")
-    fast = solve([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0)
+    fast = plan(spec)
     print(f"T={fast.makespan:.1f}s at {fast.cost:.2f} $/h  "
           f"{fast.composition()}")
 
-    print("\n== min-cost under SLO (ours) ==")
+    print("\n== min-cost under SLO (ours: objective='cost') ==")
     for factor in (1.2, 2.0, 4.0):
         slo = fast.makespan * factor
-        plan = solve_min_cost([LLAMA3_70B], trace, GPU_CATALOG, avail, 60.0,
-                              slo)
-        print(f"SLO {slo:6.1f}s -> T={plan.makespan:6.1f}s at "
-              f"{plan.cost:5.2f} $/h  {plan.composition()}")
+        cheap = plan(spec.with_objective("cost", slo_makespan=slo))
+        print(f"SLO {slo:6.1f}s -> T={cheap.makespan:6.1f}s at "
+              f"{cheap.cost:5.2f} $/h  {cheap.composition()}")
 
     print("\n== mid-trace availability drop: all H100s reclaimed ==")
     # Streaming arrivals; halfway through, the H100 pool evaporates and the
-    # runtime consumes scheduler.replan() online.
+    # runtime consumes the spec-level replan online.
     live = make_trace("trace1", num_requests=400, arrival_rate=4.0, seed=0)
     t_drop = max(r.arrival for r in live.requests) / 2
-    dropped = dict(avail, H100=0)
-    new_plan = replan(fast, [LLAMA3_70B], live, GPU_CATALOG, dropped, 60.0)
-    res = simulate(fast, live, [LLAMA3_70B],
+    live_spec = spec.with_workload(live)
+    dropped = dict(live_spec.availability, H100=0)
+    new_plan = replan(fast, live_spec, availability=dropped)
+    res = simulate(fast, live, spec.models,
                    replan=ReplanEvent(time=t_drop, plan=new_plan))
     slo = SLO(ttft=60.0, tpot=0.5)
     print(f"replanned at t={t_drop:.0f}s: new plan T={new_plan.makespan:.1f}s "

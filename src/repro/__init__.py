@@ -1,4 +1,42 @@
 """repro: cost-efficient LLM serving over heterogeneous accelerators
 (ICML'25 reproduction) — scheduler core, JAX model zoo, serving runtime,
-Pallas kernels, multi-pod launch."""
+Pallas kernels, multi-pod launch.
+
+Public lifecycle: build a declarative ``repro.DeploymentSpec`` (models,
+workload, catalog, availability, budget, SLOs), plan it with
+``repro.plan(spec, strategy=...)``, and serve it online with
+``repro.serve(spec_or_plan, ...)`` — a live ``Session`` whose
+``submit()`` returns streaming request handles.
+"""
 __version__ = "0.1.0"
+
+
+def serve(spec_or_plan, **kwargs):
+    """Open an online serving session (see ``repro.serving.session.serve``)."""
+    from repro.serving.session import serve as _serve
+    return _serve(spec_or_plan, **kwargs)
+
+
+def plan(spec, strategy: str = "milp", **options):
+    """Plan a deployment spec (see ``repro.core.spec.plan``)."""
+    from repro.core.spec import plan as _plan
+    return _plan(spec, strategy=strategy, **options)
+
+
+_LAZY = {
+    "DeploymentSpec": ("repro.core.spec", "DeploymentSpec"),
+    "replan": ("repro.core.spec", "replan"),
+    "Session": ("repro.serving.session", "Session"),
+    "RequestHandle": ("repro.serving.session", "RequestHandle"),
+}
+
+
+def __getattr__(name):
+    # Lazy so `import repro` stays light (no jax import at top level).
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(module), attr)

@@ -1,5 +1,14 @@
 """Core contribution: cost-efficient LLM serving plan search over
-heterogeneous accelerators (MILP + binary-search-on-T + simulator)."""
+heterogeneous accelerators (MILP + binary-search-on-T + simulator).
+
+Public planning API: build a declarative :class:`DeploymentSpec` (models,
+workload trace, catalog, availability snapshot, budget, SLOs, objective)
+and hand it to :func:`plan` — strategies (``"milp"`` | ``"homogeneous"`` |
+``"uniform"`` | ``"fixed"``) live in a registry and subsume the legacy
+``solve_*`` entrypoints, which remain as deprecated wrappers.
+:func:`replan` re-solves the same spec against a new availability
+snapshot; ``ScalePolicy.from_spec`` closes the online loop.
+"""
 from repro.core.catalog import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG,
                                 TPU_CATALOG, DeviceType, get_catalog)
 from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, ModelProfile, Stage,
@@ -8,20 +17,26 @@ from repro.core.costmodel import (LLAMA3_8B, LLAMA3_70B, ModelProfile, Stage,
 from repro.core.plan import Config, ServingPlan
 from repro.core.milp import SchedulingProblem, solve_feasibility, solve_milp
 from repro.core.binsearch import knapsack_feasible, solve_binary_search
-from repro.core.scheduler import (build_problem, replan, solve,
+from repro.core.scheduler import (ScalePolicy, build_problem, solve,
                                   solve_homogeneous, solve_fixed_composition,
                                   uniform_composition)
 from repro.core.simulator import SimResult, simulate
 from repro.core.workloads import (TRACE_MIXES, WORKLOAD_TYPES, Request, Trace,
                                   WorkloadType, make_trace, workload_demand)
+# Imported last: binds `repro.core.plan` (the function) over the submodule
+# attribute of the same name — `from repro.core.plan import ...` still
+# resolves the module through sys.modules.
+from repro.core.spec import (DeploymentSpec, plan, planner_names,
+                             register_planner, replan)
 
 __all__ = [
     "AVAILABILITY_SNAPSHOTS", "GPU_CATALOG", "TPU_CATALOG", "DeviceType",
     "get_catalog", "LLAMA3_8B", "LLAMA3_70B", "ModelProfile", "Stage",
     "config_throughput", "kv_free_bytes", "max_batch_size", "Config", "ServingPlan",
     "SchedulingProblem", "solve_feasibility", "solve_milp",
-    "knapsack_feasible", "solve_binary_search", "build_problem", "replan",
-    "solve", "solve_homogeneous", "solve_fixed_composition",
+    "knapsack_feasible", "solve_binary_search", "build_problem",
+    "DeploymentSpec", "plan", "planner_names", "register_planner", "replan",
+    "ScalePolicy", "solve", "solve_homogeneous", "solve_fixed_composition",
     "uniform_composition", "SimResult", "simulate", "TRACE_MIXES",
     "WORKLOAD_TYPES", "Request", "Trace", "WorkloadType", "make_trace",
     "workload_demand",

@@ -67,6 +67,20 @@ class ServingPlan:
     cost: float
     solver_info: Dict[str, float] = dataclasses.field(default_factory=dict)
 
+    def subset(self, indices: Sequence[int]) -> "ServingPlan":
+        """A plan restricted to ``replicas[indices]`` (same demands; the
+        dropped rows' assignment mass is *not* re-spread — the runtime's
+        router renormalizes per demand column).  Used to under-provision
+        deliberately, e.g. as an autoscaling starting point."""
+        idx = list(indices)
+        replicas = [self.replicas[i] for i in idx]
+        return ServingPlan(replicas=replicas,
+                           assignment=self.assignment[idx],
+                           demands=self.demands,
+                           makespan=self.makespan,
+                           cost=sum(c.cost for c in replicas),
+                           solver_info=dict(self.solver_info, subset=1.0))
+
     def composition(self) -> Dict[str, int]:
         total: Dict[str, int] = {}
         for c in self.replicas:

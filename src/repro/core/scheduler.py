@@ -1,22 +1,31 @@
-"""Top-level scheduler: trace + budget + availability → ServingPlan.
+"""Planner strategies behind the declarative spec API (plus the paper's
+baselines and the online autoscale policy).
 
-Also provides the paper's baselines:
+The public entrypoint is ``repro.core.plan(spec, strategy=...)``
+(:mod:`repro.core.spec`): this module owns the strategy *implementations*
+and registers them —
 
-* homogeneous(type): rent only one GPU type (availability unconstrained, as
-  the paper assumes for homogeneous baselines), deployment configs and
-  workload assignment still optimized by our algorithm — exactly the paper's
-  "fine-tune ... using our scheduling algorithm" setup;
-* uniform-composition (ablation i / HexGen-uniform): spend the budget evenly
-  across available types, then optimize deployment+assignment within that
-  fixed composition;
-* round-robin assignment (ablation iii): workload fractions forced
-  proportional to replica throughput (workload-unaware);
-* uniform-deployment (ablation ii): a single TP-only config shape for all
-  replicas.
+* ``"milp"``: the paper's planner (binary-search-on-T over the MILP, or
+  the exact MILP with ``method="milp"``); ``spec.objective="cost"`` plans
+  the dual (min-$ under a makespan SLO);
+* ``"homogeneous"``: rent only one GPU type (availability unconstrained,
+  as the paper assumes for homogeneous baselines), deployment configs and
+  workload assignment still optimized by our algorithm — exactly the
+  paper's "fine-tune ... using our scheduling algorithm" setup;
+* ``"uniform"``: ablation (ii), a single TP-only config shape for all
+  replicas;
+* ``"fixed"``: optimize deployment+assignment inside a *given*
+  composition (HexGen setting; the default composition is the budget-even
+  ``uniform_composition`` split, ablation i).
+
+Round-robin assignment (ablation iii) stays a plan *post-processor*
+(:func:`apply_round_robin_assignment`).  The legacy ``solve_*`` functions
+are kept as thin deprecated wrappers over the same implementations.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import Counter
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -28,7 +37,16 @@ from repro.core.catalog import DeviceType
 from repro.core.costmodel import ModelProfile, config_throughput
 from repro.core.milp import SchedulingProblem, solve_milp, _plan_from_solution
 from repro.core.plan import Config, ServingPlan
+from repro.core.spec import DeploymentSpec, register_planner
+from repro.core.spec import replan as spec_replan
 from repro.core.workloads import WORKLOAD_TYPES, Trace, WorkloadType, workload_demand
+
+
+def _warn_legacy(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.scheduler.{old} is deprecated; use {new} "
+        f"(see the deprecation table in README.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 def build_problem(
@@ -72,7 +90,7 @@ def build_problem(
                              budget=budget, availability=availability)
 
 
-def solve(
+def _solve(
     models: Sequence[ModelProfile],
     trace: Trace,
     catalog: Mapping[str, DeviceType],
@@ -97,7 +115,7 @@ def solve(
     raise ValueError(f"unknown method {method!r}")
 
 
-def solve_min_cost(
+def _solve_min_cost(
     models: Sequence[ModelProfile],
     trace: Trace,
     catalog: Mapping[str, DeviceType],
@@ -126,6 +144,83 @@ def solve_min_cost(
                                {"solver": 2.0, "slo_s": slo_makespan})
 
 
+# ----------------------------------------------------- registered strategies
+
+@register_planner("milp")
+def _plan_milp(spec: DeploymentSpec, **options) -> ServingPlan:
+    """The paper's planner over the spec.  ``spec.objective="makespan"``
+    minimizes T under the budget (binary search over the MILP feasibility
+    check by default; ``method="milp"`` solves the exact MILP once);
+    ``"cost"`` minimizes $/h under ``spec.slo_makespan``."""
+    if spec.objective == "cost":
+        unsupported = sorted(k for k in ("method", "include_mixed", "tol")
+                             if k in options)
+        if unsupported:
+            raise ValueError(
+                f'objective="cost" plans via one feasibility MILP; '
+                f"options {unsupported} do not apply")
+        return _solve_min_cost(spec.models, spec.workload, spec.catalog,
+                               spec.availability, spec.budget,
+                               spec.slo_makespan, **options)
+    return _solve(spec.models, spec.workload, spec.catalog,
+                  spec.availability, spec.budget, **options)
+
+
+@register_planner("homogeneous")
+def _plan_homogeneous(spec: DeploymentSpec, *, gpu_type: str,
+                      **options) -> ServingPlan:
+    """Paper baseline: one GPU type only, pool unconstrained (the budget
+    is the binding cap), configs + assignment still optimized."""
+    avail = homogeneous_availability(spec.catalog, gpu_type, spec.budget)
+    sub = {gpu_type: spec.catalog[gpu_type]}
+    return _solve(spec.models, spec.workload, sub, avail, spec.budget,
+                  **options)
+
+
+@register_planner("uniform")
+def _plan_uniform(spec: DeploymentSpec, *, tp: int = 4,
+                  **options) -> ServingPlan:
+    """Ablation (ii): all replicas use one fixed TP-only config shape."""
+    return _solve(spec.models, spec.workload, spec.catalog,
+                  spec.availability, spec.budget, include_mixed=False,
+                  throughput_fn=None if tp is None else _only_tp(tp),
+                  **options)
+
+
+@register_planner("fixed")
+def _plan_fixed(spec: DeploymentSpec, *,
+                composition: Optional[Mapping[str, int]] = None,
+                **options) -> ServingPlan:
+    """Optimize deployment+assignment inside a *given* composition (HexGen
+    setting: scheduling over a predefined heterogeneous cluster).  The
+    default composition is the budget-even split across available types
+    (ablation i / HexGen-uniform)."""
+    if composition is None:
+        composition = uniform_composition(spec.catalog, spec.availability,
+                                          spec.budget)
+    return _solve(spec.models, spec.workload, spec.catalog, composition,
+                  spec.budget, **options)
+
+
+# ------------------------------------------------- legacy entrypoints (deprecated)
+
+def solve(models, trace, catalog, availability, budget, **kw) -> ServingPlan:
+    """Deprecated: build a :class:`~repro.core.spec.DeploymentSpec` and
+    call ``repro.core.plan(spec)`` instead."""
+    _warn_legacy("solve", 'repro.core.plan(spec, strategy="milp")')
+    return _solve(models, trace, catalog, availability, budget, **kw)
+
+
+def solve_min_cost(models, trace, catalog, availability, budget,
+                   slo_makespan, **kw) -> ServingPlan:
+    """Deprecated: use ``repro.core.plan(spec)`` with
+    ``spec.objective="cost"`` / ``spec.slo_makespan``."""
+    _warn_legacy("solve_min_cost",
+                 'repro.core.plan(spec with objective="cost")')
+    return _solve_min_cost(models, trace, catalog, availability, budget,
+                           slo_makespan, **kw)
+
+
 def replan(
     plan: ServingPlan,
     models: Sequence[ModelProfile],
@@ -135,18 +230,14 @@ def replan(
     budget: float,
     **kw,
 ) -> ServingPlan:
-    """Availability changed mid-serving (Fig 2: cloud pools fluctuate):
-    re-solve against the new pool.  Replicas whose devices survive keep
-    their identity (the runtime can keep them warm); the rest are re-rented.
-    """
-    new_plan = solve(models, trace, catalog, new_availability, budget, **kw)
-    # Multiset matching by config key: a surviving key keeps at most as many
-    # replicas as the old plan actually had (the runtime matches the same way
-    # when it migrates queued requests off drained replicas).
-    overlap = (Counter(o.key for o in plan.replicas)
-               & Counter(c.key for c in new_plan.replicas))
-    new_plan.solver_info["replicas_kept"] = float(sum(overlap.values()))
-    return new_plan
+    """Deprecated: use ``repro.core.replan(old_plan, spec,
+    availability=new_snapshot)`` — the spec-level twin with identical
+    survivor accounting."""
+    _warn_legacy("replan", "repro.core.replan(old_plan, spec, ...)")
+    spec = DeploymentSpec(models=tuple(models), workload=trace,
+                          catalog=catalog, availability=new_availability,
+                          budget=budget)
+    return spec_replan(plan, spec, **kw)
 
 
 # ---------------------------------------------------------------- baselines
@@ -160,9 +251,13 @@ def homogeneous_availability(catalog: Mapping[str, DeviceType], gpu_type: str,
 
 def solve_homogeneous(models, trace, catalog, gpu_type: str, budget: float,
                       **kw) -> ServingPlan:
+    """Deprecated: ``repro.core.plan(spec, strategy="homogeneous",
+    gpu_type=...)``."""
+    _warn_legacy("solve_homogeneous",
+                 'repro.core.plan(spec, strategy="homogeneous")')
     avail = homogeneous_availability(catalog, gpu_type, budget)
     sub = {gpu_type: catalog[gpu_type]}
-    return solve(models, trace, sub, avail, budget, **kw)
+    return _solve(models, trace, sub, avail, budget, **kw)
 
 
 def uniform_composition(catalog: Mapping[str, DeviceType],
@@ -179,9 +274,11 @@ def uniform_composition(catalog: Mapping[str, DeviceType],
 
 def solve_fixed_composition(models, trace, catalog, composition: Mapping[str, int],
                             budget: float, **kw) -> ServingPlan:
-    """Optimize deployment+assignment inside a *given* composition (HexGen
-    setting: scheduling over a predefined heterogeneous cluster)."""
-    return solve(models, trace, catalog, composition, budget, **kw)
+    """Deprecated: ``repro.core.plan(spec, strategy="fixed",
+    composition=...)``."""
+    _warn_legacy("solve_fixed_composition",
+                 'repro.core.plan(spec, strategy="fixed")')
+    return _solve(models, trace, catalog, composition, budget, **kw)
 
 
 def apply_round_robin_assignment(plan: ServingPlan, h_fn: Callable) -> ServingPlan:
@@ -208,10 +305,12 @@ def apply_round_robin_assignment(plan: ServingPlan, h_fn: Callable) -> ServingPl
 
 def solve_uniform_deployment(models, trace, catalog, availability, budget,
                              tp: int = 4, **kw) -> ServingPlan:
-    """Ablation (ii): all replicas use one fixed TP-only config shape."""
-    return solve(models, trace, catalog, availability, budget,
-                 include_mixed=False, **kw,
-                 throughput_fn=None if tp is None else _only_tp(tp))
+    """Deprecated: ``repro.core.plan(spec, strategy="uniform", tp=...)``."""
+    _warn_legacy("solve_uniform_deployment",
+                 'repro.core.plan(spec, strategy="uniform")')
+    return _solve(models, trace, catalog, availability, budget,
+                  include_mixed=False, **kw,
+                  throughput_fn=None if tp is None else _only_tp(tp))
 
 
 def _only_tp(tp: int) -> Callable:
@@ -329,6 +428,18 @@ class ScalePolicy:
         self.min_replicas = int(min_replicas)
         self.throughput_fn = throughput_fn
         self.reset()
+
+    @classmethod
+    def from_spec(cls, spec: DeploymentSpec, plan: ServingPlan, *,
+                  candidates: Optional[Sequence[Config]] = None,
+                  **kw) -> "ScalePolicy":
+        """Autoscaler over the same :class:`~repro.core.spec.DeploymentSpec`
+        the plan came from: the budget cap is ``spec.budget`` and the
+        candidate pool defaults to the plan's own replica configs (the
+        shapes the planner already proved cost-efficient for this
+        workload).  All tuning knobs pass through ``**kw``."""
+        pool = list(plan.replicas) if candidates is None else list(candidates)
+        return cls(candidates=pool, budget=spec.budget, **kw)
 
     def reset(self) -> None:
         """Clear observation history (called by the runtime at run start)."""

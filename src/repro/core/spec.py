@@ -1,0 +1,199 @@
+"""Declarative deployment specification + pluggable planner registry.
+
+The paper's pipeline — workload + budget + real-time GPU availability →
+MILP plan → serving — is expressed as one declarative value,
+:class:`DeploymentSpec`, consumed by one entrypoint, :func:`plan`:
+
+    spec = DeploymentSpec(models=[LLAMA3_70B], workload=trace,
+                          catalog=GPU_CATALOG,
+                          availability=AVAILABILITY_SNAPSHOTS["avail1"],
+                          budget=30.0)
+    p = plan(spec)                          # the paper's MILP planner
+    p = plan(spec, strategy="homogeneous", gpu_type="H100")   # baseline
+    p = plan(spec, strategy="uniform")      # ablation (ii)
+    p = plan(spec, strategy="fixed", composition={"A100": 4})
+
+Strategies live in a registry (:func:`register_planner`), so baselines,
+ablations, and future solvers plug in behind the same spec; offline
+planning, online replanning (:func:`replan`), and autoscaling
+(``ScalePolicy.from_spec``) all consume the same ``DeploymentSpec``.
+The built-in strategies are registered by ``repro.core.scheduler`` and
+subsume the legacy ``solve_*`` functions (kept there as deprecated
+wrappers).
+
+The spec's two objectives mirror the paper and its dual:
+
+* ``objective="makespan"`` — minimize trace completion time T under the
+  price budget (the paper's §4 formulation);
+* ``objective="cost"`` — minimize $/h subject to finishing within
+  ``slo_makespan`` seconds (the operator's dual; one feasibility MILP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile
+from repro.core.plan import ServingPlan
+from repro.core.workloads import Trace
+
+OBJECTIVES = ("makespan", "cost")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """What to deploy, against which pool, under which constraints.
+
+    One immutable value carrying everything a planner strategy needs:
+    the models to serve, the demand (a workload trace), the device
+    catalog with prices, the real-time availability snapshot, the price
+    budget, and the objective.  ``slo`` optionally carries a per-request
+    service-level objective (e.g. :class:`repro.runtime.SLO`) that the
+    serving session scores goodput against; ``slo_makespan`` is the
+    completion-time bound the ``"cost"`` objective plans under.
+    """
+
+    models: Tuple[ModelProfile, ...]
+    workload: Trace
+    catalog: Mapping[str, DeviceType]
+    availability: Mapping[str, int]
+    budget: float
+    objective: str = "makespan"
+    slo: Optional[object] = None          # per-request SLO (runtime-scored)
+    slo_makespan: Optional[float] = None  # seconds; required for "cost"
+
+    def __post_init__(self):
+        object.__setattr__(self, "models", tuple(self.models))
+        # Snapshot the mappings: a frozen spec must not change because the
+        # caller keeps mutating the dict it was built from (e.g. a live
+        # availability watcher updating its snapshot in place).
+        object.__setattr__(self, "catalog", dict(self.catalog))
+        object.__setattr__(self, "availability", dict(self.availability))
+        if self.budget <= 0:
+            raise ValueError(f"budget must be > 0, got {self.budget}")
+        if self.objective not in OBJECTIVES:
+            raise ValueError(f"objective must be one of {OBJECTIVES}, "
+                             f"got {self.objective!r}")
+        if self.objective == "cost" and self.slo_makespan is None:
+            raise ValueError('objective="cost" requires slo_makespan')
+
+    # ------------------------------------------------------------- variants
+
+    def with_availability(self, availability: Mapping[str, int]
+                          ) -> "DeploymentSpec":
+        """The same deployment against a new pool snapshot (Fig 2: cloud
+        availability fluctuates; this is the replanning input)."""
+        return dataclasses.replace(self, availability=dict(availability))
+
+    def with_budget(self, budget: float) -> "DeploymentSpec":
+        return dataclasses.replace(self, budget=float(budget))
+
+    def with_workload(self, workload: Trace) -> "DeploymentSpec":
+        return dataclasses.replace(self, workload=workload)
+
+    def with_objective(self, objective: str, *,
+                       slo_makespan: Optional[float] = None
+                       ) -> "DeploymentSpec":
+        return dataclasses.replace(
+            self, objective=objective,
+            slo_makespan=(self.slo_makespan if slo_makespan is None
+                          else float(slo_makespan)))
+
+
+# ------------------------------------------------------------ the registry
+
+_PLANNERS: Dict[str, Callable[..., ServingPlan]] = {}
+
+
+def register_planner(name: str) -> Callable:
+    """Register a planning strategy: ``fn(spec, **options) -> ServingPlan``."""
+    def deco(fn: Callable[..., ServingPlan]) -> Callable[..., ServingPlan]:
+        _PLANNERS[name] = fn
+        return fn
+    return deco
+
+
+def planner_names() -> Tuple[str, ...]:
+    _load_builtin_planners()
+    return tuple(sorted(_PLANNERS))
+
+
+def _load_builtin_planners() -> None:
+    # The built-in strategies are registered as a side effect of importing
+    # the scheduler (which owns their implementations); lazy so the spec
+    # module stays import-light and cycle-free.
+    from repro.core import scheduler  # noqa: F401
+
+
+def plan(spec: DeploymentSpec, strategy: str = "milp",
+         **options) -> ServingPlan:
+    """Plan a deployment: dispatch ``spec`` to a registered strategy.
+
+    Built-in strategies (see ``repro.core.scheduler``):
+
+    * ``"milp"`` — the paper's planner: binary-search-on-T over the MILP
+      (``method="milp"`` solves the exact MILP once instead); honors
+      ``spec.objective`` (``"cost"`` plans min-$ under ``slo_makespan``);
+    * ``"homogeneous"`` — single-GPU-type baseline
+      (``gpu_type="H100"``, availability unconstrained up to the budget);
+    * ``"uniform"`` — ablation (ii): one fixed TP-only config shape
+      (``tp=4``) for every replica;
+    * ``"fixed"`` — optimize deployment+assignment inside a *given*
+      composition (``composition={type: count}``; defaults to the
+      budget-even split of ``uniform_composition``).
+
+    Extra ``options`` are forwarded to the strategy (solver method,
+    tolerances, time limits, strategy-specific knobs).
+    """
+    _load_builtin_planners()
+    try:
+        fn = _PLANNERS[strategy]
+    except KeyError:
+        raise ValueError(
+            f"unknown planning strategy {strategy!r}; "
+            f"registered: {planner_names()}") from None
+    return fn(spec, **options)
+
+
+def replan(old_plan: ServingPlan, spec, *legacy,
+           availability: Optional[Mapping[str, int]] = None,
+           strategy: str = "milp", **options) -> ServingPlan:
+    """Availability changed mid-serving: re-solve the same spec against
+    the new pool.  Replicas whose config keys survive keep their identity
+    (the runtime keeps them warm when it applies the new plan as a
+    :class:`~repro.runtime.orchestrator.ReplanEvent`); the rest are
+    re-rented.  ``solver_info["replicas_kept"]`` records the multiset
+    overlap, matching the runtime's own survivor accounting.
+
+    Also accepts the legacy positional signature
+    ``replan(plan, models, trace, catalog, new_availability, budget)``
+    (deprecated) so pre-spec callers of ``repro.core.replan`` keep
+    working through the transition.
+    """
+    if not isinstance(spec, DeploymentSpec):
+        if len(legacy) != 4:
+            raise TypeError(
+                "replan() wants (old_plan, DeploymentSpec, *, "
+                "availability=...) — or the deprecated (old_plan, models, "
+                "trace, catalog, new_availability, budget)")
+        import warnings
+        warnings.warn(
+            "replan(plan, models, trace, catalog, new_availability, budget)"
+            " is deprecated; use replan(plan, spec, availability=...)",
+            DeprecationWarning, stacklevel=2)
+        models, (trace, catalog, new_avail, budget) = spec, legacy
+        spec = DeploymentSpec(models=tuple(models), workload=trace,
+                              catalog=catalog, availability=new_avail,
+                              budget=budget)
+    elif legacy:
+        raise TypeError("replan() takes no positional arguments beyond "
+                        "(old_plan, spec)")
+    if availability is not None:
+        spec = spec.with_availability(availability)
+    new_plan = plan(spec, strategy=strategy, **options)
+    overlap = (Counter(o.key for o in old_plan.replicas)
+               & Counter(c.key for c in new_plan.replicas))
+    new_plan.solver_info["replicas_kept"] = float(sum(overlap.values()))
+    return new_plan

@@ -10,12 +10,12 @@ from __future__ import annotations
 
 import argparse
 
+import repro
 from repro.configs import get_config
-from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, make_trace,
-                        simulate, solve)
+from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, DeploymentSpec,
+                        make_trace, plan, simulate)
 from repro.core.costmodel import LLAMA3_8B, LLAMA3_70B
 from repro.runtime import SLO
-from repro.serving import HeterogeneousServer
 
 
 def main():
@@ -43,12 +43,14 @@ def main():
     profile = LLAMA3_70B if args.model == "llama3-70b" else LLAMA3_8B
     trace = make_trace(args.trace, num_requests=args.requests,
                        arrival_rate=args.arrival_rate, seed=0)
-    plan = solve([profile], trace, GPU_CATALOG,
-                 AVAILABILITY_SNAPSHOTS[args.avail], args.budget,
-                 method=args.method)
-    print(plan.summary())
+    spec = DeploymentSpec(models=[profile], workload=trace,
+                          catalog=GPU_CATALOG,
+                          availability=AVAILABILITY_SNAPSHOTS[args.avail],
+                          budget=args.budget)
+    deployment = plan(spec, method=args.method)
+    print(deployment.summary())
     slo = SLO(ttft=args.slo_ttft, tpot=args.slo_tpot)
-    sim = simulate(plan, trace, [profile])
+    sim = simulate(deployment, trace, [profile])
     print(f"predicted: makespan={sim.makespan:.1f}s "
           f"throughput={sim.throughput:.3f} req/s "
           f"p90={sim.percentile(90):.1f}s "
@@ -58,15 +60,19 @@ def main():
           f"({100 * sim.slo_attainment(slo):.0f}% in SLO)")
 
     if args.execute:
+        import time
         cfg = get_config(args.model).reduced()
-        server = HeterogeneousServer(plan, [cfg], max_batch=8)
-        stats = server.serve(trace, input_len=16, max_new=args.max_new)
-        res = stats.result
-        print(f"executed: {stats.completed} requests, "
-              f"{stats.generated_tokens} tokens, "
-              f"{stats.tokens_per_s:.1f} tok/s on "
-              f"{len(plan.replicas)} replicas "
-              f"(per-replica: {stats.per_replica_requests}); "
+        session = repro.serve(deployment, arch_cfgs=[cfg], input_len=16,
+                              max_new=args.max_new, max_batch=8)
+        t0 = time.perf_counter()
+        res = session.replay(trace)
+        wall = time.perf_counter() - t0
+        toks = session.executor.generated_tokens
+        print(f"executed: {res.num_completed} requests, "
+              f"{toks} tokens, "
+              f"{toks / max(wall, 1e-9):.1f} tok/s on "
+              f"{len(deployment.replicas)} replicas "
+              f"(per-replica: {res.per_replica_requests}); "
               f"ttft_p90={res.ttft_percentile(90):.2f}s "
               f"tpot_p90={res.tpot_percentile(90):.3f}s "
               f"goodput={res.goodput(slo):.3f} req/s")

@@ -21,14 +21,17 @@ from repro.runtime.kvcache import (BlockAllocator, KVCacheManager,
                                    PagedEngineCache, make_kv_manager,
                                    num_kv_blocks)
 from repro.runtime.lifecycle import (Phase, RequestState, RuntimeResult, SLO)
-from repro.runtime.orchestrator import ReplanEvent, ServingRuntime
+from repro.runtime.orchestrator import (ArrivalSource, LiveSource,
+                                        ReplanEvent, ServingRuntime,
+                                        TraceSource)
 from repro.runtime.replica import PendingEvent, ReplicaRuntime
 from repro.runtime.router import AssignmentRouter
 
 __all__ = [
-    "AssignmentRouter", "BlockAllocator", "CostModelExecutor",
-    "EngineExecutor", "Executor", "KVCacheManager", "PagedEngineCache",
-    "PendingEvent", "Phase", "ReplanEvent", "ReplicaRuntime",
-    "ReplicaWorker", "RequestState", "RuntimeResult", "SLO",
-    "ServingRuntime", "make_kv_manager", "num_kv_blocks",
+    "ArrivalSource", "AssignmentRouter", "BlockAllocator",
+    "CostModelExecutor", "EngineExecutor", "Executor", "KVCacheManager",
+    "LiveSource", "PagedEngineCache", "PendingEvent", "Phase",
+    "ReplanEvent", "ReplicaRuntime", "ReplicaWorker", "RequestState",
+    "RuntimeResult", "SLO", "ServingRuntime", "TraceSource",
+    "make_kv_manager", "num_kv_blocks",
 ]

@@ -27,12 +27,22 @@ class ReplicaWorker:
         self.name = name
         self.device = device
         self._mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._closed = False
         self._thread = threading.Thread(target=self._loop, name=name,
                                         daemon=True)
         self._thread.start()
 
+    @property
+    def alive(self) -> bool:
+        """False once closed (or the thread died): the owner must build a
+        fresh worker — long-lived runtimes (sessions / reusable servers)
+        recreate workers lazily per run."""
+        return not self._closed and self._thread.is_alive()
+
     def submit(self, fn: Callable[[], object]) -> Future:
         """Enqueue ``fn`` on this worker's thread; returns its Future."""
+        if not self.alive:
+            raise RuntimeError(f"worker {self.name} is closed")
         fut: Future = Future()
         self._mailbox.put((fn, fut))
         return fut
@@ -59,5 +69,6 @@ class ReplicaWorker:
 
     def close(self, timeout: float = 5.0) -> None:
         """Drain the mailbox and stop the thread (idempotent)."""
+        self._closed = True
         self._mailbox.put(None)
         self._thread.join(timeout=timeout)

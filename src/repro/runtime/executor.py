@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import abc
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -60,6 +60,14 @@ class Executor(abc.ABC):
 
     max_steps_per_event: int = 10**9
     concurrent: bool = False
+
+    # Optional per-chunk token stream: when set (the live Session does),
+    # token-producing backends call ``token_sink(req_id, [tokens...])``
+    # once per executed event, in token order, from whatever thread runs
+    # the event (per-request calls never interleave: one replica owns a
+    # request and its calls are serialized).  Analytical backends produce
+    # no tokens and never call it.
+    token_sink: Optional[Callable[[int, List[int]], None]] = None
 
     @abc.abstractmethod
     def add_replica(self, config: Config) -> None:
@@ -136,6 +144,19 @@ class CostModelExecutor(Executor):
         self._model_table = models
         for cfg in replicas:
             self.add_replica(cfg)
+        self._base_replicas = len(self.configs)
+
+    def configure(self) -> None:
+        """Reset to the base plan before a reuse run (the session/server
+        lifecycle): drop replicas appended by a previous run's
+        replan/autoscale — so indices line up with a freshly-reset
+        ``ServingRuntime`` — and rebuild the KV managers empty."""
+        del self.configs[self._base_replicas:]
+        del self.models[self._base_replicas:]
+        del self.kv_managers[self._base_replicas:]
+        for i, cfg in enumerate(self.configs):
+            self.kv_managers[i] = make_kv_manager(
+                cfg, self.models[i], self.block_size)
 
     def add_replica(self, config: Config) -> None:
         self.configs.append(config)
@@ -261,17 +282,25 @@ class EngineExecutor(Executor):
         self.configure(seed=seed)
 
     def configure(self, *, input_len: Optional[int] = None,
-                  max_new: Optional[int] = None, seed: int = 0) -> None:
-        """Reset counters (and optionally the runtime scale) before a run."""
+                  max_new: Optional[int] = None,
+                  seed: Optional[int] = None) -> None:
+        """Reset counters (and optionally the runtime scale / prompt seed)
+        before a run; omitted arguments keep their current values."""
         if input_len is not None:
             self.input_len = input_len
         if max_new is not None:
             self.max_new = max_new
-        self._seed = seed
+        if seed is not None or not hasattr(self, "_seed"):
+            self._seed = 0 if seed is None else seed
         # Per-request token trail (req_id -> every token emitted for it,
         # including recompute re-prefills) — interleaving-independent, so
         # concurrent and sequential runs must produce identical trails.
         self.token_log: Dict[int, List[int]] = {}
+        # Live sessions: real prompt token ids per req_id (padded/truncated
+        # to ``input_len`` at prefill); requests without an entry keep the
+        # per-request synthetic RNG prompt.
+        self.prompt_overrides: Dict[int, np.ndarray] = {}
+        self.token_sink = None
         # Engines appended by a previous run's replan belong to that run's
         # transient plan: drop them so replica indices line up with a fresh
         # ServingRuntime built over the base plan.
@@ -376,8 +405,18 @@ class EngineExecutor(Executor):
         n_prefix = arch.num_patches if arch.frontend != "none" else 0
         for s in states:
             rng = np.random.default_rng((self._seed, s.req.req_id))
-            rows.append(rng.integers(0, arch.vocab_size,
-                                     size=self.input_len))
+            override = self.prompt_overrides.get(s.req.req_id)
+            if override is not None:
+                # Real prompt (live submit): pad/truncate to the cohort's
+                # uniform prompt shape.
+                row = np.zeros(self.input_len, dtype=np.int64)
+                n = min(len(override), self.input_len)
+                row[:n] = np.asarray(override, dtype=np.int64)[:n] \
+                    % arch.vocab_size
+                rows.append(row)
+            else:
+                rows.append(rng.integers(0, arch.vocab_size,
+                                         size=self.input_len))
             if n_prefix:
                 prefix_rows.append(rng.normal(
                     0, 0.02, size=(n_prefix, arch.d_model)))
@@ -386,8 +425,15 @@ class EngineExecutor(Executor):
                   if n_prefix else None)
         return prompts, prefix, n_prefix
 
-    def _log_token(self, req_id: int, token: int) -> None:
-        self.token_log.setdefault(req_id, []).append(int(token))
+    def _log_tokens(self, req_id: int, tokens) -> None:
+        """Append one event's token chunk to the request's trail and, when
+        a live session attached a sink, stream the chunk to it (same order
+        as the log, so handle streams replay ``token_log`` exactly)."""
+        toks = [int(t) for t in tokens]
+        self.token_log.setdefault(req_id, []).extend(toks)
+        sink = self.token_sink
+        if sink is not None:
+            sink(req_id, toks)
 
     def prefill(self, rep: int, states: Sequence[RequestState]
                 ) -> Sequence[float]:
@@ -411,7 +457,7 @@ class EngineExecutor(Executor):
         self._compute_s[rep] += elapsed
         first = np.asarray(tok)
         for s, t in zip(states, first):
-            self._log_token(s.req.req_id, t)
+            self._log_tokens(s.req.req_id, [t])
         if paged is not None:
             paged.admit_cohort([s.req.req_id for s in states], caches,
                                first, t_prompt)
@@ -476,8 +522,8 @@ class EngineExecutor(Executor):
             slot_tok = np.asarray(all_toks)        # one (S, k) transfer
             paged.commit_chunk(slot_tok[:, -1], pools)
             for s in states:
-                for t in slot_tok[paged.slot_of(s.req.req_id)]:
-                    self._log_token(s.req.req_id, t)
+                self._log_tokens(s.req.req_id,
+                                 slot_tok[paged.slot_of(s.req.req_id)])
             self._gen_tokens[rep] += len(states) * k
             self._compute_s[rep] += elapsed
             self._record_step(rep, elapsed / k)
@@ -496,8 +542,7 @@ class EngineExecutor(Executor):
             lane_tok = np.asarray(toks)            # one (B, k) transfer
             for lane, rid in enumerate(g.order):
                 if rid in g.req_ids and rid in ids:
-                    for t in lane_tok[lane]:
-                        self._log_token(rid, t)
+                    self._log_tokens(rid, lane_tok[lane])
             self._gen_tokens[rep] += live * k
             self._compute_s[rep] += elapsed
             total += elapsed

@@ -23,8 +23,17 @@ into the heap.  ``mode="sequential"`` keeps the legacy
 replica-at-a-time loop as the equivalence baseline (byte-identical
 schedules on the cost-model backend, asserted in ``tests/test_runtime``).
 
+Arrivals come from an :class:`ArrivalSource`: :class:`TraceSource` replays
+a recorded trace (``run(trace)`` is a thin wrapper over it, byte-identical
+to the historical trace loop), while :class:`LiveSource` is a thread-safe
+queue fed by online ``submit()`` calls — the serving loop drains it
+between events, blocks on it while idle, and runs on a **wall-clock time
+base** (arrival stamps are seconds since the run started) next to the
+replicas' virtual clocks.  ``repro.serving.Session`` is the user-facing
+façade over a live run.
+
 Online replanning: pass :class:`ReplanEvent` s (e.g. the output of
-``repro.core.scheduler.replan`` when a spot pool is reclaimed).  At each
+``repro.core.replan`` when a spot pool is reclaimed).  At each
 event time the runtime matches the new plan's replicas against the live
 pool by config key — survivors keep their clock, queue, and active batch;
 removed replicas drain their active batch but their *queued* requests
@@ -44,7 +53,9 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Sequence, Union
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -68,26 +79,207 @@ class ReplanEvent:
     plan: ServingPlan
 
 
+# ----------------------------------------------------------- arrival sources
+
+class ArrivalSource:
+    """Where requests enter the runtime.
+
+    The serving loop only ever asks a source five questions: pop every
+    arrival due by a barrier (:meth:`take_until`), when the first arrival
+    happens (:meth:`first_arrival`, seeds the autoscale tick), whether
+    more can ever come (:meth:`exhausted`), and — for ``live`` sources —
+    what time it is (:meth:`now`, the wall-clock base) and to sleep until
+    something changes (:meth:`wait`).  :meth:`records` returns every
+    :class:`RequestState` the source ever produced, in arrival order;
+    they become ``RuntimeResult.records``.
+    """
+
+    live: bool = False
+
+    def start(self) -> None:
+        """Called once when the serving loop begins consuming."""
+
+    def records(self) -> List[RequestState]:
+        raise NotImplementedError
+
+    def take_until(self, barrier: float) -> List[RequestState]:
+        """Pop (without blocking) every pending arrival with
+        ``arrival <= barrier``, in arrival order."""
+        raise NotImplementedError
+
+    def first_arrival(self) -> float:
+        return 0.0
+
+    def exhausted(self) -> bool:
+        """True when no arrival is pending and none can ever come."""
+        raise NotImplementedError
+
+    # -- live extras (wall-clock sources only) ------------------------------
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def version(self) -> int:
+        """Monotone change counter (new submission / close / kick)."""
+        return 0
+
+    def wait(self, seen: int, timeout: Optional[float] = None) -> bool:
+        """Block until the version moves past ``seen`` (or timeout)."""
+        return False
+
+    def kick(self) -> None:
+        """Wake any :meth:`wait` er (e.g. from a future's done-callback)."""
+
+
+class TraceSource(ArrivalSource):
+    """Replays a recorded :class:`~repro.core.workloads.Trace`: every
+    arrival is known up front, so the loop dispatches all requests due by
+    each barrier and fast-forwards virtual time — byte-identical to the
+    historical ``run(trace)`` behavior (asserted in ``tests/test_runtime``
+    and ``tests/test_session``)."""
+
+    def __init__(self, trace: Trace):
+        self.trace = trace
+        self._order = sorted(trace.requests, key=lambda q: q.arrival)
+        self._states = [RequestState(req=req) for req in self._order]
+        self._pos = 0
+
+    def records(self) -> List[RequestState]:
+        return self._states
+
+    def take_until(self, barrier: float) -> List[RequestState]:
+        out: List[RequestState] = []
+        while (self._pos < len(self._states)
+               and self._order[self._pos].arrival <= barrier):
+            out.append(self._states[self._pos])
+            self._pos += 1
+        return out
+
+    def first_arrival(self) -> float:
+        return self._order[0].arrival if self._order else 0.0
+
+    def exhausted(self) -> bool:
+        return self._pos >= len(self._states)
+
+
+class LiveSource(ArrivalSource):
+    """A thread-safe online arrival queue (the ``submit()`` path).
+
+    Producers (any thread) call :meth:`submit` with a builder that is
+    handed the **wall-clock arrival stamp** — seconds since the run
+    started — under the source lock, so arrivals are monotone.  The
+    serving loop drains the queue between events and blocks in
+    :meth:`wait` while idle until a new submission, a :meth:`kick` (an
+    executor future completing), or :meth:`close`; ``close()`` lets the
+    loop drain what's left and finish.
+    """
+
+    live = True
+
+    def __init__(self, *, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._t0: Optional[float] = None
+        self._cond = threading.Condition()
+        self._pending: List[RequestState] = []
+        self._all: List[RequestState] = []
+        self._closed = False
+        self._version = 0
+
+    def start(self) -> None:
+        with self._cond:
+            if self._t0 is None:
+                self._t0 = self._clock()
+
+    def now(self) -> float:
+        return 0.0 if self._t0 is None else self._clock() - self._t0
+
+    def submit(self, build: Callable[[float], RequestState]) -> RequestState:
+        """Enqueue ``build(arrival_stamp)``; returns the built state."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("cannot submit to a closed LiveSource")
+            state = build(self.now())
+            self._pending.append(state)
+            self._all.append(state)
+            self._version += 1
+            self._cond.notify_all()
+        return state
+
+    def close(self) -> None:
+        """No further submissions; the serving loop drains and returns."""
+        with self._cond:
+            self._closed = True
+            self._version += 1
+            self._cond.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def kick(self) -> None:
+        with self._cond:
+            self._version += 1
+            self._cond.notify_all()
+
+    def version(self) -> int:
+        with self._cond:
+            return self._version
+
+    def wait(self, seen: int, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            if self._version != seen:
+                return True
+            return self._cond.wait_for(lambda: self._version != seen,
+                                       timeout)
+
+    def records(self) -> List[RequestState]:
+        with self._cond:
+            return list(self._all)
+
+    def take_until(self, barrier: float) -> List[RequestState]:
+        with self._cond:
+            out: List[RequestState] = []
+            while self._pending and self._pending[0].req.arrival <= barrier:
+                out.append(self._pending.pop(0))
+            return out
+
+    def exhausted(self) -> bool:
+        with self._cond:
+            return self._closed and not self._pending
+
+
 class ServingRuntime:
     """One continuous-batching core behind both prediction and execution."""
 
     def __init__(self, plan: ServingPlan, executor: Executor, *,
-                 mode: str = "events", preempt_policy: str = "latest"):
+                 mode: str = "events", preempt_policy: str = "latest",
+                 on_done: Optional[Callable[[RequestState], None]] = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.plan = plan
         self.executor = executor
         self.mode = mode
         self.preempt_policy = preempt_policy
+        self.on_done = on_done    # fired (orchestrator thread) per finished
+        self._workers: Dict[int, ReplicaWorker] = {}   # or dropped request
+        self.reset()
+
+    def reset(self) -> None:
+        """Rebuild all serving state over the base plan so the same
+        runtime can serve again (the session/server lifecycle: one
+        long-lived runtime, many runs).  Executor-side state is reset
+        separately (e.g. ``EngineExecutor.configure``)."""
+        self._close_workers()
         self.replicas: List[ReplicaRuntime] = [
-            ReplicaRuntime(i, cfg, executor, preempt_policy=preempt_policy)
-            for i, cfg in enumerate(plan.replicas)]
-        self.router = AssignmentRouter(plan)
+            ReplicaRuntime(i, cfg, self.executor,
+                           preempt_policy=self.preempt_policy,
+                           on_done=self.on_done)
+            for i, cfg in enumerate(self.plan.replicas)]
+        self.router = AssignmentRouter(self.plan)
         # router's plan-local replica j -> global ReplicaRuntime
         self._route_map: List[ReplicaRuntime] = list(self.replicas)
         self.info: Dict[str, object] = {}
         self.scale_log: List[object] = []     # ScaleDecision records
-        self._workers: Dict[int, ReplicaWorker] = {}
 
     # ------------------------------------------------------------- dispatch
 
@@ -96,6 +288,8 @@ class ServingRuntime:
         j = self.router.route(state.req)
         if j is None:
             state.replica = -1     # unroutable: no replica serves this model
+            if self.on_done is not None:
+                self.on_done(state)    # unblock any waiting handle
             return
         state.routed_at = state.req.arrival if at is None else at
         self._route_map[j].enqueue(state)
@@ -135,7 +329,8 @@ class ServingRuntime:
                 idx = len(self.replicas)
                 self.executor.add_replica(cfg)
                 rep = ReplicaRuntime(idx, cfg, self.executor,
-                                     preempt_policy=self.preempt_policy)
+                                     preempt_policy=self.preempt_policy,
+                                     on_done=self.on_done)
                 rep.now = event.time          # spun up at the replan point
                 self.replicas.append(rep)
                 new_map.append(rep)
@@ -192,32 +387,45 @@ class ServingRuntime:
     def run(self, trace: Trace, *,
             replan: Union[ReplanEvent, Sequence[ReplanEvent], None] = None,
             autoscale=None) -> RuntimeResult:
-        """Serve the trace; returns per-request records + aggregate metrics.
+        """Serve a recorded trace (thin wrapper over :meth:`run_source`
+        with a :class:`TraceSource`; byte-identical to the historical
+        trace loop)."""
+        return self.run_source(TraceSource(trace), replan=replan,
+                               autoscale=autoscale)
+
+    def run_source(self, source: ArrivalSource, *,
+                   replan: Union[ReplanEvent, Sequence[ReplanEvent],
+                                 None] = None,
+                   autoscale=None) -> RuntimeResult:
+        """Serve every arrival the source produces; returns per-request
+        records + aggregate metrics.
 
         ``replan`` passes pre-planned :class:`ReplanEvent` s; ``autoscale``
         optionally passes a :class:`~repro.core.scheduler.ScalePolicy`
-        that emits further replans online from observed load.
+        that emits further replans online from observed load.  With a
+        ``live`` source, replan/tick times are wall-clock offsets from the
+        run start and the loop blocks while idle instead of returning.
         """
         events: List[ReplanEvent] = (
             [replan] if isinstance(replan, ReplanEvent)
             else sorted(replan, key=lambda e: e.time) if replan else [])
-        order = sorted(trace.requests, key=lambda q: q.arrival)
-        states = [RequestState(req=req) for req in order]
-        pos = 0
+        source.start()
         ei = 0
         tick = math.inf
         if autoscale is not None:
             autoscale.reset()
-            tick = (order[0].arrival if order else 0.0) + autoscale.interval
+            tick = source.first_arrival() + autoscale.interval
         try:
             while True:
                 next_replan = (events[ei].time if ei < len(events)
                                else math.inf)
                 barrier = min(next_replan, tick)
-                while pos < len(states) and order[pos].arrival <= barrier:
-                    self._dispatch(states[pos])
-                    pos += 1
-                self._advance_all(until=barrier)
+                for state in source.take_until(barrier):
+                    self._dispatch(state)
+                if source.live:
+                    self._advance_live(source, until=barrier)
+                else:
+                    self._advance_all(until=barrier)
                 if barrier == math.inf:
                     break
                 if next_replan <= tick:
@@ -226,12 +434,13 @@ class ServingRuntime:
                 else:
                     self._autoscale_tick(tick, autoscale)
                     tick += autoscale.interval
-                    if (pos >= len(states) and ei >= len(events)
+                    if (source.exhausted() and ei >= len(events)
                             and all(r.next_event_time() == math.inf
                                     for r in self.replicas)):
-                        break     # trace fully served: stop ticking
+                        break     # fully served and closed: stop ticking
         finally:
             self._close_workers()
+        states = source.records()
         busy = np.array([r.busy for r in self.replicas])
         info = dict(self.info)
         info["preemptions"] = float(sum(r.preempted for r in self.replicas))
@@ -324,11 +533,83 @@ class ServingRuntime:
                 if t2 < until:
                     heapq.heappush(heap, (t2, rep.index))
 
+    # ----------------------------------------------------------------- live
+
+    def _advance_live(self, source: ArrivalSource,
+                      until: float = math.inf) -> None:
+        """Serve a live source until the barrier (a replan/autoscale time,
+        in wall-clock offsets) or — when ``until`` is inf — until the
+        source is closed and fully drained.
+
+        Unlike the trace path, arrivals are *not* known up front: the loop
+        drains new submissions between every event (so a request can join
+        a replica's next admission group while its batch is mid-decode),
+        executes each replica's next startable event (on the replica's
+        actor worker when the executor is concurrent, overlapping wall
+        time across replicas exactly like :meth:`_advance_concurrent`),
+        and blocks on the source while nothing is startable.  Future
+        completions ``kick()`` the source so commit latency isn't a poll
+        interval.
+        """
+        conc = getattr(self.executor, "concurrent", False)
+        import concurrent.futures as cf
+        inflight: Dict[cf.Future, tuple] = {}
+        busy: set = set()
+        while True:
+            seen = source.version()
+            done = [f for f in list(inflight) if f.done()]
+            for fut in done:
+                rep, pending = inflight.pop(fut)
+                busy.discard(rep.index)
+                rep.complete_step(pending, fut.result())
+            for state in source.take_until(until):
+                self._dispatch(state)
+            launched = False
+            for rep in list(self.replicas):
+                if rep.index in busy:
+                    continue
+                if rep.next_event_time() >= until:
+                    continue
+                pending = rep.begin_step(until)
+                if pending is None:
+                    continue
+                launched = True
+                if conc:
+                    fut = self._worker(rep.index).submit(
+                        lambda p=pending, i=rep.index:
+                            p.execute(self.executor, i))
+                    inflight[fut] = (rep, pending)
+                    busy.add(rep.index)
+                    fut.add_done_callback(lambda _f: source.kick())
+                else:
+                    rep.complete_step(pending,
+                                      pending.execute(self.executor,
+                                                      rep.index))
+            if launched or done:
+                continue
+            if not inflight:
+                idle = all(r.next_event_time() >= until
+                           for r in self.replicas)
+                if until == math.inf:
+                    if source.exhausted() and idle:
+                        return
+                elif source.now() >= until or (source.exhausted() and idle):
+                    return
+            timeout = None
+            if until < math.inf:
+                timeout = max(0.0, until - source.now())
+                if inflight and timeout <= 0.0:
+                    # Past the barrier but a launched event is still in
+                    # flight: its done-callback kick() is the wakeup —
+                    # block instead of spinning on a zero timeout.
+                    timeout = None
+            source.wait(seen, timeout)
+
     # ------------------------------------------------------------- workers
 
     def _worker(self, index: int) -> ReplicaWorker:
         worker = self._workers.get(index)
-        if worker is None:
+        if worker is None or not worker.alive:
             device = None
             device_for = getattr(self.executor, "device_for", None)
             if device_for is not None:

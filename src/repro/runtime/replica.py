@@ -99,7 +99,7 @@ class ReplicaRuntime:
     """Event-driven continuous batching for one replica."""
 
     def __init__(self, index: int, config: Config, executor: Executor, *,
-                 preempt_policy: str = "latest"):
+                 preempt_policy: str = "latest", on_done=None):
         if preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(f"preempt_policy must be one of "
                              f"{PREEMPT_POLICIES}, got {preempt_policy!r}")
@@ -107,6 +107,10 @@ class ReplicaRuntime:
         self.config = config
         self.executor = executor
         self.preempt_policy = preempt_policy
+        # Completion hook (live sessions stream per-request results); always
+        # fired on the orchestrator thread, after backend resources are
+        # released.
+        self.on_done = on_done
         self.queue: List[RequestState] = []    # sorted by arrival
         self.active: List[RequestState] = []
         self.now = 0.0
@@ -141,6 +145,8 @@ class ReplicaRuntime:
         if mgr is not None:
             mgr.free(state.req.req_id)
         self.executor.release(self.index, state)
+        if self.on_done is not None:
+            self.on_done(state)
 
     def _pick_victim(self, batch: Sequence[RequestState]) -> RequestState:
         """Choose the preemption victim per ``preempt_policy``."""

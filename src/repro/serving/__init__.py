@@ -1,5 +1,12 @@
-"""Serving layer: replica engines and the multi-replica orchestrator that
-executes a ServingPlan on the unified runtime (``repro.runtime``)."""
+"""Serving layer: replica engines, the online Session façade
+(``repro.serve`` → live submit/stream over the unified runtime), and the
+deprecated ``HeterogeneousServer`` trace-replay wrapper."""
 from repro.serving.engine import GenerationResult, ReplicaEngine
 from repro.serving.router import AssignmentRouter
 from repro.serving.server import HeterogeneousServer, ServeStats
+from repro.serving.session import RequestHandle, Session, serve
+
+__all__ = [
+    "AssignmentRouter", "GenerationResult", "HeterogeneousServer",
+    "ReplicaEngine", "RequestHandle", "ServeStats", "Session", "serve",
+]

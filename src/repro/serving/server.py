@@ -1,19 +1,19 @@
-"""Multi-replica serving orchestrator (thin wrapper over the runtime).
+"""Deprecated multi-replica serving orchestrator.
 
-Executes a ``ServingPlan`` end-to-end with *real* JAX model replicas
-through the unified serving runtime: the same continuous-batching
-scheduler, streaming dispatch, and router that power the cost-model
-simulator drive an :class:`~repro.runtime.executor.EngineExecutor`, so the
-executed batches are exactly the batches the plan was evaluated on.  On
-this container all replicas share one CPU device (they'd each own their
-rented accelerators in deployment); the heterogeneous *speeds* are the cost
-model's domain — this layer proves the plan is executable and the routing
-math is consistent.
+:class:`HeterogeneousServer` predates the session API and survives as a
+deprecated alias for the trace-replay half of :class:`repro.serving.Session`:
+it builds one :class:`~repro.runtime.executor.EngineExecutor` over the plan
+and replays traces through one **persistent**
+:class:`~repro.runtime.ServingRuntime` (rebuilt only when the drive mode
+changes; every ``serve`` call resets state and reuses it — the session
+lifecycle).  New code should use ``repro.serve(spec_or_plan, ...)``, which
+adds live ``submit()``/streaming on the same runtime.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.plan import ServingPlan
@@ -37,23 +37,34 @@ class ServeStats:
 
 
 class HeterogeneousServer:
-    """Executes a plan: one ReplicaEngine per plan replica."""
+    """Deprecated: use ``repro.serve(...)`` / ``repro.serving.Session``."""
 
     def __init__(self, plan: ServingPlan, arch_cfgs: Sequence[ArchConfig],
                  *, params_per_model: Optional[Dict[int, object]] = None,
                  max_batch: int = 8, models=None,
                  paged: Optional[bool] = None, concurrent: bool = True,
                  fused_steps: Optional[int] = None):
+        warnings.warn(
+            "HeterogeneousServer is deprecated; use repro.serve(spec_or_plan,"
+            " arch_cfgs=...) — Session.replay(trace) is the serve() "
+            "equivalent, and submit() adds live streaming",
+            DeprecationWarning, stacklevel=2)
         self.plan = plan
         self.executor = EngineExecutor(plan, arch_cfgs,
                                        params_per_model=params_per_model,
                                        models=models, max_batch=max_batch,
                                        paged=paged, concurrent=concurrent,
                                        fused_steps=fused_steps)
+        self.runtime: Optional[ServingRuntime] = None
 
     @property
     def engines(self):
         return self.executor.engines
+
+    @property
+    def last_runtime(self) -> Optional[ServingRuntime]:
+        """Backwards-compatible alias: the (now persistent) runtime."""
+        return self.runtime
 
     def serve(self, trace: Trace, *, input_len: int = 16, max_new: int = 8,
               seed: int = 0, replan: Optional[ReplanEvent] = None,
@@ -64,13 +75,18 @@ class HeterogeneousServer:
         stays CPU-sized).  ``autoscale`` optionally passes a
         :class:`repro.core.scheduler.ScalePolicy` for online scaling;
         ``mode="sequential"`` forces the legacy replica-at-a-time loop
-        (used by equivalence tests)."""
+        (used by equivalence tests).  The underlying runtime persists
+        across calls — state resets, jit caches and replica identities
+        stay warm."""
         self.executor.configure(input_len=input_len, max_new=max_new,
                                 seed=seed)
-        runtime = ServingRuntime(self.plan, self.executor, mode=mode)
-        self.last_runtime = runtime     # scale_log / admission_log access
+        if self.runtime is None or self.runtime.mode != mode:
+            self.runtime = ServingRuntime(self.plan, self.executor,
+                                          mode=mode)
+        else:
+            self.runtime.reset()
         t0 = time.perf_counter()
-        result = runtime.run(trace, replan=replan, autoscale=autoscale)
+        result = self.runtime.run(trace, replan=replan, autoscale=autoscale)
         wall = time.perf_counter() - t0
         return ServeStats(
             completed=result.num_completed,

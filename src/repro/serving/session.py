@@ -1,0 +1,409 @@
+"""Online serving session: live ``submit()``/streaming over the runtime.
+
+The user-facing façade of the spec → plan → serve lifecycle::
+
+    import repro
+    from repro.core import DeploymentSpec
+
+    spec = DeploymentSpec(models=[...], workload=trace, catalog=GPU_CATALOG,
+                          availability=snapshot, budget=30.0)
+    with repro.serve(spec, arch_cfgs=[cfg]) as session:
+        handle = session.submit("why is the sky blue?", max_new=32)
+        for tok in handle.tokens():     # streams as the engine decodes
+            ...
+        print(handle.ttft, handle.tpot)
+    result = session.result             # the usual RuntimeResult
+
+A :class:`Session` owns one long-lived :class:`~repro.runtime.ServingRuntime`
+over the plan's replicas.  ``submit()`` stamps the request with a
+wall-clock arrival through a :class:`~repro.runtime.LiveSource` and
+returns a :class:`RequestHandle`; the runtime thread routes it, batches it
+into the continuous-batching loop alongside everything else in flight,
+and the executor streams each event's ``(B, k)`` token chunk back through
+the handle.  ``close()`` (or leaving the ``with`` block) drains in-flight
+requests and returns the same :class:`~repro.runtime.RuntimeResult` a
+trace replay produces.  :meth:`Session.replay` serves a recorded trace
+through the same runtime (what the deprecated ``HeterogeneousServer.serve``
+wraps).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.plan import ServingPlan
+from repro.core.spec import DeploymentSpec
+from repro.core.spec import plan as plan_spec
+from repro.core.workloads import WORKLOAD_TYPES, Request, Trace
+from repro.runtime import (CostModelExecutor, EngineExecutor, LiveSource,
+                           RequestState, RuntimeResult, ServingRuntime)
+
+__all__ = ["RequestHandle", "Session", "serve"]
+
+
+def _encode_prompt(prompt) -> Optional[np.ndarray]:
+    """Token ids for a submitted prompt: a string is byte-encoded (the
+    engine vocabulary is synthetic — what matters is determinism), a
+    sequence of ints passes through, None keeps the per-request RNG
+    prompt."""
+    if prompt is None:
+        return None
+    if isinstance(prompt, str):
+        return np.frombuffer(prompt.encode("utf-8"), dtype=np.uint8
+                             ).astype(np.int64)
+    return np.asarray(list(prompt), dtype=np.int64)
+
+
+def _nearest_workload(input_len: int, output_len: int) -> int:
+    """The workload class whose (input, output) averages are closest —
+    routing and the cost model are keyed on workload classes."""
+    return min(range(len(WORKLOAD_TYPES)),
+               key=lambda i: (abs(WORKLOAD_TYPES[i].input_len - input_len)
+                              + abs(WORKLOAD_TYPES[i].output_len
+                                    - output_len)))
+
+
+class RequestHandle:
+    """One submitted request: token stream + per-request SLO metrics.
+
+    Tokens arrive in executed-event chunks (exactly the executor's
+    ``token_log`` trail, including recompute re-prefills after a
+    preemption); :meth:`tokens` blocks until the next token or end of
+    stream.  :meth:`result` blocks until the request leaves the runtime
+    (finished — or dropped, see :attr:`failed`).
+    """
+
+    def __init__(self, session: "Session", slo=None):
+        self._session = session
+        self.slo = slo
+        self.state: Optional[RequestState] = None   # set at submit time
+        self._cond = threading.Condition()
+        self._stream: List[int] = []
+        self._done = False
+
+    @property
+    def req_id(self) -> int:
+        return self.state.req.req_id
+
+    # ------------------------------------------------------- producer side
+
+    def _push(self, tokens: Sequence[int]) -> None:
+        with self._cond:
+            self._stream.extend(tokens)
+            self._cond.notify_all()
+
+    def _finish(self) -> None:
+        with self._cond:
+            self._done = True
+            self._cond.notify_all()
+
+    # ------------------------------------------------------- consumer side
+
+    def tokens(self, timeout: Optional[float] = None) -> Iterator[int]:
+        """Yield this request's tokens as the engine produces them; the
+        iterator ends when the request completes (empty on analytical
+        backends, which generate no tokens)."""
+        i = 0
+        while True:
+            with self._cond:
+                while i >= len(self._stream) and not self._done:
+                    if not self._cond.wait(timeout):
+                        raise TimeoutError(f"no token within {timeout}s")
+                if i >= len(self._stream):
+                    return
+                tok = self._stream[i]
+            i += 1
+            yield tok
+
+    def result(self, timeout: Optional[float] = None) -> RequestState:
+        """Block until the request left the runtime; returns its record
+        (None only if the serving loop died before the request was
+        built — see :attr:`failed`)."""
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._done, timeout):
+                raise TimeoutError("request still in flight")
+        return self.state
+
+    @property
+    def done(self) -> bool:
+        return self._done and self.state is not None and self.state.done
+
+    @property
+    def failed(self) -> bool:
+        """True when the request left the runtime unserved: no replica
+        serves its model (dropped), or the serving loop died before the
+        request was even built."""
+        return self._done and (self.state is None or not self.state.done)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (seconds on the runtime's clock; live
+        sessions stamp arrivals in wall time, so this is the observed
+        submit → first-token latency)."""
+        return self.state.ttft
+
+    @property
+    def tpot(self) -> float:
+        return self.state.tpot
+
+    @property
+    def latency(self) -> float:
+        return self.state.latency
+
+    def slo_met(self) -> Optional[bool]:
+        """Whether this request met its per-request SLO (None if no SLO
+        was attached at submit or session level)."""
+        if self.slo is None:
+            return None
+        return self.slo.met(self.state)
+
+
+class Session:
+    """A live serving session over one plan (see module docstring).
+
+    The session is lazy: the serving thread starts at the first
+    :meth:`submit` (or :meth:`open`), so a fresh session can also
+    :meth:`replay` recorded traces through the same runtime — the
+    reuse-across-runs lifecycle ``HeterogeneousServer`` now wraps.
+    """
+
+    def __init__(self, plan: ServingPlan, executor, *,
+                 mode: str = "events", preempt_policy: str = "latest",
+                 replan=None, autoscale=None, slo=None):
+        self.plan = plan
+        self.executor = executor
+        self.slo = slo
+        self.runtime = ServingRuntime(plan, executor, mode=mode,
+                                      preempt_policy=preempt_policy,
+                                      on_done=self._on_done)
+        executor.token_sink = self._on_tokens
+        self._replan = replan
+        self._autoscale = autoscale
+        self._lock = threading.Lock()
+        self._handles: Dict[int, RequestHandle] = {}
+        self._next_id = 0
+        self.source: Optional[LiveSource] = None
+        self._thread: Optional[threading.Thread] = None
+        self._result: Optional[RuntimeResult] = None
+        self._error: Optional[BaseException] = None
+        self._closed = False
+
+    # ------------------------------------------------------------ lifecycle
+
+    def open(self) -> "Session":
+        """Start the serving thread (idempotent; ``submit`` calls it).
+        Thread-safe: concurrent first submits race to one serving loop."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        with self._lock:
+            if self._thread is not None:
+                return self
+            # A prior replay() may have used this runtime/executor: start
+            # the live run from clean state (fresh replica clocks, empty
+            # token trails) with the streaming sink re-attached.
+            configure = getattr(self.executor, "configure", None)
+            if configure is not None:
+                configure()
+            self.executor.token_sink = self._on_tokens
+            self.runtime.reset()
+            self.source = LiveSource()
+            self._thread = threading.Thread(
+                target=self._serve_loop, name="session-serve", daemon=True)
+            self._thread.start()
+        return self
+
+    def _serve_loop(self) -> None:
+        try:
+            self._result = self.runtime.run_source(
+                self.source, replan=self._replan, autoscale=self._autoscale)
+        except BaseException as exc:   # surface through close()/submit()
+            self._error = exc
+        finally:
+            # A crashed loop must not leave the source accepting
+            # submissions nobody will ever serve.
+            self.source.close()
+            with self._lock:
+                handles = list(self._handles.values())
+            for h in handles:          # unblock every waiting consumer
+                h._finish()
+
+    def close(self, timeout: Optional[float] = None) -> RuntimeResult:
+        """Drain in-flight requests and stop serving; returns the run's
+        :class:`~repro.runtime.RuntimeResult` (idempotent).  On a drain
+        timeout the session stays open so ``close`` can be retried."""
+        if self._closed:
+            if self._error is not None:
+                raise self._error
+            return self._result
+        self.open()
+        self.source.close()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"session did not drain within {timeout}s")
+        self._closed = True
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # Don't mask an in-flight exception with a drain timeout.
+        if exc_type is None:
+            self.close()
+        else:
+            try:
+                self.close(timeout=5.0)
+            except Exception:
+                pass
+
+    @property
+    def result(self) -> Optional[RuntimeResult]:
+        """The drained run's result (None until :meth:`close`)."""
+        return self._result
+
+    # --------------------------------------------------------------- submit
+
+    def submit(self, prompt: Union[str, Sequence[int], None] = None, *,
+               model: int = 0, workload: Optional[int] = None,
+               input_len: Optional[int] = None,
+               output_len: Optional[int] = None,
+               max_new: Optional[int] = None,
+               slo=None) -> RequestHandle:
+        """Submit one request to the live session; returns its handle.
+
+        ``prompt`` — a string, token-id sequence, or None (synthetic
+        per-request prompt).  ``max_new`` / ``output_len`` bound generated
+        tokens (the executor's runtime budget still caps real engines).
+        ``workload`` pins the paper's workload class for routing/costing;
+        when omitted it's inferred as the class nearest the request's
+        (input, output) lengths.  ``slo`` attaches a per-request
+        :class:`~repro.runtime.SLO` scored by :meth:`RequestHandle.slo_met`.
+        """
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if self._error is not None:
+            raise RuntimeError("serving loop died") from self._error
+        self.open()
+        tokens = _encode_prompt(prompt)
+        out = output_len if output_len is not None else max_new
+        if workload is None:
+            win = input_len if input_len is not None else (
+                len(tokens) if tokens is not None else
+                WORKLOAD_TYPES[0].input_len)
+            wout = out if out is not None else WORKLOAD_TYPES[0].output_len
+            workload = _nearest_workload(win, wout)
+        wtype = WORKLOAD_TYPES[workload]
+        if input_len is None:
+            input_len = len(tokens) if tokens is not None else wtype.input_len
+        if out is None:
+            out = wtype.output_len
+        handle = RequestHandle(self, slo=slo if slo is not None else self.slo)
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self._handles[rid] = handle
+        if tokens is not None and hasattr(self.executor, "prompt_overrides"):
+            self.executor.prompt_overrides[rid] = tokens
+
+        def build(arrival: float) -> RequestState:
+            handle.state = RequestState(req=Request(
+                req_id=rid, workload=workload, input_len=int(input_len),
+                output_len=int(out), arrival=arrival, model=model))
+            return handle.state
+
+        self.source.submit(build)
+        return handle
+
+    # --------------------------------------------------------------- replay
+
+    def replay(self, trace: Trace, *, replan=None,
+               autoscale=None) -> RuntimeResult:
+        """Serve a recorded trace through this session's runtime (offline
+        twin of the live path; resets runtime *and* executor state first —
+        token trails, counters, replan-added replicas — so sessions and
+        servers can run many traces back to back)."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("session is live; replay needs a fresh or "
+                               "drained session")
+        configure = getattr(self.executor, "configure", None)
+        if configure is not None:
+            configure()       # keeps the scale/seed set at serve() time
+        self.runtime.reset()
+        return self.runtime.run(trace, replan=replan, autoscale=autoscale)
+
+    # ------------------------------------------------------------ callbacks
+
+    def _on_tokens(self, req_id: int, tokens: List[int]) -> None:
+        with self._lock:
+            handle = self._handles.get(req_id)
+        if handle is not None:
+            handle._push(tokens)
+
+    def _on_done(self, state: RequestState) -> None:
+        # Pop, don't get: a long-lived session must not accumulate one
+        # handle (plus its token stream and prompt) per request served —
+        # the caller's own reference keeps the handle alive.
+        rid = state.req.req_id
+        with self._lock:
+            handle = self._handles.pop(rid, None)
+        overrides = getattr(self.executor, "prompt_overrides", None)
+        if overrides is not None:
+            overrides.pop(rid, None)
+        if handle is not None:
+            handle._finish()
+
+
+def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
+          strategy: str = "milp", plan_options: Optional[dict] = None,
+          backend: str = "engine", arch_cfgs: Optional[Sequence] = None,
+          models: Optional[Sequence] = None, executor=None,
+          input_len: Optional[int] = None, max_new: Optional[int] = None,
+          seed: Optional[int] = None,
+          mode: str = "events", preempt_policy: str = "latest",
+          replan=None, autoscale=None, slo=None,
+          **executor_options) -> Session:
+    """Open a serving :class:`Session` from a spec (planned via the
+    registry: ``strategy`` + ``plan_options``) or an existing plan.
+
+    ``backend="engine"`` serves real JAX replicas (``arch_cfgs`` maps each
+    spec/plan model index to its :class:`~repro.models.config.ArchConfig`;
+    ``input_len``/``max_new``/``seed`` set the runtime scale — left None,
+    the executor's existing configuration stands, so a pre-built
+    ``executor=`` keeps the scale its owner chose) and ``backend="cost"``
+    serves the analytical cost model (no tokens — useful for capacity
+    dry-runs of the same session code).
+    """
+    if isinstance(spec_or_plan, DeploymentSpec):
+        spec = spec_or_plan
+        the_plan = plan_spec(spec, strategy=strategy, **(plan_options or {}))
+        models = list(spec.models) if models is None else list(models)
+        slo = spec.slo if slo is None else slo
+    elif isinstance(spec_or_plan, ServingPlan):
+        the_plan = spec_or_plan
+    else:
+        raise TypeError(f"serve() wants a DeploymentSpec or ServingPlan, "
+                        f"got {type(spec_or_plan).__name__}")
+    if executor is None:
+        if backend == "cost":
+            executor = CostModelExecutor(the_plan.replicas, models,
+                                         **executor_options)
+        elif backend == "engine":
+            if arch_cfgs is None:
+                raise ValueError(
+                    'backend="engine" needs arch_cfgs (one ArchConfig per '
+                    'model index) — or pass backend="cost" / executor=')
+            executor = EngineExecutor(the_plan, arch_cfgs, models=models,
+                                      **executor_options)
+        else:
+            raise ValueError(f'backend must be "engine" or "cost", '
+                             f'got {backend!r}')
+    if isinstance(executor, EngineExecutor):
+        executor.configure(input_len=input_len, max_new=max_new, seed=seed)
+    return Session(the_plan, executor, mode=mode,
+                   preempt_policy=preempt_policy, replan=replan,
+                   autoscale=autoscale, slo=slo)

@@ -1,0 +1,171 @@
+"""Planner-registry tests: DeploymentSpec validation and strategy parity —
+every registered strategy must produce a plan identical (composition,
+configs, assignment) to the legacy ``solve_*`` entrypoint it replaces."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
+                        DeploymentSpec, make_trace, plan, planner_names,
+                        replan, uniform_composition)
+from repro.core import scheduler as sched
+from repro.core.scheduler import ScalePolicy
+
+TRACES = {
+    "t1": make_trace("trace1", num_requests=300, seed=0),
+    "t2": make_trace("trace2", num_requests=200, arrival_rate=5.0, seed=1),
+}
+AVAILS = {"avail1": AVAILABILITY_SNAPSHOTS["avail1"],
+          "avail2": AVAILABILITY_SNAPSHOTS["avail2"]}
+BUDGET = 20.0
+FAST = dict(tol=2.0)           # keep the MILP search cheap in CI
+
+
+def _spec(trace, avail, **kw):
+    return DeploymentSpec(models=[LLAMA3_8B], workload=trace,
+                          catalog=GPU_CATALOG, availability=avail,
+                          budget=BUDGET, **kw)
+
+
+def _assert_identical(a, b):
+    """Same composition, same configs, same assignment, same makespan."""
+    assert [c.key for c in a.replicas] == [c.key for c in b.replicas]
+    assert a.composition() == b.composition()
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert a.demands == b.demands
+    assert a.makespan == b.makespan
+    assert a.cost == b.cost
+
+
+def _legacy(fn, *args, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kw)
+
+
+@pytest.mark.parametrize("tkey", sorted(TRACES))
+@pytest.mark.parametrize("akey", sorted(AVAILS))
+def test_milp_strategy_matches_solve(tkey, akey):
+    trace, avail = TRACES[tkey], AVAILS[akey]
+    ours = plan(_spec(trace, avail), **FAST)
+    legacy = _legacy(sched.solve, [LLAMA3_8B], trace, GPU_CATALOG, avail,
+                     BUDGET, **FAST)
+    _assert_identical(ours, legacy)
+
+
+def test_homogeneous_strategy_matches_solve_homogeneous():
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    ours = plan(_spec(trace, avail), strategy="homogeneous",
+                gpu_type="A6000", **FAST)
+    legacy = _legacy(sched.solve_homogeneous, [LLAMA3_8B], trace,
+                     GPU_CATALOG, "A6000", BUDGET, **FAST)
+    _assert_identical(ours, legacy)
+
+
+def test_uniform_strategy_matches_solve_uniform_deployment():
+    trace, avail = TRACES["t1"], AVAILS["avail2"]
+    ours = plan(_spec(trace, avail), strategy="uniform", tp=4, **FAST)
+    legacy = _legacy(sched.solve_uniform_deployment, [LLAMA3_8B], trace,
+                     GPU_CATALOG, avail, BUDGET, tp=4, **FAST)
+    _assert_identical(ours, legacy)
+
+
+def test_fixed_strategy_matches_solve_fixed_composition():
+    trace, avail = TRACES["t2"], AVAILS["avail1"]
+    comp = uniform_composition(GPU_CATALOG, avail, BUDGET)
+    ours = plan(_spec(trace, avail), strategy="fixed", composition=comp,
+                **FAST)
+    legacy = _legacy(sched.solve_fixed_composition, [LLAMA3_8B], trace,
+                     GPU_CATALOG, comp, BUDGET, **FAST)
+    _assert_identical(ours, legacy)
+    # the default composition IS the uniform split (ablation i)
+    default = plan(_spec(trace, avail), strategy="fixed", **FAST)
+    _assert_identical(ours, default)
+
+
+def test_cost_objective_matches_solve_min_cost():
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    base = plan(_spec(trace, avail), **FAST)
+    slo = base.makespan * 2.0
+    ours = plan(_spec(trace, avail, objective="cost", slo_makespan=slo))
+    legacy = _legacy(sched.solve_min_cost, [LLAMA3_8B], trace, GPU_CATALOG,
+                     avail, BUDGET, slo)
+    _assert_identical(ours, legacy)
+    assert ours.cost <= base.cost + 1e-6
+    # makespan-only solver knobs must not be silently ignored
+    with pytest.raises(ValueError, match="do not apply"):
+        plan(_spec(trace, avail, objective="cost", slo_makespan=slo),
+             tol=0.5)
+
+
+def test_replan_matches_legacy_replan():
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    spec = _spec(trace, avail)
+    base = plan(spec, **FAST)
+    dropped = dict(avail, H100=0)
+    ours = replan(base, spec, availability=dropped, **FAST)
+    legacy = _legacy(sched.replan, base, [LLAMA3_8B], trace, GPU_CATALOG,
+                     dropped, BUDGET, **FAST)
+    _assert_identical(ours, legacy)
+    assert (ours.solver_info["replicas_kept"]
+            == legacy.solver_info["replicas_kept"])
+    assert "H100" not in ours.composition()
+
+
+def test_replan_accepts_legacy_positional_signature():
+    """`from repro.core import replan` predates the spec API: the old
+    positional call shape must keep working (with a warning)."""
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    spec = _spec(trace, avail)
+    base = plan(spec, **FAST)
+    dropped = dict(avail, H100=0)
+    with pytest.warns(DeprecationWarning, match="replan"):
+        legacy = replan(base, [LLAMA3_8B], trace, GPU_CATALOG, dropped,
+                        BUDGET, **FAST)
+    new = replan(base, spec, availability=dropped, **FAST)
+    _assert_identical(legacy, new)
+    with pytest.raises(TypeError):
+        replan(base, [LLAMA3_8B], trace)          # malformed legacy call
+    with pytest.raises(TypeError):
+        replan(base, spec, trace)                 # extra positional
+
+
+def test_registry_surface():
+    for name in ("milp", "homogeneous", "uniform", "fixed"):
+        assert name in planner_names()
+    with pytest.raises(ValueError, match="unknown planning strategy"):
+        plan(_spec(TRACES["t1"], AVAILS["avail1"]), strategy="nope")
+
+
+def test_spec_validation():
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    with pytest.raises(ValueError, match="budget"):
+        _spec(trace, avail).with_budget(-1.0)
+    with pytest.raises(ValueError, match="objective"):
+        _spec(trace, avail, objective="latency")
+    with pytest.raises(ValueError, match="slo_makespan"):
+        _spec(trace, avail, objective="cost")
+    spec = _spec(trace, avail)
+    assert spec.with_availability({"H100": 1}).availability == {"H100": 1}
+    assert spec.with_budget(5.0).budget == 5.0
+    assert spec.with_objective("cost", slo_makespan=10.0).slo_makespan == 10.0
+
+
+def test_legacy_wrappers_warn():
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        sched.solve([LLAMA3_8B], trace, GPU_CATALOG, avail, BUDGET, **FAST)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        sched.solve_homogeneous([LLAMA3_8B], trace, GPU_CATALOG, "A6000",
+                                BUDGET, **FAST)
+
+
+def test_scale_policy_from_spec():
+    trace, avail = TRACES["t1"], AVAILS["avail1"]
+    spec = _spec(trace, avail)
+    base = plan(spec, **FAST)
+    policy = ScalePolicy.from_spec(spec, base, window=2, cooldown=1)
+    assert policy.budget == spec.budget
+    assert [c.key for c in policy.candidates] == [c.key for c in base.replicas]
+    assert policy.window == 2 and policy.cooldown == 1

@@ -1,0 +1,407 @@
+"""Session API tests: arrival sources (TraceSource byte-identical to the
+historical trace loop, LiveSource wall-clock semantics), live submit /
+token streaming equivalence against ``EngineExecutor.token_log``, and the
+server's persistent-runtime lifecycle."""
+import math
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import GPU_CATALOG, make_trace
+from repro.core.costmodel import ModelProfile
+from repro.core.scheduler import _solve
+from repro.runtime import (CostModelExecutor, LiveSource, ServingRuntime,
+                           SLO, TraceSource)
+
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    trace = make_trace("trace1", num_requests=24, arrival_rate=50.0, seed=0)
+    plan = _solve([TINY], trace, GPU_CATALOG,
+                  {"A40": 4, "4090": 4, "H100": 2}, budget=8.0)
+    return plan, trace
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    from repro.configs import get_config
+    return get_config("llama3-8b").reduced()
+
+
+def _exact_schedule(result):
+    return {r.req.req_id: (r.replica, r.admitted_at, r.first_token_at,
+                           r.finished_at, r.preemptions)
+            for r in result.records}
+
+
+# ------------------------------------------------------------ TraceSource
+
+def test_trace_source_byte_identical_to_run(small_plan):
+    """run(trace) is a thin wrapper over run_source(TraceSource(trace)):
+    both paths must produce byte-identical schedules and admission logs
+    on the cost backend (the acceptance bar for the source refactor)."""
+    plan, trace = small_plan
+    rt_a = ServingRuntime(plan, CostModelExecutor(plan.replicas, [TINY]))
+    a = rt_a.run(trace)
+    rt_b = ServingRuntime(plan, CostModelExecutor(plan.replicas, [TINY]))
+    b = rt_b.run_source(TraceSource(trace))
+    assert _exact_schedule(a) == _exact_schedule(b)
+    assert a.makespan == b.makespan
+    assert ([r.admission_log for r in rt_a.replicas]
+            == [r.admission_log for r in rt_b.replicas])
+    np.testing.assert_array_equal(a.latencies, b.latencies)
+
+
+def test_trace_source_interface(small_plan):
+    _, trace = small_plan
+    src = TraceSource(trace)
+    src.start()
+    assert not src.exhausted()
+    assert src.first_arrival() == min(r.arrival for r in trace.requests)
+    got = src.take_until(math.inf)
+    assert [s.req.req_id for s in got] \
+        == [r.req_id for r in sorted(trace.requests, key=lambda q: q.arrival)]
+    assert src.exhausted()
+    assert src.take_until(math.inf) == []
+
+
+# ------------------------------------------------------------- LiveSource
+
+def test_live_source_stamps_and_orders():
+    src = LiveSource(clock=time.monotonic)
+    src.start()
+    s1 = src.submit(lambda t: _state(0, t))
+    s2 = src.submit(lambda t: _state(1, t))
+    assert 0.0 <= s1.req.arrival <= s2.req.arrival
+    assert [s.req.req_id for s in src.take_until(math.inf)] == [0, 1]
+    assert not src.exhausted()        # open: more may come
+    src.close()
+    assert src.exhausted()
+    with pytest.raises(RuntimeError):
+        src.submit(lambda t: _state(2, t))
+
+
+def test_live_source_wait_wakes_on_submit():
+    src = LiveSource()
+    src.start()
+    seen = src.version()
+    woke = []
+
+    def waiter():
+        woke.append(src.wait(seen, timeout=5.0))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    src.submit(lambda ts: _state(0, ts))
+    t.join(timeout=5.0)
+    assert woke == [True]
+    # a version observed before the submit returns immediately
+    assert src.wait(seen, timeout=0.0)
+
+
+def _state(rid, arrival, *, model=0, workload=0):
+    from repro.core.workloads import Request
+    from repro.runtime import RequestState
+    return RequestState(req=Request(req_id=rid, workload=workload,
+                                    input_len=16, output_len=4,
+                                    arrival=arrival, model=model))
+
+
+# ------------------------------------------------- live session (cost)
+
+def test_session_cost_backend_completes(small_plan):
+    plan, trace = small_plan
+    with repro.serve(plan, backend="cost", models=[TINY]) as session:
+        handles = [session.submit(workload=r.workload,
+                                  input_len=r.input_len,
+                                  output_len=r.output_len)
+                   for r in trace.requests[:12]]
+        recs = [h.result(timeout=30) for h in handles]
+    result = session.result
+    assert result.num_completed == 12
+    assert all(r.done for r in recs)
+    assert all(list(h.tokens()) == [] for h in handles)   # no tokens: cost
+    for h in handles:
+        assert math.isfinite(h.ttft) and h.ttft >= 0
+        assert h.latency >= h.ttft
+
+
+def test_session_unroutable_request_fails_fast(small_plan):
+    plan, _ = small_plan
+    with repro.serve(plan, backend="cost", models=[TINY, TINY]) as session:
+        ok = session.submit(workload=0)
+        alien = session.submit(workload=0, model=1)   # no model-1 replica
+        alien_rec = alien.result(timeout=30)
+        ok.result(timeout=30)
+    assert alien.failed and not alien_rec.done
+    assert ok.done
+    assert session.result.dropped == 1
+
+
+def test_session_slo_scoring(small_plan):
+    plan, _ = small_plan
+    with repro.serve(plan, backend="cost", models=[TINY],
+                     slo=SLO(ttft=1e9)) as session:
+        loose = session.submit(workload=0)
+        tight = session.submit(workload=0, slo=SLO(ttft=1e-12))
+        loose.result(timeout=30), tight.result(timeout=30)
+    assert loose.slo_met() is True
+    assert tight.slo_met() is False
+
+
+def test_session_close_is_idempotent_and_reports(small_plan):
+    plan, _ = small_plan
+    session = repro.serve(plan, backend="cost", models=[TINY])
+    session.submit(workload=0).result(timeout=30)
+    r1 = session.close(timeout=30)
+    r2 = session.close()
+    assert r1 is r2 is session.result
+    assert r1.num_completed == 1
+    with pytest.raises(RuntimeError):
+        session.submit(workload=0)
+
+
+# ----------------------------------------------- live session (engine)
+
+@pytest.mark.parametrize("concurrent", [False, True])
+def test_streaming_matches_token_log(small_plan, tiny_cfg, concurrent):
+    """Satellite: tokens yielded by RequestHandle.tokens() must exactly
+    equal EngineExecutor.token_log per request, and the handle's TTFT
+    (available once the first token streamed) must equal the record's
+    metric — under both the plain event loop and concurrent execution."""
+    plan, trace = small_plan
+    session = repro.serve(plan, arch_cfgs=[tiny_cfg], input_len=8,
+                          max_new=4, max_batch=8, concurrent=concurrent)
+    handles = [session.submit(workload=r.workload, input_len=r.input_len,
+                              output_len=r.output_len)
+               for r in trace.requests]
+    streams = [list(h.tokens(timeout=120)) for h in handles]
+    session.close(timeout=120)
+    log = session.executor.token_log
+    assert set(log) == {h.req_id for h in handles}
+    for h, stream in zip(handles, streams):
+        assert stream == log[h.req_id]
+        assert len(stream) >= 1                      # first token streamed
+        rec = h.result()
+        assert h.ttft == rec.first_token_at - rec.req.arrival
+        assert math.isfinite(h.ttft) and h.ttft >= 0
+    assert session.result.num_completed == trace.num_requests
+
+
+def test_live_session_matches_trace_replay_tokens(small_plan, tiny_cfg):
+    """Acceptance: a LiveSource session submitting the trace's requests at
+    their arrival times completes all of them with per-request token
+    streams identical to the trace replay on the engine backend."""
+    plan, trace = small_plan
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.serving import HeterogeneousServer
+        server = HeterogeneousServer(plan, [tiny_cfg], max_batch=8)
+        server.serve(trace, input_len=8, max_new=4)
+    replay_log = {k: list(v) for k, v in server.executor.token_log.items()}
+
+    session = repro.serve(plan, arch_cfgs=[tiny_cfg], input_len=8,
+                          max_new=4, max_batch=8)
+    t0 = time.monotonic()
+    handles = []
+    for req in sorted(trace.requests, key=lambda q: q.arrival):
+        lag = req.arrival - (time.monotonic() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        handles.append(session.submit(workload=req.workload,
+                                      input_len=req.input_len,
+                                      output_len=req.output_len))
+    streams = [list(h.tokens(timeout=120)) for h in handles]
+    result = session.close(timeout=120)
+    assert result.num_completed == trace.num_requests
+    # submit order == trace arrival order, so req_ids line up 1:1
+    assert all(streams[i] == replay_log[i] for i in range(len(handles)))
+    for h in handles:
+        assert h.ttft >= 0        # wall-clock submit -> first-token latency
+
+
+def test_session_prompt_override_changes_tokens(small_plan, tiny_cfg):
+    plan, _ = small_plan
+    with repro.serve(plan, arch_cfgs=[tiny_cfg], input_len=8, max_new=4,
+                     max_batch=8) as session:
+        a = session.submit("hello heterogeneous world", workload=0,
+                           input_len=16, output_len=3)
+        b = session.submit(workload=0, input_len=16, output_len=3)
+        sa, sb = list(a.tokens(timeout=120)), list(b.tokens(timeout=120))
+    assert len(sa) == len(sb) == 4            # prefill + 3 decode steps
+    assert sa != sb                           # the prompt steered the tokens
+    assert session.executor.prompt_overrides == {}   # released at completion
+
+
+# ------------------------------------------------- server lifecycle
+
+def test_server_reuses_runtime_across_serves(small_plan, tiny_cfg):
+    """Satellite: HeterogeneousServer.serve must reuse one persistent
+    ServingRuntime across calls (reset, not rebuild), with results
+    identical call over call."""
+    plan, trace = small_plan
+    with pytest.warns(DeprecationWarning, match="HeterogeneousServer"):
+        from repro.serving import HeterogeneousServer
+        server = HeterogeneousServer(plan, [tiny_cfg], max_batch=8)
+    st1 = server.serve(trace, input_len=8, max_new=4)
+    rt1 = server.runtime
+    log1 = {k: list(v) for k, v in server.executor.token_log.items()}
+    st2 = server.serve(trace, input_len=8, max_new=4)
+    assert server.runtime is rt1              # reused, not rebuilt
+    assert server.last_runtime is rt1         # legacy alias stays truthful
+    log2 = server.executor.token_log
+    assert log1 == log2               # identical token streams run over run
+    # the clock is *measured* wall time (run 1 pays jit compiles), so
+    # timestamps differ — routing and completions must not
+    assert ({r.req.req_id: r.replica for r in st1.result.records}
+            == {r.req.req_id: r.replica for r in st2.result.records})
+    assert st1.completed == st2.completed == trace.num_requests
+    # switching drive mode is the one thing that rebuilds
+    server.serve(trace, input_len=8, max_new=4, mode="sequential")
+    assert server.runtime is not rt1
+
+
+def test_session_replay_resets_state(small_plan):
+    plan, trace = small_plan
+    session = repro.Session(plan,
+                            CostModelExecutor(plan.replicas, [TINY]))
+    a = session.replay(trace)
+    b = session.replay(trace)
+    assert _exact_schedule(a) == _exact_schedule(b)
+    assert a.num_completed == trace.num_requests
+
+
+def test_session_replay_trims_replan_replicas_cost_backend(small_plan):
+    """A replay whose replan added executor replicas must not leak them
+    into the next run (replica indices would misalign)."""
+    from repro.core.plan import ServingPlan
+    from repro.runtime import ReplanEvent
+    plan, trace = small_plan
+    executor = CostModelExecutor(plan.replicas, [TINY])
+    session = repro.Session(plan, executor)
+    base_n = len(executor.configs)
+    grown = ServingPlan(replicas=list(plan.replicas) * 2,
+                        assignment=np.vstack([plan.assignment] * 2) / 2,
+                        demands=plan.demands, makespan=plan.makespan,
+                        cost=plan.cost * 2)
+    session.replay(trace, replan=ReplanEvent(time=0.05, plan=grown))
+    assert len(executor.configs) > base_n          # replan grew the pool
+    plain = session.replay(trace)
+    assert len(executor.configs) == base_n         # trimmed on reset
+    fresh = repro.Session(plan, CostModelExecutor(plan.replicas, [TINY])
+                          ).replay(trace)
+    assert _exact_schedule(plain) == _exact_schedule(fresh)
+
+
+def test_concurrent_first_submits_share_one_loop(small_plan):
+    """Racing first submits from many threads must start exactly one
+    serving loop/source, and every handle must complete."""
+    plan, _ = small_plan
+    session = repro.serve(plan, backend="cost", models=[TINY])
+    handles: list = [None] * 16
+    barrier = threading.Barrier(len(handles))
+
+    def submit_one(i):
+        barrier.wait()
+        handles[i] = session.submit(workload=0)
+
+    threads = [threading.Thread(target=submit_one, args=(i,))
+               for i in range(len(handles))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    for h in handles:
+        assert h.result(timeout=30).done
+    res = session.close(timeout=30)
+    assert res.num_completed == len(handles)
+
+
+def test_handle_without_state_reports_failed():
+    """A handle finished before its request was built (serve-loop crash
+    path) must report failed, not raise."""
+    from repro.serving.session import RequestHandle
+    h = RequestHandle(session=None)
+    h._finish()
+    assert h.failed and not h.done
+    assert h.result(timeout=1) is None
+    assert list(h.tokens()) == []
+
+
+def test_session_replay_resets_engine_state(small_plan, tiny_cfg):
+    """Back-to-back engine replays must not accumulate token trails or
+    generation counters from the previous run."""
+    plan, trace = small_plan
+    session = repro.serve(plan, arch_cfgs=[tiny_cfg], input_len=8,
+                          max_new=4, max_batch=8)
+    session.replay(trace)
+    log1 = {k: list(v) for k, v in session.executor.token_log.items()}
+    gen1 = session.executor.generated_tokens
+    session.replay(trace)
+    assert session.executor.token_log == log1    # not doubled
+    assert session.executor.generated_tokens == gen1
+
+
+def test_session_live_after_replay_streams_cleanly(small_plan, tiny_cfg):
+    """replay() then live submit(): the live run must start from clean
+    state (fresh clocks, empty token trails) with streaming re-attached."""
+    plan, trace = small_plan
+    session = repro.serve(plan, arch_cfgs=[tiny_cfg], input_len=8,
+                          max_new=4, max_batch=8)
+    session.replay(trace)
+    assert len(session.executor.token_log) == trace.num_requests
+    h = session.submit(workload=0, output_len=3)
+    stream = list(h.tokens(timeout=120))
+    session.close(timeout=120)
+    assert stream == session.executor.token_log[0]   # sink re-attached,
+    assert len(stream) == 4                          # trails reset (req 0
+    rec = h.result()                                 # is the live request)
+    assert rec.done and rec.req.arrival < 1.0        # fresh wall clock
+
+
+def test_session_replay_allowed_after_drain(small_plan):
+    """A drained session is explicitly valid for replay (the error message
+    says 'fresh or drained')."""
+    plan, trace = small_plan
+    session = repro.serve(plan, backend="cost", models=[TINY])
+    session.submit(workload=0).result(timeout=30)
+    session.close(timeout=30)
+    res = session.replay(trace)
+    assert res.num_completed == trace.num_requests
+
+
+def test_serve_preserves_prebuilt_executor_scale(small_plan, tiny_cfg):
+    """serve(executor=...) must not clobber the scale the caller built
+    into the executor with serve()'s own defaults."""
+    from repro.runtime import EngineExecutor
+    plan, _ = small_plan
+    ex = EngineExecutor(plan, [tiny_cfg], models=[TINY], max_batch=8,
+                        input_len=32, max_new=16, seed=7)
+    session = repro.serve(plan, executor=ex)
+    assert ex.input_len == 32 and ex.max_new == 16 and ex._seed == 7
+    session.close(timeout=30)
+    # explicit arguments still win
+    ex2 = EngineExecutor(plan, [tiny_cfg], models=[TINY], max_batch=8,
+                         input_len=32, max_new=16)
+    repro.serve(plan, executor=ex2, input_len=8, max_new=4).close(timeout=30)
+    assert ex2.input_len == 8 and ex2.max_new == 4
+
+
+def test_session_releases_completed_handles(small_plan):
+    """A long-lived session must not hold one handle per served request."""
+    plan, _ = small_plan
+    with repro.serve(plan, backend="cost", models=[TINY]) as session:
+        handles = [session.submit(workload=0) for _ in range(8)]
+        for h in handles:
+            h.result(timeout=30)
+        assert session._handles == {}     # popped at completion
+    # consumers' own references still work after release
+    assert all(h.done for h in handles)
