@@ -1,0 +1,233 @@
+"""Cross-request prefix caching: cold vs warm TTFT and serve throughput.
+
+Two measurement layers, both on the engine backend:
+
+* **engine-level TTFT** — per-request time to first token on a shared-
+  prefix batch: a cold request pays a full-prompt ``prefill_batch``;
+  a warm request adopts the cached prefix blocks and pays only a
+  suffix-bucketed ``prefill_suffix_batch``.  The mixed mean at hit ratio
+  h is the TTFT a serve loop would see.
+* **runtime tokens/s** — the same shared-prefix trace served end to end
+  through ``ServingRuntime`` + ``EngineExecutor`` with the prefix cache
+  off vs on; throughput uses the event-driven makespan, which embeds the
+  measured jit compute times.
+
+The CI shape is prefill-dominated (long prompts, 4 output tokens) — the
+regime prefix caching targets.  ``prefix_cache_accept_h0.9`` carries the
+acceptance signal: >= 2x TTFT reduction and >= 1.5x tokens/s at 0.9 hit
+ratio vs the cache disabled.  Cheap invariants ride along: warm token
+streams byte-identical to the cold run at every hit ratio, and the
+cost-model and engine backends log identical admission cohorts on the
+shared-prefix trace with the cache enabled on both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+HIT_RATIOS = (0.0, 0.5, 0.9)
+N = 10                  # requests per trace / TTFT batch
+INPUT_LEN = 384         # prompt tokens (prefill-dominated)
+PREFIX_LEN = 368        # shared prefix (23 full 16-token blocks)
+OUTPUT_LEN = 2
+MAX_NEW = 4             # decode quota min(OUTPUT_LEN, MAX_NEW-1) == 2
+BLOCK = 16
+TINY_BLOCKS = 400       # symbolic pool: ample, no preemption
+
+
+def _bench_cfg():
+    """Tiny llama shape (same family as bench_decode_fusion): small
+    enough to compile + run on CPU CI, big enough that a 192-token
+    prefill dwarfs a 16-token suffix prefill."""
+    from repro.configs import get_config
+    return dataclasses.replace(
+        get_config("llama3-8b").reduced(), name="llama-bench-prefix",
+        d_model=128, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256)
+
+
+def _tiny_profile():
+    from repro.core.costmodel import ModelProfile
+    return ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                        head_dim=64, params_total=2e6, params_active=2e6)
+
+
+def _plan(n_requests: int):
+    from repro.core import costmodel
+    from repro.core.catalog import DeviceType
+    from repro.core.costmodel import Stage
+    from repro.core.plan import Config, ServingPlan
+    tiny = _tiny_profile()
+    free = (TINY_BLOCKS + 0.5) * BLOCK * tiny.kv_bytes_per_token
+    mem = ((free + tiny.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("bench-prefix", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x")
+    cfg = Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=tiny)
+    plan = ServingPlan(replicas=[cfg], assignment=np.ones((1, 1)),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=cfg.cost)
+    return cfg, plan
+
+
+def _trace(hit_ratio: float, seed: int = 0):
+    from repro.core.workloads import make_shared_prefix_trace
+    return make_shared_prefix_trace(
+        f"prefix_h{hit_ratio}", N, input_len=INPUT_LEN,
+        output_len=OUTPUT_LEN, prefix_pool_size=1, prefix_len=PREFIX_LEN,
+        hit_ratio=hit_ratio, vocab=256, seed=seed)
+
+
+# ------------------------------------------------------ engine-level TTFT
+
+def _engine_ttft():
+    """Per-request cold vs warm first-token latency on one engine."""
+    import jax
+    import jax.numpy as jnp
+    from repro.runtime.kvcache.paged import PagedEngineCache
+    from repro.serving.engine import ReplicaEngine
+
+    cfg = _bench_cfg()
+    eng = ReplicaEngine(cfg, seed=0)
+    paged = PagedEngineCache(cfg, num_slots=2, t_max=INPUT_LEN + MAX_NEW,
+                             block_size=BLOCK, prefix_cache=True)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, PREFIX_LEN)
+    rows = [np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, INPUT_LEN - PREFIX_LEN)]) for _ in range(N + 1)]
+
+    def cold(row):
+        t0 = time.perf_counter()
+        tok, caches = eng.prefill_batch(jnp.asarray(row[None], jnp.int32),
+                                        INPUT_LEN)
+        jax.block_until_ready(tok)
+        return time.perf_counter() - t0, tok, caches
+
+    # owner request: cold prefill, publish the shared prefix blocks
+    _, tok, caches = cold(rows[0])
+    h0 = paged.block_hashes(rows[0], INPUT_LEN)
+    paged.admit_cohort([0], caches, np.asarray(tok), INPUT_LEN,
+                       block_hashes_per_req=[h0])
+
+    def warm(rid, row):
+        hashes = paged.block_hashes(row, INPUT_LEN)
+        t0 = time.perf_counter()
+        n_hit = paged.match_len(hashes)
+        t_hit = n_hit * BLOCK
+        pref = paged.adopt_prefix(hashes[:n_hit])
+        tables = jnp.asarray(np.asarray([pref], np.int32))
+        tok, suf = eng.prefill_suffix_batch(
+            jnp.asarray(row[None, t_hit:], jnp.int32), paged.pools,
+            tables, t_hit)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        paged.admit_prefixed([rid], [pref], suf, np.asarray(tok),
+                             t_hit, INPUT_LEN, [hashes])
+        paged.release(rid)
+        return dt, tok
+
+    warm(1, rows[1])                         # warm the suffix jit
+    cold_dts, warm_dts = [], []
+    warm_matches_cold = True
+    for rid, row in enumerate(rows[1:], start=1):
+        dt_c, tok_c, _ = cold(row)
+        dt_w, tok_w = warm(rid, row)
+        cold_dts.append(dt_c)
+        warm_dts.append(dt_w)
+        warm_matches_cold &= (
+            int(np.asarray(tok_w)[0]) == int(np.asarray(tok_c)[0]))
+    paged.release(0)
+    return (float(np.mean(cold_dts)), float(np.mean(warm_dts)),
+            warm_matches_cold, paged.allocator.used_blocks == 0)
+
+
+# ------------------------------------------------- runtime-level serving
+
+def _serve(trace, plan, *, prefix_cache: bool, max_batch: int = 2):
+    from repro.runtime import EngineExecutor, ServingRuntime
+    cfg = dataclasses.replace(_bench_cfg())
+    executor = EngineExecutor(plan, [cfg], models=[_tiny_profile()],
+                              max_batch=max_batch, input_len=INPUT_LEN,
+                              max_new=MAX_NEW, engine_block_size=BLOCK,
+                              prefix_cache=prefix_cache)
+    runtime = ServingRuntime(plan, executor)
+    res = runtime.run(trace)
+    assert res.num_completed == trace.num_requests
+    makespan = max(r.finished_at for r in res.records)
+    ttft = float(np.mean([r.ttft for r in res.records]))
+    tokens = trace.num_requests * (INPUT_LEN + OUTPUT_LEN)
+    return {"tokens_per_s": tokens / makespan, "mean_ttft_s": ttft,
+            "token_log": dict(executor.token_log),
+            "admission_log": list(runtime.replicas[0].admission_log),
+            "hit_rate": res.info.get("prefix_hit_rate")}
+
+
+def run():
+    from repro.runtime import CostModelExecutor, ServingRuntime
+
+    rows = []
+    cold_ms, warm_ms, streams_ok, drained = _engine_ttft()
+    rows.append({"name": "engine_ttft_cold", "us_per_call": cold_ms * 1e6,
+                 "ttft_ms": round(cold_ms * 1e3, 3)})
+    rows.append({"name": "engine_ttft_warm", "us_per_call": warm_ms * 1e6,
+                 "ttft_ms": round(warm_ms * 1e3, 3),
+                 "first_token_matches_cold": bool(streams_ok),
+                 "pool_drained": bool(drained)})
+
+    tput = {}
+    for h in HIT_RATIOS:
+        trace = _trace(h)
+        cfg, plan = _plan(trace.num_requests)
+        # first run of each arm warms the jit buckets this trace's cohort
+        # mix needs (group sizes, suffix buckets); the second run is the
+        # timed one — compilation must not pollute the makespan
+        _serve(trace, plan, prefix_cache=False)
+        off = _serve(trace, plan, prefix_cache=False)
+        _serve(trace, plan, prefix_cache=True)
+        on = _serve(trace, plan, prefix_cache=True)
+        # correctness invariants ride along with the timing
+        streams_equal = on["token_log"] == off["token_log"]
+        admissions_equal = on["admission_log"] == off["admission_log"]
+        tput[h] = (off["tokens_per_s"], on["tokens_per_s"])
+        rows.append({
+            "name": f"serve_h{h}",
+            "us_per_call": 0.0,
+            "hit_ratio": h,
+            "tokens_per_s_off": round(off["tokens_per_s"], 1),
+            "tokens_per_s_on": round(on["tokens_per_s"], 1),
+            "mean_ttft_off_ms": round(off["mean_ttft_s"] * 1e3, 2),
+            "mean_ttft_on_ms": round(on["mean_ttft_s"] * 1e3, 2),
+            "observed_hit_rate": round(on["hit_rate"] or 0.0, 3),
+            "warm_streams_match_cold": bool(streams_equal),
+            "admissions_match_cache_off": bool(admissions_equal),
+        })
+
+    # backend-identical admission with the cache ON both sides (0.9 trace).
+    # max_batch=N so the engine's cohort cap never splits an admission
+    # group the symbolic backend admits in one piece.
+    trace = _trace(0.9)
+    cfg, plan = _plan(trace.num_requests)
+    cost_rt = ServingRuntime(plan, CostModelExecutor(
+        [cfg], [_tiny_profile()], prefix_cache=True))
+    cost_rt.run(trace)
+    eng = _serve(trace, plan, prefix_cache=True, max_batch=N)
+    rows.append({
+        "name": "backend_admission_equivalence",
+        "us_per_call": 0.0,
+        "cost_vs_engine_equal": bool(
+            list(cost_rt.replicas[0].admission_log) == eng["admission_log"]),
+    })
+
+    # acceptance: >= 2x TTFT reduction, >= 1.5x tokens/s at 0.9 hit ratio
+    mixed_ttft = 0.1 * cold_ms + 0.9 * warm_ms
+    tps_off, tps_on = tput[0.9]
+    rows.append({
+        "name": "prefix_cache_accept_h0.9",
+        "us_per_call": 0.0,
+        "ttft_speedup": round(cold_ms / mixed_ttft, 2),
+        "tput_speedup": round(tps_on / tps_off, 3),
+        "meets_2x_ttft": bool(cold_ms >= 2.0 * mixed_ttft),
+        "meets_1p5x_tput": bool(tps_on >= 1.5 * tps_off),
+    })
+    return rows

@@ -17,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_runtime_overlap concurrent vs sequential engine execution
   bench_decode_fusion   tokens/s vs decode fusion factor k (dense + paged)
   bench_online_serving  live submit()/streaming session vs trace replay
+  bench_prefix_cache    cold vs warm TTFT + tokens/s at shared-prefix hit ratios
 """
 from __future__ import annotations
 
@@ -44,6 +45,7 @@ MODULES = [
     "bench_runtime_overlap",
     "bench_decode_fusion",
     "bench_online_serving",
+    "bench_prefix_cache",
 ]
 
 

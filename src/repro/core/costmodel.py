@@ -186,28 +186,41 @@ def max_batch_size(stages: Sequence[Stage], model: ModelProfile,
 
 
 def config_throughput(stages: Sequence[Stage], model: ModelProfile,
-                      workload: WorkloadType) -> float:
+                      workload: WorkloadType, *,
+                      prefix_hit_rate: float = 0.0) -> float:
     """h_{c,w}: steady-state requests/second of one replica.
 
     A request costs one prefill plus ``output_len`` amortized decode-step
     shares; with PP the bottleneck stage gates throughput and activations
     cross the inter-machine link between stages.
+
+    ``prefix_hit_rate`` models cross-request prefix caching: the expected
+    fraction of prompt tokens served from cached KV blocks, so only the
+    remaining ``(1 - hit_rate)`` suffix is charged to prefill compute (and
+    to the PP boundary activation traffic).  At least one token always
+    prefills — the first logits require it.  Decode cost is unchanged:
+    cached prefixes shorten *compute*, not context length.
     """
+    if not 0.0 <= prefix_hit_rate <= 1.0:
+        raise ValueError(f"prefix_hit_rate must be in [0, 1], "
+                         f"got {prefix_hit_rate}")
     batch = max_batch_size(stages, model, workload)
     if batch < 1.0:
         return 0.0
     avg_ctx = workload.input_len + workload.output_len / 2.0
     n_stages = len(stages)
+    eff_input = max(1, int(round(workload.input_len
+                                 * (1.0 - prefix_hit_rate))))
 
     # Throughput is gated by the slowest stage (pipeline steady state).
-    prefill_bottleneck = max(_stage_prefill_time(st, model, workload.input_len) for st in stages)
+    prefill_bottleneck = max(_stage_prefill_time(st, model, eff_input) for st in stages)
     decode_bottleneck = max(_stage_decode_step_time(st, model, batch, avg_ctx) for st in stages)
 
     if n_stages > 1:
         inter_bw = min(st.device.inter_bw for st in stages)
         boundary = n_stages - 1
         prefill_bottleneck += boundary * (
-            workload.input_len * model.d_model * BYTES_PER_PARAM / inter_bw
+            eff_input * model.d_model * BYTES_PER_PARAM / inter_bw
             + PP_BOUNDARY_LATENCY_S)
         decode_bottleneck += boundary * (
             batch * model.d_model * BYTES_PER_PARAM / inter_bw

@@ -8,7 +8,7 @@ mixture over the nine types (Table 4) plus arrival times.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,6 +59,10 @@ class Request:
     output_len: int
     arrival: float         # seconds since trace start
     model: int = 0         # model index (multi-model serving)
+    # Optional prompt token ids (shared-prefix traces / live sessions).
+    # When set, prefix-aware admission hashes these for cross-request KV
+    # reuse; None keeps the legacy purely-symbolic request.
+    prompt: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +125,90 @@ def make_trace(
         else:
             ilen, olen = w.input_len, w.output_len
         reqs.append(Request(i, int(types[i]), ilen, olen, float(arrivals[i]), int(models[i])))
+    return Trace(name, tuple(reqs))
+
+
+def nearest_workload(input_len: int, output_len: int) -> int:
+    """Index of the WORKLOAD_TYPE closest to (input_len, output_len) in
+    relative length space (used to classify ad-hoc prompt traces)."""
+    def dist(w: WorkloadType) -> float:
+        return (abs(np.log(max(1, input_len) / w.input_len))
+                + abs(np.log(max(1, output_len) / w.output_len)))
+    return min(range(len(WORKLOAD_TYPES)),
+               key=lambda i: dist(WORKLOAD_TYPES[i]))
+
+
+def make_shared_prefix_trace(
+    name: str,
+    num_requests: int = 64,
+    *,
+    input_len: int,
+    output_len: int,
+    prefix_pool_size: int = 4,
+    prefix_len: int | Sequence[int] | None = None,
+    hit_ratio: float = 0.9,
+    arrival_rate: float | None = None,
+    vocab: int = 50_000,
+    workload: int | None = None,
+    model: int = 0,
+    seed: int = 0,
+) -> Trace:
+    """Generate a trace whose prompts share prefixes — the workload shape
+    cross-request prefix caching exploits (multi-turn chat, few-shot
+    templates, system prompts).
+
+    A pool of ``prefix_pool_size`` random prefixes is drawn once; each
+    request samples a pool prefix with probability ``hit_ratio`` (its
+    leading tokens are then byte-identical to every other request using
+    that pool entry) or a fresh unique prefix otherwise.  Suffix tokens
+    are always unique per request, so prompts diverge after the prefix.
+
+    Args:
+      input_len / output_len: token lengths for every request (the prompt
+        carries exactly ``input_len`` ids).
+      prefix_pool_size: number of distinct shared prefixes.
+      prefix_len: shared-prefix length — an int, a sequence to sample
+        per pool entry (a length distribution), or None for
+        ``input_len // 2``.  Clamped to ``input_len - 1`` so every prompt
+        keeps at least one unique-suffix token.
+      hit_ratio: probability a request draws from the shared pool.
+      arrival_rate: Poisson rate (req/s); None = all arrive at t=0.
+      vocab: token id range.
+      workload: WORKLOAD_TYPES index; None picks the nearest type.
+      model / seed: as in :func:`make_trace`.
+    """
+    if not 0.0 <= hit_ratio <= 1.0:
+        raise ValueError(f"hit_ratio must be in [0, 1], got {hit_ratio}")
+    rng = np.random.default_rng(seed)
+    if prefix_len is None:
+        lens = [max(1, input_len // 2)] * max(1, prefix_pool_size)
+    elif isinstance(prefix_len, (int, np.integer)):
+        lens = [int(prefix_len)] * max(1, prefix_pool_size)
+    else:
+        choices = [int(v) for v in prefix_len]
+        lens = [int(rng.choice(choices)) for _ in range(max(1, prefix_pool_size))]
+    lens = [min(max(1, L), max(1, input_len - 1)) for L in lens]
+    pool = [tuple(int(t) for t in rng.integers(0, vocab, size=L))
+            for L in lens]
+    w = nearest_workload(input_len, output_len) if workload is None \
+        else int(workload)
+    if arrival_rate is None:
+        arrivals = np.zeros(num_requests)
+    else:
+        arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate,
+                                             size=num_requests))
+    reqs: List[Request] = []
+    for i in range(num_requests):
+        if rng.random() < hit_ratio:
+            prefix = pool[int(rng.integers(0, len(pool)))]
+        else:
+            L = lens[int(rng.integers(0, len(lens)))]
+            prefix = tuple(int(t) for t in rng.integers(0, vocab, size=L))
+        suffix = tuple(int(t) for t in rng.integers(
+            0, vocab, size=input_len - len(prefix)))
+        reqs.append(Request(i, w, input_len, output_len,
+                            float(arrivals[i]), model,
+                            prompt=prefix + suffix))
     return Trace(name, tuple(reqs))
 
 

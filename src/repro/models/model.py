@@ -91,6 +91,16 @@ def paged_supported(cfg: ArchConfig) -> bool:
     return T.paged_supported(cfg)
 
 
+def prefill_suffix(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                   pools, prefix_tables: jax.Array, t_prefix: jax.Array,
+                   last: jax.Array):
+    """Suffix-only prefill against cached paged prefix blocks (the warm
+    path of cross-request prefix caching); returns (last-real-position
+    logits, suffix caches)."""
+    return T.prefill_suffix(cfg, params, tokens, pools, prefix_tables,
+                            t_prefix, last)
+
+
 def paged_decode_step(cfg: ArchConfig, params: PyTree, pools,
                       block_tables: jax.Array, lengths: jax.Array,
                       token: jax.Array):

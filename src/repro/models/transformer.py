@@ -745,3 +745,76 @@ def paged_decode_steps(cfg: ArchConfig, params: PyTree, pools,
     (_, new_pools), toks = jax.lax.scan(
         body, (token, pools), jnp.arange(k, dtype=jnp.int32))
     return jnp.swapaxes(toks, 0, 1), new_pools
+
+
+# ----------------------------------------------- suffix (prefix-cached) prefill
+
+def prefill_suffix(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+                   pools, prefix_tables: jax.Array, t_prefix: jax.Array,
+                   last: jax.Array) -> Tuple[jax.Array, PyTree]:
+    """Prefill only a prompt's *suffix* against a cached, paged prefix.
+
+    The warm-prefix path of cross-request prefix caching: the first
+    ``t_prefix`` prompt tokens' K/V already sit in the replica's block
+    ``pools`` (written by an earlier request), so this entry embeds just
+    the ``tokens`` suffix at positions ``t_prefix + i``, gathers the
+    prefix context through ``prefix_tables`` exactly like the paged decode
+    core, and attends each suffix token over prefix-plus-causal-suffix.
+
+    ``tokens``: (B, S) int32, right-padded (pads are masked out of every
+    real token's key set by the causal mask and their own garbage rows are
+    never read).  ``prefix_tables``: (B, P) int32 block ids covering the
+    cached prefix, padded with the scratch block — entries past
+    ``t_prefix`` tokens are masked.  ``t_prefix`` / ``last`` are traced
+    scalars (the cached token count and the last *real* suffix index), so
+    one compilation serves every (S-bucket, P-bucket) shape.  Pure-ATTN
+    archs only (``paged_supported``); positions ride RoPE with the traced
+    offset, identical numerics to the cold full-sequence prefill.
+
+    Returns ``(logits (B, vocab) at `last`, suffix caches)`` — the caches
+    are the per-layer ``{"k","v"}`` suffix K/V with leaves
+    ``(n_periods, B, S, KV, D)``, ready for
+    ``PagedEngineCache.admit_prefixed`` to scatter at block-aligned
+    position ``t_prefix``.
+    """
+    assert paged_supported(cfg), f"{cfg.name}: unsupported paged arch"
+    b, s = tokens.shape
+    bs = pools[0]["k"].shape[2]
+    t_ctx = prefix_tables.shape[1] * bs
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(t_prefix + jnp.arange(s), (b, s))
+    # (S, T_ctx + S): every suffix token sees the real prefix positions
+    # plus its causal suffix slice; table padding and token padding both
+    # fall outside the mask.
+    ctx_mask = jnp.broadcast_to(jnp.arange(t_ctx)[None, :] < t_prefix,
+                                (s, t_ctx))
+    causal = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+    mask = jnp.concatenate([ctx_mask, causal], axis=1)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    ks = [[None] * cfg.n_periods for _ in cfg.period]
+    vs = [[None] * cfg.n_periods for _ in cfg.period]
+    for pi in range(cfg.n_periods):
+        for i, desc in enumerate(cfg.period):
+            p = jax.tree.map(lambda leaf: leaf[pi], params["layers"][i])
+            h = L.apply_norm(cfg, p["pre_norm"], x)
+            q, k, v = L.project_qkv(cfg, p["mixer"], h, positions)
+            kc = pools[i]["k"][pi][prefix_tables].reshape(b, t_ctx, kv, dh)
+            vc = pools[i]["v"][pi][prefix_tables].reshape(b, t_ctx, kv, dh)
+            k_all = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+            v_all = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+            out = L.attention_scores(q, k_all, v_all, mask, cfg.attn_softcap)
+            x = x + L.attention_output(p["mixer"], out)
+            if desc.ffn != NONE:
+                h = L.apply_norm(cfg, p["ffn_norm"], x)
+                y = L.mlp_block(cfg, p["ffn"], h) if desc.ffn == MLP else \
+                    _moe_apply(cfg, p["ffn"], h)
+                x = x + y
+            x = _constrain_acts(x)
+            ks[i][pi] = k.astype(jnp.bfloat16)
+            vs[i][pi] = v.astype(jnp.bfloat16)
+    new_caches = [{"k": jnp.stack(ks[i]), "v": jnp.stack(vs[i])}
+                  for i in range(len(cfg.period))]
+    logits = _logits(cfg, params, jnp.take(x, last[None], axis=1))[:, 0]
+    return logits, new_caches

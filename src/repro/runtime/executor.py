@@ -60,6 +60,11 @@ class Executor(abc.ABC):
 
     max_steps_per_event: int = 10**9
     concurrent: bool = False
+    # Cross-request prefix caching: when True the backend's KV managers
+    # run content-hashed prefix sharing (and the engine backend backs the
+    # sharing physically).  The runtime reads this to enable warm-prefix
+    # routing affinity.
+    prefix_cache: bool = False
 
     # Optional per-chunk token stream: when set (the live Session does),
     # token-producing backends call ``token_sink(req_id, [tokens...])``
@@ -134,10 +139,12 @@ class CostModelExecutor(Executor):
 
     def __init__(self, replicas: Sequence[Config] | ServingPlan,
                  models: Optional[Sequence[ModelProfile]] = None, *,
-                 block_size: int = DEFAULT_BLOCK_SIZE):
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 prefix_cache: bool = False):
         if isinstance(replicas, ServingPlan):
             replicas = replicas.replicas
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         self.configs: List[Config] = []
         self.models: List[ModelProfile] = []
         self.kv_managers: List[Optional[KVCacheManager]] = []
@@ -156,7 +163,8 @@ class CostModelExecutor(Executor):
         del self.kv_managers[self._base_replicas:]
         for i, cfg in enumerate(self.configs):
             self.kv_managers[i] = make_kv_manager(
-                cfg, self.models[i], self.block_size)
+                cfg, self.models[i], self.block_size,
+                prefix_cache=self.prefix_cache)
 
     def add_replica(self, config: Config) -> None:
         self.configs.append(config)
@@ -165,7 +173,8 @@ class CostModelExecutor(Executor):
         else:
             self.models.append(config.model)
         self.kv_managers.append(make_kv_manager(
-            config, self.models[-1], self.block_size))
+            config, self.models[-1], self.block_size,
+            prefix_cache=self.prefix_cache))
 
     def decode_quota(self, req: Request) -> int:
         return max(1, req.output_len)
@@ -180,9 +189,17 @@ class CostModelExecutor(Executor):
     def prefill(self, rep: int, states: Sequence[RequestState]
                 ) -> Sequence[float]:
         cfg, model = self.configs[rep], self.models[rep]
+        mgr = self.kv_managers[rep]
         offs, t = [], 0.0
         for s in states:
-            t += max(costmodel._stage_prefill_time(st, model, s.req.input_len)
+            # Warm-prefix admissions only recompute the unique suffix: the
+            # KV manager records how many prompt tokens the prefix index
+            # served, and the prefill charge shrinks accordingly (at least
+            # one token always computes — the first logits need it).
+            eff = s.req.input_len
+            if mgr is not None:
+                eff = max(1, eff - mgr.prefix_hit_tokens(s.req.req_id))
+            t += max(costmodel._stage_prefill_time(st, model, eff)
                      for st in cfg.stages)
             offs.append(t)
         return offs
@@ -254,11 +271,13 @@ class EngineExecutor(Executor):
                  engine_block_size: int = DEFAULT_ENGINE_BLOCK_SIZE,
                  paged: Optional[bool] = None, concurrent: bool = True,
                  fused_steps: Optional[int] = None,
+                 prefix_cache: bool = False,
                  seed: int = 0):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
         self.arch_cfgs = list(arch_cfgs)
         self.params_per_model = params_per_model or {}
         self._model_table = models
+        self.prefix_cache = prefix_cache
         self.max_batch_cap = max_batch
         self.input_len = input_len
         self.max_new = max_new
@@ -314,7 +333,8 @@ class EngineExecutor(Executor):
         self._step_ema = [0.0] * len(self.engines)
         for i, cfg in enumerate(self.configs):
             self.kv_managers[i] = make_kv_manager(
-                cfg, self._model_of(cfg), self.block_size)
+                cfg, self._model_of(cfg), self.block_size,
+                prefix_cache=self.prefix_cache)
 
     # Counters are kept per replica (each replica's executor calls are
     # serialized on its own worker thread, so no locks are needed) and
@@ -356,7 +376,8 @@ class EngineExecutor(Executor):
             seed=config.model_index, device=self.device_for(index)))
         self.configs.append(config)
         self.kv_managers.append(make_kv_manager(
-            config, self._model_of(config), self.block_size))
+            config, self._model_of(config), self.block_size,
+            prefix_cache=self.prefix_cache))
         self._groups.append([])
         self._paged.append(None)
         self._gen_tokens.append(0)
@@ -388,10 +409,14 @@ class EngineExecutor(Executor):
                 return None
             arch = engine.cfg
             n_prefix = arch.num_patches if arch.frontend != "none" else 0
+            # Physical prefix matching hashes token rows, so it stays off
+            # for multimodal archs whose prompts also carry patch embeds
+            # (token ids alone would under-key the content hash).
             self._paged[rep] = PagedEngineCache(
                 arch, num_slots=max(1, self.max_batch_cap),
                 t_max=self.input_len + n_prefix + self.max_new,
-                block_size=self.engine_block_size)
+                block_size=self.engine_block_size,
+                prefix_cache=self.prefix_cache and n_prefix == 0)
         return self._paged[rep]
 
     def _prompt_arrays(self, arch, states: Sequence[RequestState]):
@@ -406,6 +431,10 @@ class EngineExecutor(Executor):
         for s in states:
             rng = np.random.default_rng((self._seed, s.req.req_id))
             override = self.prompt_overrides.get(s.req.req_id)
+            if override is None and s.req.prompt is not None:
+                # Trace-carried prompt ids (shared-prefix traces): same
+                # pad/truncate treatment as live-session overrides.
+                override = np.asarray(s.req.prompt, dtype=np.int64)
             if override is not None:
                 # Real prompt (live submit): pad/truncate to the cohort's
                 # uniform prompt shape.
@@ -420,10 +449,11 @@ class EngineExecutor(Executor):
             if n_prefix:
                 prefix_rows.append(rng.normal(
                     0, 0.02, size=(n_prefix, arch.d_model)))
+        rows = [np.asarray(r, dtype=np.int64) for r in rows]
         prompts = jnp.asarray(np.stack(rows), jnp.int32)
         prefix = (jnp.asarray(np.stack(prefix_rows), jnp.bfloat16)
                   if n_prefix else None)
-        return prompts, prefix, n_prefix
+        return prompts, prefix, n_prefix, rows
 
     def _log_tokens(self, req_id: int, tokens) -> None:
         """Append one event's token chunk to the request's trail and, when
@@ -438,33 +468,87 @@ class EngineExecutor(Executor):
     def prefill(self, rep: int, states: Sequence[RequestState]
                 ) -> Sequence[float]:
         import jax
+        import jax.numpy as jnp
         engine = self.engines[rep]
         arch = engine.cfg
         b = len(states)
-        prompts, prefix, n_prefix = self._prompt_arrays(arch, states)
+        prompts, prefix, n_prefix, rows = self._prompt_arrays(arch, states)
         t_prompt = self.input_len + n_prefix
         paged = self._paged_cache(rep)
-        # Paged replicas only need the prompt's K/V from prefill (decode
-        # tokens land in the block pools); dense cohorts carry the full
-        # generation budget in their contiguous caches.
-        t_max = t_prompt if paged is not None else t_prompt + self.max_new
-        t0 = time.perf_counter()
-        tok, caches = engine.prefill_batch(prompts, t_max,
-                                           prefix_embeds=prefix)
-        jax.block_until_ready(tok)
-        elapsed = time.perf_counter() - t0
+        use_prefix = paged is not None and paged.prefix_cache
+        if not use_prefix:
+            # Cold-only path (prefix caching off, multimodal, or dense
+            # cohorts): one full-prompt prefill for the whole cohort.
+            # Paged replicas only need the prompt's K/V from prefill
+            # (decode tokens land in the block pools); dense cohorts carry
+            # the full generation budget in their contiguous caches.
+            t_max = t_prompt if paged is not None else t_prompt + self.max_new
+            t0 = time.perf_counter()
+            tok, caches = engine.prefill_batch(prompts, t_max,
+                                               prefix_embeds=prefix)
+            jax.block_until_ready(tok)
+            elapsed = time.perf_counter() - t0
+            self._gen_tokens[rep] += b
+            self._compute_s[rep] += elapsed
+            first = np.asarray(tok)
+            for s, t in zip(states, first):
+                self._log_tokens(s.req.req_id, [t])
+            if paged is not None:
+                paged.admit_cohort([s.req.req_id for s in states], caches,
+                                   first, t_prompt)
+            else:
+                self._groups[rep].append(_EngineGroup(
+                    [s.req.req_id for s in states], caches, tok, t_prompt))
+            return [elapsed] * b
+        # Prefix-cached path: split the cohort by matched-prefix length.
+        # Cold requests run the full-prompt prefill; warm requests adopt
+        # the matched blocks (refcounted aliases, no copy) and compute only
+        # their unique suffix through the suffix-bucketed jit.
+        hashes = [paged.block_hashes(rows[j], t_prompt) for j in range(b)]
+        hits = [paged.match_len(h) for h in hashes]
+        groups: Dict[int, List[int]] = {}
+        for j, n_hit in enumerate(hits):
+            groups.setdefault(n_hit, []).append(j)
+        # Adopt every matched prefix up front: taking the references first
+        # pins the matched blocks, so the cold group's allocations cannot
+        # LRU-evict a block a warm group is about to alias.
+        prefix_ids = {j: paged.adopt_prefix(hashes[j][:hits[j]])
+                      for j in range(b) if hits[j]}
+        total = 0.0
+        first_all = np.zeros(b, dtype=np.int64)
+        for n_hit in sorted(groups):
+            idxs = groups[n_hit]
+            rids = [states[j].req.req_id for j in idxs]
+            sub_hashes = [hashes[j] for j in idxs]
+            sub_prompts = (prompts if len(idxs) == b
+                           else prompts[np.asarray(idxs)])
+            t0 = time.perf_counter()
+            if n_hit == 0:
+                tok, caches = engine.prefill_batch(sub_prompts, t_prompt)
+                jax.block_until_ready(tok)
+                elapsed = time.perf_counter() - t0
+                first = np.asarray(tok)
+                paged.admit_cohort(rids, caches, first, t_prompt,
+                                   block_hashes_per_req=sub_hashes)
+            else:
+                t_hit = n_hit * paged.block_size
+                pref = [prefix_ids[j] for j in idxs]
+                tables = jnp.asarray(np.asarray(pref, np.int32))
+                tok, suf_caches = engine.prefill_suffix_batch(
+                    sub_prompts[:, t_hit:], paged.pools, tables, t_hit)
+                jax.block_until_ready(tok)
+                elapsed = time.perf_counter() - t0
+                first = np.asarray(tok)
+                paged.admit_prefixed(rids, pref, suf_caches, first,
+                                     t_hit, t_prompt, sub_hashes)
+            total += elapsed
+            self._compute_s[rep] += elapsed
+            for j, t in zip(idxs, first):
+                first_all[j] = int(t)
         self._gen_tokens[rep] += b
-        self._compute_s[rep] += elapsed
-        first = np.asarray(tok)
-        for s, t in zip(states, first):
-            self._log_tokens(s.req.req_id, [t])
-        if paged is not None:
-            paged.admit_cohort([s.req.req_id for s in states], caches,
-                               first, t_prompt)
-        else:
-            self._groups[rep].append(_EngineGroup(
-                [s.req.req_id for s in states], caches, tok, t_prompt))
-        return [elapsed] * b
+        for s, t in zip(states, first_all):
+            self._log_tokens(s.req.req_id, [int(t)])
+        return [total] * b
 
     def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
         """Per-step EMA of this replica's measured decode durations (0.0

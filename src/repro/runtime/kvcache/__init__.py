@@ -8,7 +8,7 @@
 * :mod:`paged` — real block-backed ``(num_blocks, block_size, KV, D)``
   pools + block tables for the engine backend's paged decode.
 """
-from repro.runtime.kvcache.allocator import BlockAllocator
+from repro.runtime.kvcache.allocator import BlockAllocator, hash_blocks
 from repro.runtime.kvcache.budget import (DEFAULT_BLOCK_SIZE, block_bytes,
                                           make_kv_manager, num_kv_blocks,
                                           state_overhead_blocks)
@@ -20,6 +20,6 @@ from repro.runtime.kvcache.paged import (DEFAULT_ENGINE_BLOCK_SIZE,
 __all__ = [
     "BlockAllocator", "DEFAULT_BLOCK_SIZE", "DEFAULT_ENGINE_BLOCK_SIZE",
     "KVCacheManager", "PagedEngineCache", "batch_tokens", "block_bytes",
-    "blocks_for_tokens", "logical_tokens", "make_kv_manager",
+    "blocks_for_tokens", "hash_blocks", "logical_tokens", "make_kv_manager",
     "num_kv_blocks", "state_overhead_blocks",
 ]

@@ -1,4 +1,4 @@
-"""Fixed-size KV block allocator.
+"""Fixed-size KV block allocator with cross-request prefix sharing.
 
 The unit of KV-cache memory is a *block* of ``block_size`` token slots
 (vLLM's PagedAttention unit).  :class:`BlockAllocator` hands out block ids
@@ -7,18 +7,69 @@ from a free list; the engine backend uses the ids to index real
 :class:`~repro.runtime.kvcache.manager.KVCacheManager` only needs the
 counts.  Block id 0 is reserved by callers that need a scratch target for
 masked writes (see ``paged.py``); the allocator itself is id-agnostic.
+
+Prefix caching (vLLM-style) adds three ideas on top of the free list:
+
+* **content hashes** — a *full* block of prompt tokens is immutable once
+  written, so it can be named by the chained hash
+  ``h_i = hash((h_{i-1}, tokens_i))`` (:func:`hash_blocks`) and published
+  in an index via :meth:`commit`;
+* **reference counting** — :meth:`adopt` lets a later request alias an
+  indexed block instead of recomputing it; :meth:`free` becomes a decref
+  that only reclaims a block when its last holder leaves;
+* **an LRU cached pool** — a committed block whose refcount drops to zero
+  is *not* returned to the free list (its contents stay valid); it parks
+  in an LRU from which :meth:`adopt` can revive it for free, and
+  :meth:`alloc` evicts oldest-first only when the free list runs dry.
+
+Writability is the copy-on-write rule: a block is safe to mutate only
+while it has exactly one holder *and* no published hash
+(:meth:`writable`); :meth:`cow` hands a caller a private replacement id
+for a shared block (the physical copy is the pool owner's job — this
+layer only does the id bookkeeping).
 """
 from __future__ import annotations
 
-from typing import List
+import collections
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Root of every chained block hash.  Python's hash of int tuples is
+# deterministic (PYTHONHASHSEED only salts str/bytes), so hashes agree
+# across processes for the same token ids and block size.
+_HASH_ROOT = 0x9E3779B9
+
+
+def hash_blocks(tokens: Sequence[int], block_size: int,
+                max_match_tokens: Optional[int] = None) -> List[int]:
+    """Chained content hashes of the *full* blocks covering ``tokens``.
+
+    ``h_i = hash((h_{i-1}, block_i_tokens))`` — a block's name commits to
+    the whole prefix in front of it, so equal hashes imply equal logical
+    KV content.  ``max_match_tokens`` caps how many leading tokens may be
+    matched (callers pass ``prompt_len - 1`` so a full-prompt match always
+    leaves at least one suffix token to prefill for the first logits).
+    """
+    if block_size <= 0:
+        return []
+    limit = len(tokens)
+    if max_match_tokens is not None:
+        limit = min(limit, max_match_tokens)
+    out: List[int] = []
+    h = _HASH_ROOT ^ block_size
+    for start in range(0, limit - block_size + 1, block_size):
+        h = hash((h, tuple(int(t) for t in tokens[start:start + block_size])))
+        out.append(h)
+    return out
 
 
 class BlockAllocator:
-    """Free-list allocator over ``num_blocks`` block ids.
+    """Free-list + refcount + content-hash allocator over block ids.
 
     Ids run ``first_id .. first_id + num_blocks - 1``; allocation is LIFO
     (most-recently-freed first) so a steady-state workload keeps touching
-    the same hot blocks.
+    the same hot blocks.  Blocks come back through :meth:`free` with
+    refcount semantics: unhashed blocks return to the free list, hashed
+    blocks park in the LRU cached pool until evicted or revived.
     """
 
     def __init__(self, num_blocks: int, *, first_id: int = 0):
@@ -28,29 +79,157 @@ class BlockAllocator:
         self.first_id = first_id
         self._free: List[int] = list(range(first_id + num_blocks - 1,
                                            first_id - 1, -1))
-        self._allocated: set = set()
+        self._refs: Dict[int, int] = {}           # live blocks -> refcount
+        self._hash_of: Dict[int, int] = {}        # committed id -> hash
+        self._index: Dict[int, int] = {}          # hash -> canonical id
+        # refcount-0 committed blocks, oldest first (eviction order)
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self.evictions = 0
+        self.cache_hits = 0       # adopt() calls that found a block
+        self.cow_copies = 0
+
+    # ------------------------------------------------------------- queries
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
     @property
+    def cached_blocks(self) -> int:
+        """Blocks holding reusable prefix KV (refcount 0, still indexed)."""
+        return len(self._lru)
+
+    @property
+    def available_blocks(self) -> int:
+        """Blocks :meth:`alloc` can satisfy (free + evictable cached)."""
+        return len(self._free) + len(self._lru)
+
+    @property
     def used_blocks(self) -> int:
-        return len(self._allocated)
+        """Blocks held by at least one live sequence."""
+        return len(self._refs)
+
+    def ref_count(self, block_id: int) -> int:
+        return self._refs.get(block_id, 0)
+
+    def block_hash(self, block_id: int) -> Optional[int]:
+        return self._hash_of.get(block_id)
+
+    def writable(self, block_id: int) -> bool:
+        """True when mutating ``block_id`` in place cannot corrupt another
+        holder: exactly one reference and no published hash (a committed
+        block may be adopted at any time, so it is immutable even at one
+        reference)."""
+        return (self._refs.get(block_id) == 1
+                and block_id not in self._hash_of)
+
+    # ---------------------------------------------------------- allocation
 
     def alloc(self, n: int) -> List[int]:
-        """Allocate ``n`` block ids; raises ``MemoryError`` if unavailable
-        (callers must check ``free_blocks`` / go through the manager)."""
-        if n > len(self._free):
+        """Allocate ``n`` private (refcount-1) block ids, evicting LRU
+        cached blocks when the free list runs dry; raises ``MemoryError``
+        if even the cached pool cannot cover the request (callers must
+        check ``available_blocks`` / go through the manager)."""
+        if n > self.available_blocks:
             raise MemoryError(
-                f"requested {n} blocks, {len(self._free)} free")
+                f"requested {n} blocks, {len(self._free)} free "
+                f"+ {len(self._lru)} cached")
+        while len(self._free) < n:
+            self._evict_lru()
         ids = [self._free.pop() for _ in range(n)]
-        self._allocated.update(ids)
+        for i in ids:
+            self._refs[i] = 1
         return ids
 
-    def free(self, ids: List[int]) -> None:
+    def _evict_lru(self) -> int:
+        """Drop the oldest cached block: its hash leaves the index (future
+        lookups miss) and the id returns to the free list."""
+        block_id, _ = self._lru.popitem(last=False)
+        h = self._hash_of.pop(block_id)
+        if self._index.get(h) == block_id:
+            del self._index[h]
+        self._free.append(block_id)
+        self.evictions += 1
+        return block_id
+
+    # ------------------------------------------------------------- sharing
+
+    def lookup(self, h: int) -> Optional[int]:
+        """The canonical block id for content hash ``h`` (no state change)."""
+        return self._index.get(h)
+
+    def adopt(self, h: int) -> Optional[int]:
+        """Take one reference on the block holding content hash ``h``:
+        a live block gains a holder; a cached block leaves the LRU and
+        revives.  Returns None on a miss."""
+        block_id = self._index.get(h)
+        if block_id is None:
+            return None
+        if block_id in self._lru:           # revive from the cached pool
+            del self._lru[block_id]
+            self._refs[block_id] = 1
+        else:
+            self._refs[block_id] += 1
+        self.cache_hits += 1
+        return block_id
+
+    def incref(self, block_id: int) -> None:
+        if block_id not in self._refs:
+            raise ValueError(f"incref on non-live block id {block_id}")
+        self._refs[block_id] += 1
+
+    def commit(self, block_id: int, h: int) -> int:
+        """Publish a live block under content hash ``h``.  If the index
+        already names another block for ``h`` (two requests prefilled the
+        same prefix concurrently), the existing block stays canonical and
+        ``block_id`` remains an unhashed private copy; returns the
+        canonical id either way."""
+        if block_id not in self._refs:
+            raise ValueError(f"commit on non-live block id {block_id}")
+        existing = self._index.get(h)
+        if existing is not None and existing != block_id:
+            return existing
+        self._index[h] = block_id
+        self._hash_of[block_id] = h
+        return block_id
+
+    def cow(self, block_id: int) -> Tuple[int, bool]:
+        """Copy-on-write: a holder about to mutate ``block_id`` gets a
+        block id that is safe to write.  Already-writable blocks are
+        returned as-is; otherwise one reference moves to a freshly
+        allocated private id (the caller copies the physical contents).
+        Returns ``(writable_id, copied)``."""
+        if self.writable(block_id):
+            return block_id, False
+        if block_id not in self._refs:
+            raise ValueError(f"cow on non-live block id {block_id}")
+        new_id = self.alloc(1)[0]
+        self._decref(block_id)
+        self.cow_copies += 1
+        return new_id, True
+
+    # ------------------------------------------------------------- release
+
+    def _decref(self, block_id: int) -> None:
+        refs = self._refs.get(block_id)
+        if refs is None:
+            raise ValueError(f"double free / unknown block id {block_id}")
+        if refs > 1:
+            self._refs[block_id] = refs - 1
+            return
+        del self._refs[block_id]
+        if block_id in self._hash_of:
+            # contents stay valid: park in the cached pool, newest last
+            self._lru[block_id] = None
+            self._lru.move_to_end(block_id)
+        else:
+            self._free.append(block_id)
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id.  A block is reclaimed only when its
+        last holder leaves; committed blocks go to the LRU cached pool
+        (contents preserved for future :meth:`adopt`), unhashed blocks to
+        the free list."""
         for i in ids:
-            if i not in self._allocated:
-                raise ValueError(f"double free / unknown block id {i}")
-            self._allocated.discard(i)
-            self._free.append(i)
+            self._decref(i)

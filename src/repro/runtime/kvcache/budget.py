@@ -53,7 +53,8 @@ def state_overhead_blocks(model: ModelProfile, block_size: int) -> int:
 
 
 def make_kv_manager(config: Config, model: ModelProfile,
-                    block_size: int = DEFAULT_BLOCK_SIZE
+                    block_size: int = DEFAULT_BLOCK_SIZE, *,
+                    prefix_cache: bool = False
                     ) -> Optional[KVCacheManager]:
     """Build the admission-side manager for one replica.
 
@@ -61,12 +62,16 @@ def make_kv_manager(config: Config, model: ModelProfile,
     (pure SSM/xLSTM stacks) get *state-only* accounting: one block per
     sequence, the pool sized by how many sequences' state the free HBM
     holds.  Only models with no KV *and* no state return None (nothing to
-    account — the concurrency cap alone governs them)."""
+    account — the concurrency cap alone governs them).  ``prefix_cache``
+    turns on cross-request prefix sharing (the manager itself gates it off
+    for sliding-window and state-only models, whose blocks are mutable or
+    absent)."""
     if block_bytes(model, block_size) > 0:
         return KVCacheManager(
             num_kv_blocks(config, model, block_size), block_size,
             window=model.window,
-            state_blocks=state_overhead_blocks(model, block_size))
+            state_blocks=state_overhead_blocks(model, block_size),
+            prefix_cache=prefix_cache)
     if model.state_bytes_per_seq > 0:
         free = kv_free_bytes(config.stages, model)
         return KVCacheManager(

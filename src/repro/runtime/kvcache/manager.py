@@ -19,6 +19,21 @@ executor backends size their manager from the same
 ``repro.core.costmodel.kv_free_bytes`` budget, so prediction and execution
 make identical admission decisions on the same trace.
 
+**Prefix caching** (``prefix_cache=True``): when admission sees the
+request's prompt token ids, the full blocks of the prompt are content-
+hashed (:func:`~repro.runtime.kvcache.allocator.hash_blocks`) and matched
+against an index of blocks other requests already prefilled.  Matched
+blocks are *shared* — refcounted, counted once in ``used_blocks`` however
+many requests alias them — so admission only reserves the unique suffix,
+and a freed request's hashed blocks park in an LRU cached pool (evicted
+only under allocation pressure) instead of vanishing.  The accounting here
+is symbolic; the engine backend mirrors it physically in
+:class:`~repro.runtime.kvcache.paged.PagedEngineCache`.  Both backends run
+this same logic on the same trace-scale prompts, so admission stays
+backend-identical with the cache on or off.  With the cache off (the
+default) every code path below degenerates to the legacy count-only
+arithmetic, byte for byte.
+
 One deliberate safety valve: a request admitted *solo* (empty replica) is
 always accepted even if it overflows the budget — the legacy scheduler
 guaranteed one-at-a-time progress on undersized replicas, and starving a
@@ -27,8 +42,11 @@ replica would deadlock the trace.  Overflow is recorded in
 """
 from __future__ import annotations
 
+import collections
 import math
-from typing import Dict, Iterable, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.runtime.kvcache.allocator import hash_blocks
 
 
 def blocks_for_tokens(tokens: int, block_size: int, *,
@@ -42,12 +60,23 @@ def blocks_for_tokens(tokens: int, block_size: int, *,
     return max(0, math.ceil(held / block_size))
 
 
+class _SharedBlock:
+    """One content-addressed prompt block in the symbolic index."""
+
+    __slots__ = ("hash", "refs")
+
+    def __init__(self, h: int):
+        self.hash = h
+        self.refs = 1
+
+
 class KVCacheManager:
     """Per-replica block accounting (symbolic: counts, not tensors)."""
 
     def __init__(self, num_blocks: int, block_size: int, *,
                  window: int = 0, state_blocks: int = 0,
-                 watermark_frac: float = 0.01):
+                 watermark_frac: float = 0.01,
+                 prefix_cache: bool = False):
         if block_size < 0:
             raise ValueError(f"block_size must be >= 0, got {block_size}")
         if block_size == 0 and state_blocks <= 0:
@@ -56,21 +85,49 @@ class KVCacheManager:
         self.block_size = int(block_size)
         self.window = int(window)
         self.state_blocks = int(state_blocks)
+        # Prefix matching needs full immutable blocks: a sliding-window
+        # ring rewrites its own blocks and a state-only model has none.
+        self.prefix_cache = bool(prefix_cache) and self.block_size > 0 \
+            and self.window == 0
         # Held-back slack for admission only (vLLM's watermark): growth of
         # the already-running batch may still use it.
         self.watermark = max(1, math.ceil(watermark_frac * self.num_blocks))
-        self._held: Dict[int, int] = {}     # req_id -> blocks held
+        self._held: Dict[int, int] = {}     # req_id -> total blocks held
+        # prefix-cache bookkeeping (all empty when the cache is off)
+        self._index: Dict[int, _SharedBlock] = {}
+        self._lru: "collections.OrderedDict[int, _SharedBlock]" = \
+            collections.OrderedDict()       # hash -> refcount-0 block
+        self._prefix_of: Dict[int, List[_SharedBlock]] = {}
+        self._private: Dict[int, int] = {}  # req_id -> non-shared blocks
+        self._hit_tokens: Dict[int, int] = {}
         self.used_blocks = 0
         self.peak_used = 0
         self.overflow_admissions = 0
         self.admitted = 0
         self.freed = 0
+        self.prefix_queries = 0             # admissions that attempted a match
+        self.prefix_hits = 0                # admissions with >= 1 shared block
+        self.prefix_hit_tokens_total = 0
+        self.prefix_prompt_tokens_total = 0
+        self.prefix_evictions = 0
 
     # ------------------------------------------------------------ queries
 
     @property
     def free_blocks(self) -> int:
         return self.num_blocks - self.used_blocks
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks parked for reuse (not counted in used)."""
+        return len(self._lru)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of eligible prompt tokens served from the cache."""
+        if self.prefix_prompt_tokens_total <= 0:
+            return 0.0
+        return self.prefix_hit_tokens_total / self.prefix_prompt_tokens_total
 
     def blocks_for(self, tokens: int) -> int:
         return blocks_for_tokens(tokens, self.block_size,
@@ -80,27 +137,116 @@ class KVCacheManager:
         return req_id in self._held
 
     def held_blocks(self, req_id: int) -> int:
-        """Blocks currently reserved by ``req_id`` (0 when not held) — the
-        recompute cost a ``fewest-blocks`` preemption victim would free."""
-        return self._held.get(req_id, 0)
+        """Blocks preempting ``req_id`` would actually reclaim (0 when not
+        held) — the recompute cost a ``fewest-blocks`` preemption victim
+        would free.  With prefix caching on, blocks shared with other live
+        requests are excluded: evicting this request cannot release them."""
+        held = self._held.get(req_id, 0)
+        if not held or not self.prefix_cache:
+            return held
+        shared_elsewhere = sum(1 for b in self._prefix_of.get(req_id, ())
+                               if b.refs > 1)
+        return held - shared_elsewhere
+
+    def prefix_hit_tokens(self, req_id: int) -> int:
+        """Prompt tokens of ``req_id`` served from the prefix cache at its
+        most recent admission (0 when cold / cache off)."""
+        return self._hit_tokens.get(req_id, 0)
+
+    def _prompt_hashes(self, prompt: Optional[Sequence[int]],
+                       tokens: int) -> List[int]:
+        """Content hashes of the matchable full blocks of ``prompt`` for an
+        admission of ``tokens`` logical tokens (prompt + first output).
+        Matching is capped below the prompt length so at least one suffix
+        token always remains to prefill."""
+        if not self.prefix_cache or prompt is None or len(prompt) == 0:
+            return []
+        input_len = tokens - 1          # admissions pass prompt + 1
+        return hash_blocks(prompt, self.block_size,
+                           max_match_tokens=min(len(prompt), input_len) - 1)
+
+    def cached_prefix_tokens(self, prompt: Optional[Sequence[int]],
+                             tokens: int) -> int:
+        """Peek (no state change): how many leading prompt tokens an
+        admission of ``tokens`` logical tokens would reuse right now.
+        The router's warm-prefix affinity reads this."""
+        n = 0
+        for h in self._prompt_hashes(prompt, tokens):
+            if h not in self._index:
+                break
+            n += 1
+        return n * self.block_size
 
     # ---------------------------------------------------------- admission
 
-    def admit(self, req_id: int, tokens: int, *, solo: bool = False) -> bool:
+    def admit(self, req_id: int, tokens: int, *, solo: bool = False,
+              prompt: Optional[Sequence[int]] = None) -> bool:
         """Reserve blocks for a request entering prefill with ``tokens``
         logical tokens (prompt + first output token).  ``solo`` marks the
-        only-request-on-the-replica case, which is always admitted."""
+        only-request-on-the-replica case, which is always admitted.
+
+        With prefix caching on and ``prompt`` given, leading full prompt
+        blocks already in the index are aliased (shared refs — possibly
+        revived from the LRU cached pool) instead of reserved anew, and
+        this request's own full prompt blocks are published for the next
+        request; the matched token count is retrievable via
+        :meth:`prefix_hit_tokens` until the request is freed.
+        """
         assert req_id not in self._held, f"request {req_id} already held"
         need = self.blocks_for(tokens)
-        if not solo and self.used_blocks + need + self.watermark > self.num_blocks:
+        hashes = self._prompt_hashes(prompt, tokens)
+        hit: List[_SharedBlock] = []
+        for h in hashes:
+            blk = self._index.get(h)
+            if blk is None:
+                break
+            hit.append(blk)
+        # Charge only what this admission adds to the pool: new blocks
+        # plus cache revivals; blocks shared with live requests are free.
+        revived = sum(1 for b in hit if b.refs == 0)
+        delta = need - (len(hit) - revived)
+        if not solo and self.used_blocks + delta + self.watermark \
+                > self.num_blocks:
             return False
-        if solo and self.used_blocks + need > self.num_blocks:
+        if solo and self.used_blocks + delta > self.num_blocks:
             self.overflow_admissions += 1
+        for b in hit:
+            if b.refs == 0:
+                del self._lru[b.hash]      # revive from the cached pool
+            b.refs += 1
+        # new blocks (shared-to-be + private) may need LRU evictions so the
+        # physical pool (used + cached) stays within num_blocks
+        self._reclaim(delta)
+        shared = list(hit)
+        for h in hashes[len(hit):]:
+            blk = _SharedBlock(h)
+            self._index[h] = blk
+            shared.append(blk)
+        if self.prefix_cache:
+            self._prefix_of[req_id] = shared
+            self._private[req_id] = need - len(shared)
+            self._hit_tokens[req_id] = len(hit) * self.block_size
+            if hashes:
+                self.prefix_queries += 1
+                self.prefix_prompt_tokens_total += tokens - 1
+                self.prefix_hit_tokens_total += len(hit) * self.block_size
+                if hit:
+                    self.prefix_hits += 1
         self._held[req_id] = need
-        self.used_blocks += need
+        self.used_blocks += delta
         self.peak_used = max(self.peak_used, self.used_blocks)
         self.admitted += 1
         return True
+
+    def _reclaim(self, new_blocks: int) -> None:
+        """Evict LRU cached blocks until ``new_blocks`` more fit the
+        physical pool alongside everything live + cached."""
+        while (self._lru
+               and self.used_blocks + len(self._lru) + new_blocks
+               > self.num_blocks):
+            _, blk = self._lru.popitem(last=False)
+            self._index.pop(blk.hash, None)
+            self.prefix_evictions += 1
 
     # ------------------------------------------------------------- growth
 
@@ -129,13 +275,17 @@ class KVCacheManager:
              allow_overflow: bool = False) -> bool:
         """Ensure ``req_id`` holds enough blocks for ``tokens`` logical
         tokens.  Returns False (state unchanged) when the pool is exhausted
-        and overflow is not allowed."""
+        and overflow is not allowed.  Growth blocks are always private
+        (decode tokens land past the shared prompt prefix)."""
         need = self.blocks_for(tokens) - self._held[req_id]
         if need <= 0:
             return True
         if self.used_blocks + need > self.num_blocks and not allow_overflow:
             return False
+        self._reclaim(need)
         self._held[req_id] += need
+        if self.prefix_cache and req_id in self._private:
+            self._private[req_id] += need
         self.used_blocks += need
         self.peak_used = max(self.peak_used, self.used_blocks)
         return True
@@ -143,18 +293,43 @@ class KVCacheManager:
     # ------------------------------------------------------------ release
 
     def free(self, req_id: int) -> None:
+        """Release a finished or preempted request.  Private blocks return
+        to the pool immediately; shared prompt blocks are decref'd — blocks
+        still aliased by live requests stay used, last-holder blocks park
+        in the LRU cached pool (still indexed, free to re-admit)."""
         held = self._held.pop(req_id, 0)
-        self.used_blocks -= held
-        if held:
-            self.freed += 1
+        if not held:
+            return
+        released = held
+        for blk in self._prefix_of.pop(req_id, ()):
+            blk.refs -= 1
+            if blk.refs > 0:
+                released -= 1          # another live request still holds it
+            else:
+                self._lru[blk.hash] = blk
+                self._lru.move_to_end(blk.hash)
+        self._private.pop(req_id, None)
+        self._hit_tokens.pop(req_id, None)
+        self.used_blocks -= released
+        self.freed += 1
 
     def reset(self) -> None:
         self._held.clear()
+        self._index.clear()
+        self._lru.clear()
+        self._prefix_of.clear()
+        self._private.clear()
+        self._hit_tokens.clear()
         self.used_blocks = 0
         self.peak_used = 0
         self.overflow_admissions = 0
         self.admitted = 0
         self.freed = 0
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens_total = 0
+        self.prefix_prompt_tokens_total = 0
+        self.prefix_evictions = 0
 
 
 def logical_tokens(input_len: int, quota: int, remaining: int) -> int:

@@ -18,6 +18,20 @@ zeroes dead lanes' K/V before the scatter — colliding scratch writes all
 write the same value, keeping pool contents deterministic whatever scatter
 order XLA picks; see ``transformer._paged_decode_core``.)
 
+With ``prefix_cache=True`` the pool gains cross-request prefix reuse: each
+*full* block of a prompt is published under its chained content hash
+(:func:`~repro.runtime.kvcache.allocator.hash_blocks`, at engine-scale
+token ids), a later request whose prompt matches aliases the cached block
+ids straight into its block table (:meth:`admit_prefixed`) and only its
+unique suffix is prefilled and scattered, and :meth:`release` decrefs
+instead of freeing — a released request's hashed blocks park in the
+allocator's LRU cached pool, contents intact, until evicted under
+allocation pressure.  Aliased blocks are read-shared only: decode writes
+always land past ``t_prompt``, i.e. in blocks this request allocated
+privately, so sharing never needs a copy on the hot path
+(:meth:`ensure_writable` provides the defensive copy-on-write used if a
+caller ever must mutate a shared block).
+
 Slots are runtime-scale (``t_max`` = prompt + generated tokens on this
 container), so the pool is sized to hold every slot at full length —
 admission control (and therefore preemption) is the symbolic manager's
@@ -26,11 +40,11 @@ job; this layer proves the plan executes through real paged storage.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.runtime.kvcache.allocator import BlockAllocator
+from repro.runtime.kvcache.allocator import BlockAllocator, hash_blocks
 
 DEFAULT_ENGINE_BLOCK_SIZE = 8
 
@@ -39,12 +53,14 @@ class PagedEngineCache:
     """Block pools + tables + slot bookkeeping for one ReplicaEngine."""
 
     def __init__(self, cfg, num_slots: int, t_max: int,
-                 block_size: int = DEFAULT_ENGINE_BLOCK_SIZE):
+                 block_size: int = DEFAULT_ENGINE_BLOCK_SIZE, *,
+                 prefix_cache: bool = False):
         import jax.numpy as jnp
         self.cfg = cfg
         self.block_size = block_size
         self.num_slots = max(1, num_slots)
         self.t_max = t_max
+        self.prefix_cache = bool(prefix_cache)
         self.blocks_per_seq = max(1, math.ceil(t_max / block_size))
         # +1 for the reserved scratch block at id 0
         self.num_blocks = 1 + self.num_slots * self.blocks_per_seq
@@ -63,6 +79,8 @@ class PagedEngineCache:
         self._free_slots: List[int] = list(range(self.num_slots - 1, -1, -1))
         self._slot_of: Dict[int, int] = {}
         self._blocks_of: Dict[int, List[int]] = {}
+        self.physical_hit_blocks = 0     # aliased instead of prefilled
+        self.physical_hit_requests = 0
 
     @property
     def active_slots(self) -> int:
@@ -71,15 +89,40 @@ class PagedEngineCache:
     def slot_of(self, req_id: int) -> int:
         return self._slot_of[req_id]
 
+    # ------------------------------------------------------ prefix matching
+
+    def block_hashes(self, row: Sequence[int], t_prompt: int) -> List[int]:
+        """Engine-scale chained content hashes of ``row``'s matchable full
+        blocks — capped below ``t_prompt`` so a fully-cached prompt still
+        prefills at least its last token (the first logits must come from
+        somewhere)."""
+        if not self.prefix_cache:
+            return []
+        return hash_blocks(row, self.block_size,
+                           max_match_tokens=min(len(row), t_prompt) - 1)
+
+    def match_len(self, hashes: Sequence[int]) -> int:
+        """Longest indexed prefix of ``hashes`` (no state change)."""
+        n = 0
+        for h in hashes:
+            if self.allocator.lookup(h) is None:
+                break
+            n += 1
+        return n
+
     # ---------------------------------------------------------- admission
 
     def admit_cohort(self, req_ids: Sequence[int], prompt_caches,
-                     first_tokens, t_prompt: int) -> None:
-        """Bind one prefilled cohort to slots: allocate each sequence's
-        blocks, scatter the cohort's contiguous prompt K/V into them, and
-        record lengths/last-tokens.  ``prompt_caches`` is the engine's
-        per-layer list of ``{"k","v"}`` with leaves
-        ``(n_periods, b, t_cache, KV, D)`` where ``t_cache >= t_prompt``."""
+                     first_tokens, t_prompt: int,
+                     block_hashes_per_req: Optional[Sequence[Sequence[int]]]
+                     = None) -> None:
+        """Bind one cold-prefilled cohort to slots: allocate each
+        sequence's blocks, scatter the cohort's contiguous prompt K/V into
+        them, and record lengths/last-tokens.  ``prompt_caches`` is the
+        engine's per-layer list of ``{"k","v"}`` with leaves
+        ``(n_periods, b, t_cache, KV, D)`` where ``t_cache >= t_prompt``.
+        ``block_hashes_per_req`` (prefix caching) publishes each request's
+        full prompt blocks in the content index after the scatter."""
         import jax.numpy as jnp
         b = len(req_ids)
         if b > len(self._free_slots):
@@ -111,6 +154,85 @@ class PagedEngineCache:
         for j, (rid, slot) in enumerate(zip(req_ids, slots)):
             self.lengths[slot] = t_prompt
             self.tokens[slot] = toks[j]
+        if block_hashes_per_req is not None:
+            for rid, hashes in zip(req_ids, block_hashes_per_req):
+                self._commit_blocks(rid, hashes)
+
+    def adopt_prefix(self, hashes: Sequence[int]) -> List[int]:
+        """Take references on the cached blocks for ``hashes`` (all must be
+        indexed — pair with :meth:`match_len`); returns their block ids in
+        prefix order."""
+        ids: List[int] = []
+        for h in hashes:
+            block_id = self.allocator.adopt(h)
+            assert block_id is not None, "adopt_prefix on unmatched hash"
+            ids.append(block_id)
+        return ids
+
+    def admit_prefixed(self, req_ids: Sequence[int],
+                       prefix_ids_per_req: Sequence[Sequence[int]],
+                       suffix_caches, first_tokens, t_hit: int,
+                       t_prompt: int,
+                       block_hashes_per_req: Sequence[Sequence[int]]
+                       ) -> None:
+        """Bind one *warm* cohort (every request matched ``t_hit`` prompt
+        tokens = ``t_hit / block_size`` whole cached blocks): alias the
+        adopted prefix block ids into each slot's table, allocate only the
+        remaining blocks, scatter the cohort's *suffix* K/V
+        (``suffix_caches`` leaves ``(n_periods, b, t_suf_cache, KV, D)``
+        covering positions ``t_hit..t_prompt``), then publish the newly
+        full prompt blocks under their hashes."""
+        import jax.numpy as jnp
+        b = len(req_ids)
+        if b > len(self._free_slots):
+            raise MemoryError(f"{b} sequences for {len(self._free_slots)} "
+                              f"free slots")
+        bs = self.block_size
+        assert t_hit % bs == 0 and 0 < t_hit < t_prompt
+        n_hit = t_hit // bs
+        s_suffix = t_prompt - t_hit
+        nb_suf = math.ceil(s_suffix / bs)
+        slots = [self._free_slots.pop() for _ in range(b)]
+        flat_ids: List[int] = []
+        for rid, slot, pref in zip(req_ids, slots, prefix_ids_per_req):
+            assert len(pref) == n_hit
+            ids = list(pref) + self.allocator.alloc(
+                self.blocks_per_seq - n_hit)
+            self._slot_of[rid] = slot
+            self._blocks_of[rid] = ids
+            self.tables[slot, :] = ids
+            flat_ids.extend(ids[n_hit:n_hit + nb_suf])
+        idx = jnp.asarray(flat_ids, jnp.int32)
+        for i, cache in enumerate(suffix_caches):
+            for key in ("k", "v"):
+                leaf = cache[key][:, :, :s_suffix]        # (np, b, s_suf, ..)
+                pad = nb_suf * bs - s_suffix
+                if pad:
+                    leaf = jnp.pad(leaf, ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+                np_, _, _, kv, dh = leaf.shape
+                leaf = leaf.reshape(np_, b * nb_suf, bs, kv, dh)
+                self.pools[i][key] = self.pools[i][key].at[:, idx].set(
+                    leaf.astype(self.pools[i][key].dtype))
+        toks = np.asarray(first_tokens, np.int32)
+        for j, (rid, slot) in enumerate(zip(req_ids, slots)):
+            self.lengths[slot] = t_prompt
+            self.tokens[slot] = toks[j]
+        for rid, hashes in zip(req_ids, block_hashes_per_req):
+            self._commit_blocks(rid, hashes)
+        self.physical_hit_blocks += b * n_hit
+        self.physical_hit_requests += b
+
+    def _commit_blocks(self, req_id: int, hashes: Sequence[int]) -> None:
+        """Publish a request's full prompt blocks under their content
+        hashes.  A hash already naming another block keeps its canonical
+        owner (this request's copy stays private and unshared)."""
+        if not self.prefix_cache:
+            return
+        ids = self._blocks_of[req_id]
+        for j, h in enumerate(hashes):
+            if self.allocator.block_hash(ids[j]) is None:
+                self.allocator.commit(ids[j], h)
 
     # --------------------------------------------------------------- step
 
@@ -153,9 +275,34 @@ class PagedEngineCache:
         self.advance(1)
         self.commit_chunk(new_tokens, new_pools)
 
+    # --------------------------------------------------------------- cow
+
+    def ensure_writable(self, req_id: int, block_index: int) -> int:
+        """Copy-on-write guard: make ``req_id``'s table entry at
+        ``block_index`` safe to mutate, physically copying the block's
+        pool rows to a private id when it is shared or published.  The
+        decode path never needs this (writes land past the shared prompt
+        by construction); it exists for correctness under any future
+        mutation of shared blocks and for the property tests."""
+        old = self._blocks_of[req_id][block_index]
+        new, copied = self.allocator.cow(old)
+        if not copied:
+            return old
+        for i in range(len(self.pools)):
+            for key in ("k", "v"):
+                pool = self.pools[i][key]
+                self.pools[i][key] = pool.at[:, new].set(pool[:, old])
+        self._blocks_of[req_id][block_index] = new
+        self.tables[self._slot_of[req_id], block_index] = new
+        return new
+
     # ------------------------------------------------------------ release
 
     def release(self, req_id: int) -> None:
+        """Free a finished/preempted request's slot.  Block references are
+        dropped, not zeroed: blocks shared with live requests survive, and
+        this request's published blocks park in the allocator's LRU cached
+        pool — the next request with the same prefix aliases them back."""
         slot = self._slot_of.pop(req_id, None)
         if slot is None:
             return

@@ -275,11 +275,30 @@ class ServingRuntime:
                            preempt_policy=self.preempt_policy,
                            on_done=self.on_done)
             for i, cfg in enumerate(self.plan.replicas)]
-        self.router = AssignmentRouter(self.plan)
         # router's plan-local replica j -> global ReplicaRuntime
         self._route_map: List[ReplicaRuntime] = list(self.replicas)
+        self.router = self._make_router(self.plan, self._route_map)
         self.info: Dict[str, object] = {}
         self.scale_log: List[object] = []     # ScaleDecision records
+
+    def _make_router(self, plan: ServingPlan,
+                     route_map: List[ReplicaRuntime]) -> AssignmentRouter:
+        """Build the plan's router; when the executor runs prefix caching,
+        attach a warm-prefix affinity probe that asks each candidate
+        replica's KV manager how many prompt tokens its prefix index
+        already holds (see ``AssignmentRouter``)."""
+        if not getattr(self.executor, "prefix_cache", False):
+            return AssignmentRouter(plan)
+
+        def affinity(j: int, req) -> int:
+            if req.prompt is None or j >= len(route_map):
+                return 0
+            mgr = self.executor.kv_manager(route_map[j].index)
+            if mgr is None:
+                return 0
+            return mgr.cached_prefix_tokens(req.prompt, req.input_len + 1)
+
+        return AssignmentRouter(plan, prefix_affinity=affinity)
 
     # ------------------------------------------------------------- dispatch
 
@@ -342,7 +361,7 @@ class ServingRuntime:
         if rebalance:
             for r in new_map:
                 migrated.extend(r.strip_queue())
-        self.router = AssignmentRouter(new_plan)
+        self.router = self._make_router(new_plan, new_map)
         self._route_map = new_map
         for state in sorted(migrated, key=lambda s: s.req.arrival):
             self._dispatch(state, at=event.time)   # rerouted now, not on arrival
@@ -446,10 +465,13 @@ class ServingRuntime:
         info["preemptions"] = float(sum(r.preempted for r in self.replicas))
         per_replica: List[Dict[str, object]] = []
         kv_peaks: List[float] = []
+        hit_tok, prompt_tok = 0, 0
         for r in self.replicas:
             mgr = self.executor.kv_manager(r.index)
             if mgr is not None:
                 kv_peaks.append(mgr.peak_used)
+                hit_tok += mgr.prefix_hit_tokens_total
+                prompt_tok += mgr.prefix_prompt_tokens_total
             per_replica.append({
                 "replica": r.index,
                 "config": r.config.key,
@@ -459,11 +481,18 @@ class ServingRuntime:
                 "draining": r.draining,
                 "kv_peak_blocks": mgr.peak_used if mgr is not None else None,
                 "kv_blocks": mgr.num_blocks if mgr is not None else None,
+                "prefix_hit_rate": (mgr.prefix_hit_rate
+                                    if mgr is not None and mgr.prefix_cache
+                                    else None),
                 "step_time_s": self.executor.step_time_estimate(r.index),
             })
         info["per_replica"] = per_replica
         if kv_peaks:
             info["kv_peak_blocks"] = float(max(kv_peaks))
+        if getattr(self.executor, "prefix_cache", False):
+            info["prefix_hit_rate"] = (hit_tok / prompt_tok
+                                       if prompt_tok else 0.0)
+            info["prefix_hit_tokens"] = float(hit_tok)
         if autoscale is not None:
             info["autoscale_events"] = float(len(self.scale_log))
         return RuntimeResult(records=states, per_replica_busy=busy,

@@ -29,7 +29,12 @@ Semantics (inherited from the validated simulator, now shared):
   ``RequestState.preemptions``).  The victim is chosen by
   ``preempt_policy``: ``"latest"`` (vLLM recompute default: the
   most-recently-admitted request) or ``"fewest-blocks"`` (the cheapest
-  recompute: the request holding the fewest KV blocks);
+  recompute: the request holding the fewest KV blocks).  With prefix
+  caching on, both steps are refcount-aware: freeing a victim only
+  *decrefs* blocks shared with live requests (they stay resident),
+  ``held_blocks`` counts only the blocks eviction would actually
+  reclaim, and readmission re-resolves the prefix index — a preempted
+  request typically re-aliases its own still-cached prefix;
 * a ``draining`` replica (removed by a replan) finishes its active batch
   but admits nothing new — and never preempts, since its queue can no
   longer drain through admission;
@@ -205,7 +210,8 @@ class ReplicaRuntime:
                 break
             solo = not self.active and not group
             if mgr is not None and not mgr.admit(
-                    nxt.req.req_id, nxt.req.input_len + 1, solo=solo):
+                    nxt.req.req_id, nxt.req.input_len + 1, solo=solo,
+                    prompt=nxt.req.prompt):
                 break                        # FCFS: no queue jumping
             self.queue.pop(0)
             nxt.phase = Phase.PREFILL

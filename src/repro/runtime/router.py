@@ -8,10 +8,17 @@ or carries zero mass, the router falls back to round-robin **only among
 replicas serving the same model** — never to a replica loaded with a
 different model.  If no replica serves the request's model, ``route``
 returns ``None`` and the runtime records the request as dropped.
+
+With prefix caching enabled the runtime additionally supplies a
+``prefix_affinity`` probe: among the plan's positive-mass candidate
+replicas for a demand, the router prefers the one holding the longest
+cached prefix of the request's prompt (warm-prefix affinity), breaking
+ties by deficit-round-robin credit so routing still tracks the plan's
+fractions whenever no replica is warm.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -22,8 +29,12 @@ from repro.core.workloads import Request
 class AssignmentRouter:
     """Routes each request to a replica index per the plan's x matrix."""
 
-    def __init__(self, plan: ServingPlan):
+    def __init__(self, plan: ServingPlan,
+                 prefix_affinity: Optional[
+                     Callable[[int, Request], int]] = None):
         self.plan = plan
+        # (replica_index, request) -> cached prefix tokens on that replica
+        self.prefix_affinity = prefix_affinity
         self._index = {(m, w): d for d, (m, w, _) in enumerate(plan.demands)}
         # deficit-round-robin credit per (replica, demand)
         self._credit = np.zeros_like(plan.assignment)
@@ -41,6 +52,18 @@ class AssignmentRouter:
             if total > 0:
                 self._credit[:, d] += probs / total
                 i = int(np.argmax(self._credit[:, d]))
+                if self.prefix_affinity is not None:
+                    # Warm-prefix affinity: steer to the plan-eligible
+                    # replica holding the longest cached prefix; on an
+                    # all-cold tie (warmth 0 everywhere) this reduces to
+                    # the pure DRR pick.  The credit debit still lands on
+                    # the chosen replica, so plan tracking self-corrects.
+                    cands = np.flatnonzero(probs > 0)
+                    warmth = {int(c): self.prefix_affinity(int(c), req)
+                              for c in cands}
+                    i = int(max(cands, key=lambda c: (
+                        warmth[int(c)], self._credit[int(c), d],
+                        -int(c))))
                 self._credit[i, d] -= 1.0
                 return i
         # demand not covered by the plan: round-robin among same-model
@@ -50,6 +73,14 @@ class AssignmentRouter:
             return None
         k = self._fallback.get(req.model, 0)
         self._fallback[req.model] = k + 1
+        if self.prefix_affinity is not None:
+            # Warm-prefix affinity on the fallback path: rotate the
+            # candidate order to the round-robin cursor so an all-cold
+            # pick is exactly the legacy round-robin choice, then let
+            # the warmest replica win.
+            order = [matching[(k + j) % len(matching)]
+                     for j in range(len(matching))]
+            return max(order, key=lambda c: self.prefix_affinity(c, req))
         return matching[k % len(matching)]
 
     def realized_fractions(self) -> np.ndarray:

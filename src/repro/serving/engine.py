@@ -29,14 +29,30 @@ from repro.models.config import ArchConfig
 # up to the next power of two collapses the distinct shapes to O(log T)
 # buckets, and the shared-LRU bound below caps total retained compilations.
 MIN_T_BUCKET = 16
+# Warm-prefix suffixes are much shorter than full prompts, so their jit
+# shapes bucket from a smaller floor — a 5-token unique suffix compiles an
+# 8-wide kernel, not the full-prompt bucket it no longer executes.
+MIN_SUFFIX_BUCKET = 8
+
+
+def _pow2_bucket(n: int, floor: int) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
 
 
 def bucket_t_max(t_max: int) -> int:
     """Round a requested cache length up to a power-of-two bucket."""
-    b = MIN_T_BUCKET
-    while b < t_max:
-        b *= 2
-    return b
+    return _pow2_bucket(t_max, MIN_T_BUCKET)
+
+
+def bucket_suffix(s: int) -> int:
+    """Power-of-two bucket for a warm request's *suffix* length: after a
+    prefix hit the prefill jit cache keys on this (plus the prefix-table
+    width bucket), so warm requests reuse small-shape compilations instead
+    of the full-prompt shapes they no longer execute."""
+    return _pow2_bucket(max(1, s), MIN_SUFFIX_BUCKET)
 
 
 def pow2_chunks(k: int) -> List[int]:
@@ -133,6 +149,37 @@ class ReplicaEngine:
         logits, caches = self._prefill_fn(t_max)(self.params, prompts,
                                                  prefix_embeds)
         return M.greedy_sample(logits[:, -1]), caches
+
+    def _suffix_fn(self, s_bucket: int, p_bucket: int):
+        """Compiled suffix-only prefill for the (suffix, prefix-table)
+        power-of-two bucket pair — keyed on the *suffix* length, never the
+        full prompt shape, so warm-prefix cohorts share small
+        compilations (bounded LRU, shared across same-arch replicas)."""
+        return _shared_jit(
+            ("prefill_suffix", self.cfg, s_bucket, p_bucket),
+            lambda: jax.jit(functools.partial(M.prefill_suffix, self.cfg)))
+
+    def prefill_suffix_batch(self, suffix_tokens: jax.Array, pools,
+                             prefix_tables: jax.Array, t_prefix: int):
+        """Warm-prefix prefill: run only the cohort's unique suffix against
+        the replica's cached prefix blocks; returns (first_token,
+        suffix_caches) shaped like :meth:`prefill_batch`'s but covering
+        suffix positions only.  Tokens pad to the suffix bucket, tables to
+        the table bucket (scratch-block entries, masked by ``t_prefix``);
+        the traced last-index keeps logits on the last *real* token."""
+        b, s = suffix_tokens.shape
+        s_buc = bucket_suffix(s)
+        if s_buc > s:
+            suffix_tokens = jnp.pad(suffix_tokens, ((0, 0), (0, s_buc - s)))
+        p = prefix_tables.shape[1]
+        p_buc = _pow2_bucket(max(1, p), 1)
+        if p_buc > p:
+            prefix_tables = jnp.pad(prefix_tables,
+                                    ((0, 0), (0, p_buc - p)))
+        logits, caches = self._suffix_fn(s_buc, p_buc)(
+            self.params, suffix_tokens, pools, prefix_tables,
+            jnp.asarray(t_prefix, jnp.int32), jnp.asarray(s - 1, jnp.int32))
+        return M.greedy_sample(logits), caches
 
     def decode_batch(self, caches, tok: jax.Array, pos: int):
         """One greedy decode step for a batch; returns (next_token, caches)."""

@@ -313,7 +313,9 @@ class Session:
         def build(arrival: float) -> RequestState:
             handle.state = RequestState(req=Request(
                 req_id=rid, workload=workload, input_len=int(input_len),
-                output_len=int(out), arrival=arrival, model=model))
+                output_len=int(out), arrival=arrival, model=model,
+                prompt=(tuple(int(t) for t in tokens)
+                        if tokens is not None else None)))
             return handle.state
 
         self.source.submit(build)

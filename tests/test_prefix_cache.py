@@ -1,0 +1,516 @@
+"""Cross-request prefix caching tests: allocator refcount/CoW/LRU
+invariants, prefix-aware symbolic admission, refcount-aware preemption,
+router warm-prefix affinity, suffix jit bucketing, and the engine-level
+acceptance checks (warm token streams byte-identical to cold runs;
+cost-model and engine backends make identical admission decisions on
+shared-prefix traces with the cache enabled on both).
+
+The property tests run as seeded randomized operation sequences (the
+container has no ``hypothesis``; the invariants are the same ones a
+``@given`` harness would drive, exercised across many seeds).
+"""
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage, config_throughput
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import (Request, Trace, make_shared_prefix_trace,
+                                  nearest_workload)
+from repro.runtime import CostModelExecutor, ServingRuntime
+from repro.runtime.kvcache import BlockAllocator, KVCacheManager, hash_blocks
+from repro.runtime.router import AssignmentRouter
+
+BS = 16
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+BLOCK_BYTES = BS * TINY.kv_bytes_per_token
+
+
+def _replica(num_blocks: int) -> Config:
+    free = (num_blocks + 0.5) * BLOCK_BYTES
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("kv-test", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x")
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(config: Config, n_requests: int, replicas: int = 1) -> ServingPlan:
+    return ServingPlan(replicas=[config] * replicas,
+                       assignment=np.ones((replicas, 1)) / replicas,
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=config.cost * replicas)
+
+
+# ------------------------------------------------------------- unit: hashes
+
+def test_prefix_hash_blocks_chained_and_capped():
+    p = list(range(40))
+    h = hash_blocks(p, BS)
+    assert len(h) == 2                       # two full 16-token blocks
+    assert h == hash_blocks(p[:35], BS)      # same full blocks, same names
+    q = list(p)
+    q[3] = 999                               # diverge inside block 0
+    h2 = hash_blocks(q, BS)
+    assert h2[0] != h[0] and h2[1] != h[1]   # chained: all downstream differ
+    r = list(p)
+    r[20] = 999                              # diverge inside block 1 only
+    h3 = hash_blocks(r, BS)
+    assert h3[0] == h[0] and h3[1] != h[1]
+    # the match cap always leaves >= 1 suffix token to prefill
+    assert len(hash_blocks(p[:32], BS, max_match_tokens=31)) == 1
+    assert hash_blocks(p, BS) == hash_blocks(tuple(p), BS)  # dtype-agnostic
+
+
+# ------------------------------------------ property: allocator invariants
+
+def _allocator_invariants(a: BlockAllocator, n: int):
+    free = set(a._free)
+    live = set(a._refs)
+    lru = set(a._lru)
+    assert free.isdisjoint(live), "block both free and referenced"
+    assert free.isdisjoint(lru), "block both free and cached"
+    assert lru.isdisjoint(live), "cached block still referenced"
+    assert len(free) + len(live) + len(lru) == n, "blocks leaked"
+    assert all(a._hash_of.get(i) is not None for i in lru), \
+        "unhashed block parked in the cached pool"
+    for h, i in a._index.items():
+        assert a._hash_of.get(i) == h, "index/hash_of disagree"
+    assert all(r >= 1 for r in a._refs.values())
+
+
+def test_prefix_allocator_random_ops_property():
+    """Random alloc/free/commit/adopt/cow sequences: no block is ever both
+    free and referenced, LRU eviction only reclaims refcount-0 blocks, and
+    the free/live/cached partition never leaks a block."""
+    N = 24
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        a = BlockAllocator(N, first_id=1)
+        owned = []            # simulated request block lists
+        hashes = []           # hashes ever committed
+        next_h = iter(range(1_000_000, 2_000_000))
+        for step in range(300):
+            op = int(rng.integers(0, 5))
+            if op == 0:       # alloc a small request
+                k = int(rng.integers(1, 4))
+                if k <= a.available_blocks:
+                    live_before = set(a._refs)
+                    ids = a.alloc(k)
+                    # eviction for this alloc never touched a live block
+                    assert live_before <= set(a._refs)
+                    owned.append(ids)
+            elif op == 1 and owned:     # free a request
+                ids = owned.pop(int(rng.integers(0, len(owned))))
+                a.free(ids)
+            elif op == 2 and owned:     # commit one owned block
+                ids = owned[int(rng.integers(0, len(owned)))]
+                i = ids[int(rng.integers(0, len(ids)))]
+                if a.block_hash(i) is None:
+                    h = next(next_h)
+                    assert a.commit(i, h) == i
+                    hashes.append(h)
+            elif op == 3 and hashes:    # adopt a committed hash
+                h = hashes[int(rng.integers(0, len(hashes)))]
+                i = a.adopt(h)
+                if i is not None:
+                    owned.append([i])
+            elif op == 4 and owned:     # cow one owned block
+                r = int(rng.integers(0, len(owned)))
+                j = int(rng.integers(0, len(owned[r])))
+                i = owned[r][j]
+                if a.writable(i) or a.available_blocks >= 1:
+                    new, copied = a.cow(i)
+                    owned[r][j] = new
+                    assert a.writable(new) or not copied
+            _allocator_invariants(a, N)
+        for ids in owned:
+            a.free(ids)
+        _allocator_invariants(a, N)
+        assert a.used_blocks == 0
+
+
+def test_prefix_allocator_adopt_revives_and_evicts_lru():
+    a = BlockAllocator(4, first_id=1)
+    ids = a.alloc(2)
+    a.commit(ids[0], 111)
+    a.commit(ids[1], 222)
+    a.free(ids)
+    assert (a.free_blocks, a.cached_blocks, a.used_blocks) == (2, 2, 0)
+    got = a.adopt(111)                       # revive from the cached pool
+    assert got == ids[0] and a.ref_count(got) == 1
+    assert a.cache_hits == 1
+    big = a.alloc(3)                         # 2 free + 1 eviction (222)
+    assert a.evictions == 1 and a.adopt(222) is None
+    assert a.adopt(111) == ids[0] and a.ref_count(ids[0]) == 2
+    a.free(big)
+    a.free([got, ids[0]])
+    assert a.used_blocks == 0
+
+
+def test_prefix_allocator_cow_semantics():
+    a = BlockAllocator(4, first_id=1)
+    (i,) = a.alloc(1)
+    assert a.writable(i)
+    assert a.cow(i) == (i, False)            # private block: no copy
+    a.commit(i, 7)
+    assert not a.writable(i)                 # committed => immutable
+    new, copied = a.cow(i)
+    assert copied and new != i and a.writable(new)
+    assert a.ref_count(i) == 0 and i in a._lru   # old parked, still indexed
+    j = a.adopt(7)
+    assert j == i
+    a.free([new, j])
+    assert a.used_blocks == 0
+
+
+# ----------------------------------------------- unit: prefix-aware manager
+
+def _p(n, seed=0):
+    return tuple(int(t) for t in
+                 np.random.default_rng(seed).integers(0, 1000, n))
+
+
+def test_prefix_manager_warm_admission_reserves_suffix_only():
+    m = KVCacheManager(num_blocks=20, block_size=BS, prefix_cache=True)
+    prompt = _p(48)
+    assert m.admit(0, 49, prompt=prompt)     # cold: 4 blocks (49 tokens)
+    assert m.used_blocks == 4
+    assert m.prefix_hit_tokens(0) == 0
+    m.free(0)                                # 2 full blocks park in the LRU
+    assert m.used_blocks == 0 and m.cached_blocks == 2
+    assert m.cached_prefix_tokens(prompt, 49) == 32
+    assert m.admit(1, 49, prompt=prompt)     # warm: revives 2, adds 2
+    assert m.prefix_hit_tokens(1) == 32
+    assert m.used_blocks == 4 and m.cached_blocks == 0
+    # a third request sharing only block 0's worth of tokens
+    other = prompt[:BS] + _p(32, seed=9)
+    assert m.admit(2, 49, prompt=other)
+    assert m.prefix_hit_tokens(2) == BS
+    assert m.used_blocks == 7                # 1 shared + 3 new
+    assert m.prefix_hit_rate > 0
+    m.free(1)
+    m.free(2)
+    assert m.used_blocks == 0
+
+
+def test_prefix_manager_preemption_respects_refcounts():
+    """Freeing a preempted request never reclaims blocks shared with live
+    requests, ``held_blocks`` reports only what eviction would reclaim,
+    and readmission re-resolves the prefix index."""
+    m = KVCacheManager(num_blocks=20, block_size=BS, prefix_cache=True)
+    prompt = _p(48)
+    assert m.admit(0, 49, prompt=prompt)
+    assert m.admit(1, 49, prompt=prompt)     # shares 2 blocks with req 0
+    assert m.used_blocks == 6                # 4 + 2 unique
+    assert m.held_blocks(0) == 2             # 2 of its 4 are shared
+    assert m.held_blocks(1) == 2
+    m.free(0)                                # "preempt" req 0
+    assert m.used_blocks == 4                # shared blocks stay: req 1 lives
+    assert m.cached_blocks == 0              # nothing parked (still refed)
+    assert m.held_blocks(1) == 4             # req 1 now sole holder
+    assert m.admit(0, 49, prompt=prompt)     # readmission hits the index
+    assert m.prefix_hit_tokens(0) == 32
+    assert m.used_blocks == 6
+    m.free(0)
+    m.free(1)
+    assert m.used_blocks == 0 and m.cached_blocks == 2
+
+
+def test_prefix_manager_lru_eviction_under_pressure():
+    m = KVCacheManager(num_blocks=6, block_size=BS, prefix_cache=True)
+    a, b = _p(32, seed=1), _p(32, seed=2)
+    assert m.admit(0, 33, prompt=a)          # 3 blocks, 1 full cached-able
+    m.free(0)
+    assert m.cached_blocks == 1
+    assert m.admit(1, 33, prompt=b)          # different prefix: cold
+    assert m.admit(2, 33, prompt=b)          # warm on b: 3 + 2 = 5 used
+    assert m.used_blocks == 5
+    assert m.cached_prefix_tokens(a, 33) == BS   # a's block still parked
+    # pool pressure: growth must evict a's cached block, never b's live ones
+    assert m.grow(1, 49)                     # +1 block -> 6 used, pool full
+    assert m.prefix_evictions == 1
+    assert m.cached_blocks == 0
+    assert m.cached_prefix_tokens(a, 33) == 0    # evicted from the index
+    assert m.cached_prefix_tokens(b, 33) == BS   # live shared block survives
+    assert m.used_blocks == 6 <= m.num_blocks
+    m.free(1)
+    m.free(2)
+    assert m.used_blocks == 0
+
+
+def test_prefix_manager_cache_off_matches_legacy_arithmetic():
+    """With the pool disabled, admission on a shared-prefix workload is
+    byte-identical to the legacy count-only arithmetic — prompts are
+    ignored entirely (cached-hit admission ≡ cold admission)."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        off = KVCacheManager(num_blocks=12, block_size=BS)
+        legacy = KVCacheManager(num_blocks=12, block_size=BS)
+        shared = _p(64, seed=seed)
+        held = []
+        for step in range(120):
+            op = int(rng.integers(0, 3))
+            if op == 0:
+                rid = step
+                tokens = int(rng.integers(1, 80))
+                solo = not held
+                r1 = off.admit(rid, tokens, solo=solo, prompt=shared)
+                r2 = legacy.admit(rid, tokens, solo=solo)
+                assert r1 == r2
+                if r1:
+                    held.append((rid, tokens))
+            elif op == 1 and held:
+                rid, tokens = held[int(rng.integers(0, len(held)))]
+                g = int(rng.integers(1, 30))
+                assert (off.grow(rid, tokens + g)
+                        == legacy.grow(rid, tokens + g))
+            elif op == 2 and held:
+                rid, _ = held.pop(int(rng.integers(0, len(held))))
+                off.free(rid)
+                legacy.free(rid)
+            assert off.used_blocks == legacy.used_blocks
+            assert off.peak_used == legacy.peak_used
+        assert off.prefix_hit_rate == 0.0 and off.cached_blocks == 0
+
+
+# -------------------------------------------------- unit: cost-model knob
+
+def test_prefix_hit_rate_discounts_costmodel_prefill():
+    cfg = _replica(num_blocks=50)
+    w = __import__("repro.core.workloads", fromlist=["WORKLOAD_TYPES"]
+                   ).WORKLOAD_TYPES[0]
+    cold = config_throughput(cfg.stages, TINY, w)
+    warm = config_throughput(cfg.stages, TINY, w, prefix_hit_rate=0.9)
+    assert warm > cold                       # cheaper prefill -> more req/s
+    assert config_throughput(cfg.stages, TINY, w, prefix_hit_rate=0.0) == cold
+    with pytest.raises(ValueError):
+        config_throughput(cfg.stages, TINY, w, prefix_hit_rate=1.5)
+
+
+# ------------------------------------------------ unit: shared-prefix trace
+
+def test_prefix_trace_generator_shapes_and_sharing():
+    tr = make_shared_prefix_trace("sp", 40, input_len=48, output_len=4,
+                                  prefix_pool_size=2, prefix_len=32,
+                                  hit_ratio=1.0, vocab=500, seed=3)
+    assert tr.num_requests == 40
+    prefixes = {r.prompt[:32] for r in tr.requests}
+    assert len(prefixes) <= 2                # every prompt from the pool
+    assert all(len(r.prompt) == 48 for r in tr.requests)
+    suffixes = [r.prompt[32:] for r in tr.requests]
+    assert len(set(suffixes)) > 30           # suffixes unique-ish
+    cold = make_shared_prefix_trace("sp", 40, input_len=48, output_len=4,
+                                    prefix_pool_size=2, prefix_len=32,
+                                    hit_ratio=0.0, vocab=500, seed=3)
+    assert len({r.prompt[:32] for r in cold.requests}) == 40
+    # per-pool length distribution + clamping
+    td = make_shared_prefix_trace("sp", 8, input_len=16, output_len=2,
+                                  prefix_len=[8, 64], hit_ratio=1.0, seed=0)
+    assert all(1 <= len(r.prompt) == 16 for r in td.requests)
+    assert tr.requests[0].workload == nearest_workload(48, 4)
+
+
+# -------------------------------------------------- unit: router affinity
+
+def test_prefix_router_affinity_prefers_warm_replica():
+    cfg = _replica(num_blocks=50)
+    plan = _plan(cfg, 4, replicas=2)
+    prompt = _p(48)
+    warm_mgr = KVCacheManager(num_blocks=50, block_size=BS,
+                              prefix_cache=True)
+    warm_mgr.admit(0, 49, prompt=prompt)
+    mgrs = [KVCacheManager(num_blocks=50, block_size=BS, prefix_cache=True),
+            warm_mgr]
+
+    def affinity(j, req):
+        return mgrs[j].cached_prefix_tokens(req.prompt, req.input_len + 1)
+
+    req = Request(req_id=9, workload=0, input_len=48, output_len=4,
+                  arrival=0.0, prompt=prompt)
+    cold_req = Request(req_id=10, workload=0, input_len=48, output_len=4,
+                       arrival=0.0, prompt=_p(48, seed=5))
+    # plain DRR would send the first request to replica 0; warmth wins
+    assert AssignmentRouter(plan).route(req) == 0
+    router = AssignmentRouter(plan, prefix_affinity=affinity)
+    assert router.route(req) == 1
+    # all-cold requests degenerate to DRR (replica 0 is owed one now)
+    assert router.route(cold_req) == 0
+
+
+def test_prefix_runtime_routes_to_warm_replica_and_reports_stats():
+    """Live-session routing: a recorded trace is dispatched upfront (all
+    replicas cold at routing time), but online submissions route after
+    earlier requests published their prefix blocks — warm-prefix affinity
+    then overrides DRR's alternating split and pins the shared pool's
+    prefix to the replica it first landed on."""
+    from repro.serving.session import Session
+    cfg = _replica(num_blocks=50)
+    executor = CostModelExecutor([cfg, cfg], [TINY], prefix_cache=True)
+    session = Session(_plan(cfg, 12, replicas=2), executor)
+    rng = np.random.default_rng(1)
+    prefix = [int(t) for t in rng.integers(0, 1000, 32)]
+    for _ in range(12):
+        suffix = [int(t) for t in rng.integers(0, 1000, 16)]
+        h = session.submit(prefix + suffix, output_len=4)
+        h.result(timeout=60)        # wait: next submit routes against
+    res = session.close(timeout=60)  # published warmth, not a cold pool
+    assert res.num_completed == 12
+    assert res.info["prefix_hit_rate"] > 0
+    rates = [r["prefix_hit_rate"] for r in res.info["per_replica"]]
+    assert all(v is not None for v in rates)
+    served = [r["completed"] for r in res.info["per_replica"]]
+    assert sorted(served) == [0, 12]
+
+
+# -------------------------------------------- unit: suffix jit bucketing
+
+def test_prefix_suffix_bucket_is_pow2_on_suffix_length():
+    from repro.serving.engine import (MIN_SUFFIX_BUCKET, bucket_suffix,
+                                      bucket_t_max)
+    assert MIN_SUFFIX_BUCKET == 8
+    assert bucket_suffix(1) == 8
+    assert bucket_suffix(5) == bucket_suffix(7) == bucket_suffix(8) == 8
+    assert bucket_suffix(9) == 16
+    assert bucket_t_max(17) == 32            # full-prompt floor unchanged
+
+
+def test_prefix_suffix_prefill_matches_cold_and_shares_jit_bucket():
+    """The warm suffix-only prefill produces the same greedy first token
+    as a cold full-prompt prefill of the identical prompt, and distinct
+    suffix lengths inside one bucket share a single compiled entry."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.runtime.kvcache.paged import PagedEngineCache
+    from repro.serving import engine as E
+
+    cfg = get_config("llama3-8b").reduced()
+    eng = E.ReplicaEngine(cfg, seed=0)
+    paged = PagedEngineCache(cfg, num_slots=2, t_max=24, block_size=8,
+                             prefix_cache=True)
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab_size, 16)
+    rows = {s: np.concatenate([base[:8],
+                               rng.integers(0, cfg.vocab_size, s)])
+            for s in (5, 7, 8)}
+    # cold-prefill the prefix owner and publish its full block
+    h0 = paged.block_hashes(base, 16)
+    assert len(h0) == 1
+    tok, caches = eng.prefill_batch(jnp.asarray(base[None], jnp.int32), 16)
+    paged.admit_cohort([1], caches, np.asarray(tok), 16,
+                       block_hashes_per_req=[h0])
+    keys_before = [k for k in E._shared_jit_cache
+                   if k[0] == "prefill_suffix"]
+    for rid, (s, row) in enumerate(sorted(rows.items()), start=2):
+        t_prompt = 8 + s
+        hs = paged.block_hashes(row, t_prompt)
+        assert paged.match_len(hs) == 1
+        pref = paged.adopt_prefix(hs[:1])
+        tables = jnp.asarray(np.asarray([pref], np.int32))
+        warm_tok, suf = eng.prefill_suffix_batch(
+            jnp.asarray(row[None, 8:], jnp.int32), paged.pools, tables, 8)
+        cold_tok, _ = eng.prefill_batch(
+            jnp.asarray(row[None], jnp.int32), t_prompt)
+        assert int(np.asarray(warm_tok)[0]) == int(np.asarray(cold_tok)[0])
+        paged.admit_prefixed([rid], [pref], suf, np.asarray(warm_tok),
+                             8, t_prompt, [hs])
+        paged.release(rid)
+    keys_after = [k for k in E._shared_jit_cache
+                  if k[0] == "prefill_suffix"]
+    # suffix lengths 5, 7, 8 all bucket to 8: exactly one new compilation
+    assert len(set(keys_after) - set(keys_before)) == 1
+    assert paged.physical_hit_requests == 3
+    paged.release(1)
+    assert paged.allocator.used_blocks == 0
+    assert paged.allocator.cached_blocks >= 1
+
+
+# --------------------------------- acceptance: engine warm ≡ cold streams
+
+def _engine_runtime(trace, cfg, *, prefix_cache, num_requests, replicas=1,
+                    input_len=16, max_new=6, max_batch=4, num_blocks=50):
+    from repro.configs import get_config
+    from repro.runtime import EngineExecutor
+    plan = _plan(cfg, num_requests, replicas=replicas)
+    executor = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                              models=[TINY], max_batch=max_batch,
+                              input_len=input_len, max_new=max_new,
+                              prefix_cache=prefix_cache)
+    runtime = ServingRuntime(plan, executor)
+    res = runtime.run(trace)
+    return executor, runtime, res
+
+
+def test_prefix_warm_token_streams_identical_to_cold_run():
+    """Acceptance: the same shared-prefix trace served with the prefix
+    cache on and off produces byte-identical per-request token trails —
+    aliasing cached blocks and prefilling only suffixes changes compute,
+    never tokens."""
+    pytest.importorskip("jax")
+    cfg = _replica(num_blocks=50)
+    trace = make_shared_prefix_trace("sp", 6, input_len=48, output_len=4,
+                                     prefix_pool_size=1, prefix_len=32,
+                                     hit_ratio=1.0, arrival_rate=None,
+                                     seed=2)
+    cold_ex, cold_rt, cold_res = _engine_runtime(
+        trace, cfg, prefix_cache=False, num_requests=6)
+    warm_ex, warm_rt, warm_res = _engine_runtime(
+        trace, cfg, prefix_cache=True, num_requests=6)
+    assert cold_res.num_completed == warm_res.num_completed == 6
+    assert warm_ex.token_log == cold_ex.token_log
+    assert (warm_rt.replicas[0].admission_log
+            == cold_rt.replicas[0].admission_log)
+    paged = warm_ex._paged[0]
+    assert paged is not None and paged.physical_hit_requests > 0
+    assert paged.allocator.used_blocks == 0         # everything released
+    mgr = warm_ex.kv_manager(0)
+    assert mgr.prefix_hits > 0 and mgr.prefix_hit_rate > 0
+    assert warm_res.info["prefix_hit_rate"] > 0
+
+
+# ------------------- acceptance: backend equivalence + preemption, cache on
+
+def test_prefix_backends_identical_admissions_under_preemption():
+    """Acceptance: a shared-prefix trace that forces preemption, served
+    with the prefix cache enabled on BOTH backends — identical admission
+    cohorts (including readmissions) and identical preemption counts; the
+    engine's preempted requests re-resolve the prefix index through real
+    refcounted blocks and every physical block is freed at the end."""
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.runtime import EngineExecutor
+
+    # input 62 + 1 + 4 outputs crosses a 4th->5th block boundary mid-decode
+    # (65 tokens at BS=16), so concurrent warm requests that fit at
+    # admission (3-block shared prefix, 1-block deltas) outgrow the pool
+    cfg = _replica(num_blocks=7)
+    trace = make_shared_prefix_trace("sp", 4, input_len=62, output_len=4,
+                                     prefix_pool_size=1, prefix_len=48,
+                                     hit_ratio=1.0, seed=4)
+    plan = _plan(cfg, 4)
+
+    cost_ex = CostModelExecutor([cfg], [TINY], prefix_cache=True)
+    cost_rt = ServingRuntime(plan, cost_ex)
+    cost_res = cost_rt.run(trace)
+
+    eng_ex = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                            models=[TINY], max_batch=8, input_len=16,
+                            max_new=5, prefix_cache=True)
+    eng_rt = ServingRuntime(plan, eng_ex)
+    eng_res = eng_rt.run(trace)
+
+    assert cost_res.num_completed == eng_res.num_completed == 4
+    assert (cost_rt.replicas[0].admission_log
+            == eng_rt.replicas[0].admission_log)
+    cost_pre = {r.req.req_id: r.preemptions for r in cost_res.records}
+    eng_pre = {r.req.req_id: r.preemptions for r in eng_res.records}
+    assert cost_pre == eng_pre
+    assert cost_res.num_preemptions > 0
+    assert cost_ex.kv_manager(0).prefix_hits > 0
+    paged = eng_ex._paged[0]
+    assert paged is not None
+    assert paged.allocator.used_blocks == 0
+    assert cost_ex.kv_manager(0).used_blocks == 0
+    assert eng_ex.kv_manager(0).used_blocks == 0
