@@ -1,0 +1,215 @@
+"""Observability overhead: enabled tracing must cost < 2% wall clock.
+
+The observability layer claims to be a *pure observer*: every hook sits
+behind an ``is None`` check, records only already-measured timestamps,
+and never touches the runtime clock or RNG.  This bench holds it to
+that claim on the CI shape:
+
+* **overhead** — the acceptance number (``overhead_pct`` /
+  ``meets_2pct``) is *directly measured*: one enabled run records the
+  exact hook-call sequence the runtime made, that sequence is replayed
+  against a fresh capture in a tight timed loop, and the replay time is
+  taken over the disabled run's serving wall.  (An off-vs-on wall
+  comparison is also reported — ``ab_wall_delta_pct`` — but on shared
+  CI runners run-to-run wall jitter is an order of magnitude larger
+  than a 2% effect, so the A/B delta is informational only.)
+* **equivalence** — the same pair of runs under a pinned deterministic
+  ``TickClock``: token logs and admission logs must be byte-identical
+  with tracing on vs off (``identical_on_off``; the full matrix lives
+  in ``tests/test_observability.py``).
+
+The enabled run's capture is exported as ``BENCH_obs_trace.json``
+(Chrome trace-event JSON — CI uploads it with the other ``BENCH_*.json``
+artifacts; load it in https://ui.perfetto.dev).
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+import math
+import time
+
+import numpy as np
+
+N_REQUESTS = 48
+INPUT_LEN = 8
+OUTPUT_LEN = 24
+MAX_NEW = 25
+MAX_BATCH = 8
+REPEATS = 8      # best-of timing (absorbs CI scheduler noise: per-run
+                 # walls jitter +-15% on shared runners; the min over 8
+                 # interleaved pairs is stable to well under the 2% budget)
+
+
+def _bench_cfg():
+    """The CPU CI shape (same as bench_decode_fusion): ``llama3-8b``
+    reduced then shrunk until scheduling overhead is visible next to
+    compute — the regime where observability overhead would show."""
+    from repro.configs import get_config
+    return dataclasses.replace(
+        get_config("llama3-8b").reduced(), name="llama-bench-tiny",
+        d_model=128, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256)
+
+
+def _serving_setup():
+    from repro.core import costmodel
+    from repro.core.catalog import DeviceType
+    from repro.core.costmodel import ModelProfile, Stage
+    from repro.core.plan import Config, ServingPlan
+    from repro.core.workloads import Request, Trace
+    tiny = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                        head_dim=64, params_total=2e6, params_active=2e6)
+    block_bytes = 16 * tiny.kv_bytes_per_token
+    free = 200.5 * block_bytes
+    mem = ((free + tiny.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("obs-bench", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x")
+    config = Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=tiny)
+    plan = ServingPlan(replicas=[config],
+                       assignment=np.full((1, 1), 1.0),
+                       demands=[(0, 0, float(N_REQUESTS))], makespan=1.0,
+                       cost=config.cost)
+    reqs = tuple(Request(req_id=i, workload=0, input_len=INPUT_LEN,
+                         output_len=OUTPUT_LEN, arrival=0.0)
+                 for i in range(N_REQUESTS))
+    return tiny, plan, Trace("obs-bench", reqs)
+
+
+def _make_executor(tiny, plan, *, clock=None):
+    from repro.runtime import EngineExecutor
+    return EngineExecutor(
+        plan, [_bench_cfg()], models=[tiny], max_batch=MAX_BATCH,
+        input_len=INPUT_LEN, max_new=MAX_NEW, fused_steps=8,
+        concurrent=False, clock=clock)
+
+
+def _timed_run(executor, trace, plan, obs=None) -> float:
+    """One serving run on a *fresh* runtime + capture (the executor and
+    its jit caches are reused; a fresh ``Observability`` per run keeps
+    the enabled arm's record count — hence its GC debt — bounded and
+    identical across repeats).  GC is quiesced around the timed region
+    so a collection triggered by earlier allocations can't land inside
+    one arm and not the other."""
+    from repro.runtime import ServingRuntime
+    runtime = ServingRuntime(plan, executor, obs=obs)
+    executor.configure(seed=0)
+    runtime.reset()
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        res = runtime.run(trace)
+        dt = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    assert res.num_completed == N_REQUESTS
+    return dt
+
+
+class _HookRecorder:
+    """Forwards every instrumentation hook to a real capture while
+    recording ``(name, args, kwargs)`` — the recorded sequence is the
+    *exact* extra work an enabled run does, replayable for timing."""
+
+    _HOOKS = frozenset((
+        "begin_run", "register_replica", "on_admit", "on_decode_chunk",
+        "on_preempt", "on_finish", "sample_replica", "on_route",
+        "on_replan", "on_scale_decision", "on_scale_observe",
+        "on_compute", "on_worker_task"))
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = []
+
+    def __getattr__(self, name):
+        attr = getattr(self.inner, name)
+        if name in self._HOOKS:
+            calls = self.calls
+
+            def wrapped(*a, _attr=attr, _name=name, **k):
+                calls.append((_name, a, k))
+                return _attr(*a, **k)
+            return wrapped
+        return attr
+
+
+def _replay_time(calls, repeats: int = 5) -> float:
+    """Best-of wall time to play one run's hook sequence into a fresh
+    capture.  Dispatch via ``getattr`` slightly *overestimates* the real
+    hook cost, which is the conservative direction for an acceptance
+    bound."""
+    from repro.obs import Observability
+    best = math.inf
+    for _ in range(repeats):
+        obs = Observability()
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            for name, a, k in calls:
+                getattr(obs, name)(*a, **k)
+            best = min(best, time.perf_counter() - t0)
+        finally:
+            gc.enable()
+    return best
+
+
+def run():
+    from repro.obs import Observability, TickClock
+    rows = []
+    tiny, plan, trace = _serving_setup()
+
+    # -------- overhead: off vs on, real clock, best-of after warmup.
+    # The arms run interleaved (off, on, off, on, ...) so slow drift in
+    # machine load hits both equally instead of biasing one phase.
+    arms = {"off": (_make_executor(tiny, plan), lambda: None),
+            "on": (_make_executor(tiny, plan), Observability)}
+    for executor, mk_obs in arms.values():            # warm the jits
+        _timed_run(executor, trace, plan, obs=mk_obs())
+    walls = {label: math.inf for label in arms}
+    for _ in range(REPEATS):
+        for label, (executor, mk_obs) in arms.items():
+            walls[label] = min(walls[label],
+                               _timed_run(executor, trace, plan,
+                                          obs=mk_obs()))
+    for label in arms:
+        rows.append({"name": f"serve_obs_{label}",
+                     "us_per_call": walls[label] * 1e6 / N_REQUESTS,
+                     "wall_s": round(walls[label], 4),
+                     "requests": N_REQUESTS})
+    ab_pct = 100.0 * (walls["on"] - walls["off"]) / walls["off"]
+
+    # acceptance: record one enabled run's exact hook sequence, replay
+    # it against a fresh capture, charge the replay to the off wall
+    recorder = _HookRecorder(Observability())
+    _timed_run(arms["on"][0], trace, plan, obs=recorder)
+    hook_s = _replay_time(recorder.calls)
+    overhead_pct = 100.0 * hook_s / walls["off"]
+    rows.append({"name": "obs_overhead",
+                 "us_per_call": hook_s * 1e6 / max(1, len(recorder.calls)),
+                 "hook_calls": len(recorder.calls),
+                 "overhead_pct": round(overhead_pct, 3),
+                 "ab_wall_delta_pct": round(ab_pct, 2),
+                 "meets_2pct": bool(overhead_pct < 2.0)})
+
+    # -------- purity: identical logs on/off under a pinned TickClock
+    from repro.runtime import ServingRuntime
+    logs = {}
+    for label, obs in (("off", None), ("on", Observability())):
+        executor = _make_executor(tiny, plan, clock=TickClock())
+        runtime = ServingRuntime(plan, executor, obs=obs)
+        runtime.run(trace)
+        logs[label] = (dict(executor.token_log),
+                       [r.admission_log for r in runtime.replicas])
+        if obs is not None:
+            path = "BENCH_obs_trace.json"
+            runtime.export_trace(path)
+            rows.append({"name": "obs_trace_export",
+                         "us_per_call": 0.0,
+                         "path": path,
+                         "trace_records": obs.tracer.num_records})
+    rows.append({"name": "obs_equivalence",
+                 "us_per_call": 0.0,
+                 "identical_on_off": bool(logs["on"] == logs["off"])})
+    return rows

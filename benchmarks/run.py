@@ -18,6 +18,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_decode_fusion   tokens/s vs decode fusion factor k (dense + paged)
   bench_online_serving  live submit()/streaming session vs trace replay
   bench_prefix_cache    cold vs warm TTFT + tokens/s at shared-prefix hit ratios
+  bench_observability   enabled-tracing overhead (<2% budget) + on/off purity
 """
 from __future__ import annotations
 
@@ -46,6 +47,7 @@ MODULES = [
     "bench_decode_fusion",
     "bench_online_serving",
     "bench_prefix_cache",
+    "bench_observability",
 ]
 
 

@@ -17,6 +17,8 @@
     PYTHONPATH=src python examples/serve_heterogeneous.py
 """
 import os
+import sys
+import tempfile
 
 import repro
 from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
@@ -97,8 +99,10 @@ def main():
     policy = ScalePolicy.from_spec(
         spec, deployment, interval=max(static.makespan / 50, 1e-3),
         window=2, queue_high=2.0, cooldown=1)
+    obs = repro.Observability()     # trace the autoscale run
     runtime = ServingRuntime(small, CostModelExecutor(small.replicas,
-                                                      spec.models))
+                                                      spec.models),
+                             obs=obs)
     auto = runtime.run(trace, autoscale=policy)
     print(f"static 1-replica: goodput {static.goodput(slo):.2f} req/s, "
           f"makespan {static.makespan:.1f}s")
@@ -108,6 +112,17 @@ def main():
           f"{int(auto.info.get('autoscale_drains', 0))} drains)")
     for d in runtime.scale_log:
         print(f"  t={d.time:8.2f}s {d.action:5s} {d.config_key} ({d.reason})")
+
+    print("\n== observability (exported trace; load in ui.perfetto.dev) ==")
+    trace_path = os.path.join(tempfile.gettempdir(),
+                              "repro_autoscale_trace.json")
+    runtime.export_trace(trace_path)
+    print(f"wrote {trace_path} "
+          f"({obs.tracer.num_records} trace records)")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tools"))
+    from trace_summarize import format_summary, load_trace, summarize
+    print(format_summary(summarize(load_trace(trace_path))))
 
 
 if __name__ == "__main__":

@@ -28,6 +28,8 @@ _LAZY = {
     "replan": ("repro.core.spec", "replan"),
     "Session": ("repro.serving.session", "Session"),
     "RequestHandle": ("repro.serving.session", "RequestHandle"),
+    "Observability": ("repro.obs", "Observability"),
+    "TickClock": ("repro.obs", "TickClock"),
 }
 
 

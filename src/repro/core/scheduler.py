@@ -445,6 +445,9 @@ class ScalePolicy:
         """Clear observation history (called by the runtime at run start)."""
         self._history: List[Tuple[float, float]] = []
         self._cool = 0
+        # Optional repro.obs.Observability (attached by the runtime):
+        # records the windowed load signals behind every decision.
+        self.obs = None
 
     def _arm_cooldown(self) -> None:
         self._history.clear()
@@ -472,6 +475,9 @@ class ScalePolicy:
             float(np.mean([s.queue_len for s in live])),
             float(np.mean([s.kv_used_frac for s in live]))))
         del self._history[:-self.window]
+        if self.obs is not None:
+            q, kv = self._history[-1]
+            self.obs.on_scale_observe(now, q, kv)
         if self._cool > 0:           # counts down even while the cleared
             self._cool -= 1          # window refills: reaction delay is
             return None              # max(cooldown, window) ticks

@@ -1,0 +1,50 @@
+"""Injectable clocks for the serving runtime.
+
+The engine backend schedules on *measured* wall time: every
+``EngineExecutor`` prefill/decode brackets its jit call with
+``t0 = clock(); ...; elapsed = clock() - t0`` and the replica clock
+advances by ``elapsed``.  With the default ``time.perf_counter`` a loaded
+machine stretches those measurements, which can shift admission cohorts —
+the pre-existing load-sensitive flake in the decode-fusion equivalence
+tests.  ``EngineExecutor(clock=...)`` (and ``ServingRuntime(clock=...)``,
+which forwards to the executor) is the seam: tests pin a
+:class:`TickClock` so every measured duration — and every trace
+timestamp derived from it — is deterministic under any machine load.
+"""
+from __future__ import annotations
+
+import threading
+
+__all__ = ["TickClock"]
+
+
+class TickClock:
+    """Deterministic monotone clock: every call advances by ``tick``.
+
+    An ``elapsed = clock() - t0`` bracket therefore measures exactly
+    ``tick`` times the number of clock calls in between (one, for an
+    uninstrumented executor call) — independent of machine load, sleep,
+    or scheduling jitter.  Thread-safe: concurrent replica workers share
+    one monotone sequence, and per-bracket durations stay deterministic
+    as long as each thread's brackets do not interleave other threads'
+    clock calls (the observability layer never reads the runtime clock,
+    precisely to keep this property — see ``repro.obs.tracer``).
+    """
+
+    def __init__(self, tick: float = 1e-4, start: float = 0.0):
+        if tick <= 0:
+            raise ValueError(f"tick must be > 0, got {tick}")
+        self.tick = float(tick)
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            self._t += self.tick
+            return self._t
+
+    @property
+    def now(self) -> float:
+        """Last value handed out (no advance)."""
+        with self._lock:
+            return self._t

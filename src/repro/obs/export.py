@@ -1,0 +1,144 @@
+"""Trace and metrics exporters.
+
+* :func:`chrome_trace` — Chrome trace-event JSON (the ``traceEvents``
+  array format) from an :class:`~repro.obs.Observability` capture: load
+  the written file in Perfetto (https://ui.perfetto.dev) or
+  ``chrome://tracing`` to see one track per replica (prefill groups and
+  fused decode chunks as nested ``X`` spans, preemptions as instants),
+  one control-plane track (route picks, replans, autoscale decisions),
+  per-request QUEUED/PREFILL/DECODE async spans, wall-clock worker
+  occupancy tracks, and every gauge ring-series as a Perfetto counter
+  track.
+* :func:`prometheus_text` — Prometheus text exposition (version 0.0.4)
+  of a :class:`~repro.obs.metrics.MetricsRegistry`: counters, gauges,
+  and cumulative-bucket histograms, ready to serve from a ``/metrics``
+  endpoint or push through a textfile collector.
+
+Runtime timestamps are seconds; Chrome events use microseconds.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Dict, List
+
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["chrome_trace", "write_chrome_trace", "prometheus_text"]
+
+_US = 1e6
+PID = 0                      # one logical "serving" process
+
+
+def _args(d) -> dict:
+    return d if d else {}
+
+
+def chrome_trace(obs) -> Dict[str, object]:
+    """Chrome trace-event document for an Observability capture."""
+    tracer = obs.tracer
+    events: List[dict] = [{
+        "ph": "M", "pid": PID, "name": "process_name", "ts": 0,
+        "args": {"name": "repro-serving"}}]
+    with tracer._lock:
+        track_names = dict(tracer.track_names)
+        spans = list(tracer.spans)
+        instants = list(tracer.instants)
+        asyncs = list(tracer.asyncs)
+    for tid, name in sorted(track_names.items()):
+        events.append({"ph": "M", "pid": PID, "tid": tid, "ts": 0,
+                       "name": "thread_name", "args": {"name": name}})
+        # sort_index keeps replicas on top, control plane and wall-time
+        # worker tracks below, in registration order
+        events.append({"ph": "M", "pid": PID, "tid": tid, "ts": 0,
+                       "name": "thread_sort_index",
+                       "args": {"sort_index": tid}})
+    body: List[dict] = []
+    for tid, name, t0, t1, cat, args in spans:
+        body.append({"ph": "X", "pid": PID, "tid": tid, "name": name,
+                     "cat": cat, "ts": t0 * _US,
+                     "dur": max(0.0, (t1 - t0) * _US),
+                     "args": _args(args)})
+    for tid, name, t, cat, args in instants:
+        body.append({"ph": "i", "pid": PID, "tid": tid, "name": name,
+                     "cat": cat, "ts": t * _US, "s": "t",
+                     "args": _args(args)})
+    for phase, rid, name, t, args in asyncs:
+        body.append({"ph": phase, "pid": PID, "tid": 0, "cat": "request",
+                     "id": rid, "name": name, "ts": t * _US,
+                     "args": _args(args)})
+    for key, points in obs.metrics.series().items():
+        for t, v in points:
+            body.append({"ph": "C", "pid": PID, "tid": 0, "name": key,
+                         "ts": t * _US, "args": {"value": v}})
+    body.sort(key=lambda e: e["ts"])
+    events.extend(body)
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"generator": "repro.obs",
+                          "spans": len(spans), "instants": len(instants),
+                          "async_events": len(asyncs)}}
+
+
+def write_chrome_trace(obs, path: str) -> str:
+    """Serialize :func:`chrome_trace` to ``path``; returns ``path``."""
+    with open(path, "w") as f:
+        json.dump(chrome_trace(obs), f)
+    return path
+
+
+# ---------------------------------------------------------------- prometheus
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    name = _NAME_RE.sub("_", name)
+    return name if not name[:1].isdigit() else "_" + name
+
+
+def _prom_labels(labels: Dict[str, str], extra: str = "") -> str:
+    parts = [f'{_prom_name(k)}="{labels[k]}"' for k in sorted(labels)]
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def _prom_value(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def prometheus_text(registry: MetricsRegistry) -> str:
+    """Prometheus text exposition of every metric in the registry."""
+    lines: List[str] = []
+    typed = set()
+    for kind, name, labels, m in registry.walk():
+        pname = _prom_name(name)
+        if pname not in typed:
+            typed.add(pname)
+            lines.append(f"# TYPE {pname} {kind}")
+        if kind == "counter":
+            lines.append(f"{pname}{_prom_labels(labels)} "
+                         f"{_prom_value(m.value)}")
+        elif kind == "gauge":
+            lines.append(f"{pname}{_prom_labels(labels)} "
+                         f"{_prom_value(m.value)}")
+        else:   # histogram: cumulative le-buckets + _sum/_count
+            cum = 0
+            for bound, count in zip(m.bounds, m.counts):
+                cum += count
+                le = 'le="{}"'.format(_prom_value(bound))
+                lines.append(f"{pname}_bucket{_prom_labels(labels, le)} "
+                             f"{cum}")
+            cum += m.counts[-1]
+            inf_le = 'le="+Inf"'
+            lines.append(f"{pname}_bucket{_prom_labels(labels, inf_le)} "
+                         f"{cum}")
+            lines.append(f"{pname}_sum{_prom_labels(labels)} "
+                         f"{_prom_value(m.sum)}")
+            lines.append(f"{pname}_count{_prom_labels(labels)} {m.count}")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,216 @@
+"""Low-overhead metrics primitives for the serving runtime.
+
+A :class:`MetricsRegistry` hands out three metric kinds —
+:class:`Counter` (monotone totals: preemptions, admissions, routed
+requests), :class:`Gauge` (point-in-time values: queue depth, KV
+occupancy, step-time EMA), and :class:`Histogram` (distributions:
+TTFT, prefill/decode durations) — keyed by name + label set, exactly
+the Prometheus data model.  Every gauge additionally keeps a bounded
+:class:`RingSeries` of ``(t, value)`` samples so runs can be inspected
+*over time* (the runtime samples at event-heap granularity), without
+unbounded growth on long-lived sessions: the ring drops its oldest
+samples once ``capacity`` is reached and counts what it dropped.
+
+Thread model: metric mutation happens from the orchestrator thread and
+(for executor-side compute metrics) per-replica worker threads; a single
+registry lock serializes creation, mutation, and :meth:`snapshot`, so a
+live ``Session.metrics()`` call always sees a consistent view.  The lock
+is uncontended at event granularity — the runtime emits a handful of
+updates per *event*, not per token — which is what keeps the enabled-mode
+overhead inside the <2% budget (``benchmarks/bench_observability.py``
+measures it).
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import math
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "RingSeries", "DEFAULT_BUCKETS"]
+
+# Exponential-ish latency buckets (seconds) covering jit dispatch (~100us)
+# through multi-minute makespans — the Prometheus ``le`` upper bounds.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 300.0)
+
+
+class RingSeries:
+    """Bounded ``(t, value)`` time series (oldest samples drop first)."""
+
+    __slots__ = ("_buf", "appended")
+
+    def __init__(self, capacity: int):
+        self._buf: "collections.deque[Tuple[float, float]]" = \
+            collections.deque(maxlen=max(1, int(capacity)))
+        self.appended = 0          # lifetime appends (dropped = appended-len)
+
+    def append(self, t: float, value: float) -> None:
+        self._buf.append((float(t), float(value)))
+        self.appended += 1
+
+    @property
+    def dropped(self) -> int:
+        return self.appended - len(self._buf)
+
+    def items(self) -> List[Tuple[float, float]]:
+        return list(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class Counter:
+    """Monotone total.  ``inc`` only — resets happen by new registry."""
+
+    __slots__ = ("_lock", "value")
+
+    def __init__(self, lock: threading.RLock):
+        self._lock = lock
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value += n
+
+
+class Gauge:
+    """Point-in-time value; ``set(v, t=...)`` also samples the series."""
+
+    __slots__ = ("_lock", "value", "series")
+
+    def __init__(self, lock: threading.RLock,
+                 series: Optional[RingSeries] = None):
+        self._lock = lock
+        self.value = math.nan
+        self.series = series
+
+    def set(self, value: float, t: Optional[float] = None) -> None:
+        with self._lock:
+            self.value = float(value)
+            if t is not None and self.series is not None:
+                self.series.append(t, value)
+
+
+class Histogram:
+    """Fixed-bucket distribution (Prometheus-style cumulative buckets)."""
+
+    __slots__ = ("_lock", "bounds", "counts", "sum", "count")
+
+    def __init__(self, lock: threading.RLock,
+                 bounds: Sequence[float] = DEFAULT_BUCKETS):
+        self._lock = lock
+        self.bounds: Tuple[float, ...] = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)   # last = +Inf bucket
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        with self._lock:
+            self.counts[bisect.bisect_left(self.bounds, value)] += 1
+            self.sum += value
+            self.count += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def quantile(self, q: float) -> float:
+        """Bucket-resolution quantile estimate (upper bound of the bucket
+        the ``q``-th observation falls in; NaN when empty)."""
+        if not self.count:
+            return math.nan
+        rank = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                return self.bounds[i] if i < len(self.bounds) else math.inf
+        return math.inf
+
+
+def _key(name: str, labels: Dict[str, str]) -> str:
+    """Canonical ``name{k="v",...}`` identity (sorted label keys)."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Name+label-addressed metric store with a consistent snapshot."""
+
+    def __init__(self, *, series_capacity: int = 1024):
+        self.series_capacity = int(series_capacity)
+        self._lock = threading.RLock()
+        self._metrics: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()   # key -> (kind, name, labels, metric)
+
+    # ------------------------------------------------------------- factories
+
+    def _get(self, kind: str, name: str, labels: Dict[str, str], build):
+        key = _key(name, labels)
+        with self._lock:
+            entry = self._metrics.get(key)
+            if entry is None:
+                entry = (kind, name, dict(labels), build())
+                self._metrics[key] = entry
+            elif entry[0] != kind:
+                raise TypeError(f"metric {key!r} already registered as "
+                                f"{entry[0]}, not {kind}")
+            return entry[3]
+
+    def counter(self, name: str, **labels: str) -> Counter:
+        return self._get("counter", name, labels,
+                         lambda: Counter(self._lock))
+
+    def gauge(self, name: str, *, series: bool = True,
+              **labels: str) -> Gauge:
+        return self._get("gauge", name, labels, lambda: Gauge(
+            self._lock,
+            RingSeries(self.series_capacity) if series else None))
+
+    def histogram(self, name: str,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS,
+                  **labels: str) -> Histogram:
+        return self._get("histogram", name, labels,
+                         lambda: Histogram(self._lock, buckets))
+
+    # --------------------------------------------------------------- queries
+
+    def walk(self) -> Iterator[Tuple[str, str, Dict[str, str], object]]:
+        """Yield ``(kind, name, labels, metric)`` in registration order
+        (a consistent copy — safe to iterate while serving)."""
+        with self._lock:
+            entries = list(self._metrics.values())
+        return iter(entries)
+
+    def snapshot(self) -> Dict[str, object]:
+        """One consistent point-in-time view: counters and gauges as
+        scalars, histograms as ``{count, sum, mean, p50, p90, p99}``."""
+        out: Dict[str, object] = {}
+        with self._lock:
+            for key, (kind, _name, _labels, m) in self._metrics.items():
+                if kind == "counter":
+                    out[key] = m.value
+                elif kind == "gauge":
+                    out[key] = m.value
+                else:
+                    out[key] = {"count": m.count, "sum": m.sum,
+                                "mean": m.mean,
+                                "p50": m.quantile(0.50),
+                                "p90": m.quantile(0.90),
+                                "p99": m.quantile(0.99)}
+        return out
+
+    def series(self) -> Dict[str, List[Tuple[float, float]]]:
+        """Every gauge's ring-buffer time series, keyed like the snapshot."""
+        out: Dict[str, List[Tuple[float, float]]] = {}
+        with self._lock:
+            for key, (kind, _n, _l, m) in self._metrics.items():
+                if kind == "gauge" and m.series is not None and len(m.series):
+                    out[key] = m.series.items()
+        return out

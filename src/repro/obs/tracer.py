@@ -1,0 +1,97 @@
+"""Structured span/event recorder for the serving runtime.
+
+The :class:`Tracer` is a pure buffer: instrumentation points hand it
+**already-known timestamps** (replica clocks, event durations, arrival
+stamps — the runtime's serving-time axis) and it appends tuples under a
+lock.  It never reads a clock itself, which is what makes tracing a pure
+observer: enabling it adds no clock calls between an executor's
+``t0 = clock(); ...; elapsed = clock() - t0`` pairs, so measured
+durations — and therefore admission cohorts and token streams — are
+byte-identical with tracing on or off (asserted in
+``tests/test_observability.py``).
+
+Three record kinds, matching the Chrome trace-event phases the exporter
+emits (:mod:`repro.obs.export`):
+
+* **spans** (``ph: "X"``) — machine-phase intervals on a *track* (one
+  track per replica, one for the control plane, one per actor worker):
+  prefill groups, fused decode chunks, worker wall-time occupancy.
+  Spans on one track never overlap (each replica executes one event at
+  a time), so Perfetto renders each track as a clean timeline.
+* **instants** (``ph: "i"``) — points: preemptions, route picks, replans,
+  autoscale decisions.
+* **async request phases** (``ph: "b"``/``"e"``, ``id=req_id``) — each
+  request's QUEUED → PREFILL → DECODE lifecycle as overlapping async
+  spans (requests on one replica overlap freely; async events carry
+  their own id, so they may).
+
+Times are seconds on the runtime's time base; the exporter converts to
+the microseconds Chrome/Perfetto expect.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["Tracer", "Span", "Instant", "AsyncEvent"]
+
+# record tuples (plain tuples: appended per event, kept cheap)
+Span = Tuple[int, str, float, float, str, Optional[dict]]
+#      (track, name, t0, t1, category, args)
+Instant = Tuple[int, str, float, str, Optional[dict]]
+#      (track, name, t, category, args)
+AsyncEvent = Tuple[str, int, str, float, Optional[dict]]
+#      (phase "b"|"e", id, name, t, args)
+
+
+class Tracer:
+    """Append-only trace buffer with named tracks."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.track_names: Dict[int, str] = {}
+        self.spans: List[Span] = []
+        self.instants: List[Instant] = []
+        self.asyncs: List[AsyncEvent] = []
+
+    # -------------------------------------------------------------- tracks
+
+    def track(self, tid: int, name: str) -> int:
+        """Register (or rename) display track ``tid``; returns ``tid``."""
+        with self._lock:
+            self.track_names[tid] = name
+        return tid
+
+    # ------------------------------------------------------------- records
+
+    def span(self, tid: int, name: str, t0: float, t1: float,
+             cat: str = "phase", args: Optional[dict] = None) -> None:
+        with self._lock:
+            self.spans.append((tid, name, float(t0), float(t1), cat, args))
+
+    def instant(self, tid: int, name: str, t: float, cat: str = "event",
+                args: Optional[dict] = None) -> None:
+        with self._lock:
+            self.instants.append((tid, name, float(t), cat, args))
+
+    def async_span(self, rid: int, name: str, t0: float, t1: float,
+                   args: Optional[dict] = None) -> None:
+        """One complete request-phase interval (begin + end in one call —
+        lifecycle phases are recorded retroactively, once their end time
+        is known; the exporter orders events by timestamp)."""
+        with self._lock:
+            self.asyncs.append(("b", rid, name, float(t0), args))
+            self.asyncs.append(("e", rid, name, float(t1), None))
+
+    # -------------------------------------------------------------- queries
+
+    @property
+    def num_records(self) -> int:
+        with self._lock:
+            return len(self.spans) + len(self.instants) + len(self.asyncs)
+
+    def clear(self) -> None:
+        with self._lock:
+            self.spans.clear()
+            self.instants.clear()
+            self.asyncs.clear()

@@ -12,7 +12,10 @@ streaming dispatch, online replanning) behind two executor backends:
 Time is modeled as a single global event heap (the orchestrator always
 fires the earliest event across replicas); pass a
 ``repro.core.scheduler.ScalePolicy`` to ``ServingRuntime.run`` for
-utilization-driven online autoscaling.
+utilization-driven online autoscaling, and a ``repro.obs.Observability``
+as ``ServingRuntime(..., obs=...)`` for request-lifecycle tracing and
+live metrics (``export_trace(path)`` writes Perfetto-loadable Chrome
+trace JSON).
 """
 from repro.runtime.actor import ReplicaWorker
 from repro.runtime.executor import (CostModelExecutor, EngineExecutor,

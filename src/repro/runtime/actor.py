@@ -10,12 +10,20 @@ of *different* replicas overlap in wall time.
 
 An optional JAX device pins every call the worker runs (one accelerator
 per replica in deployment; a no-op on a single-device container).
+
+With observability attached (``obs=``), every executed task is recorded
+as a **wall-clock** occupancy span on a per-worker trace track — using
+``time.perf_counter`` directly, *outside* the executor's own timing
+bracket (the executor's injectable clock seam stays untouched, so a
+pinned deterministic test clock still measures exactly one tick per
+call; see ``repro.obs.clock``).
 """
 from __future__ import annotations
 
 import contextlib
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from typing import Callable, Optional
 
@@ -23,9 +31,11 @@ from typing import Callable, Optional
 class ReplicaWorker:
     """One mailbox thread executing a replica's backend calls in order."""
 
-    def __init__(self, name: str, device: Optional[object] = None):
+    def __init__(self, name: str, device: Optional[object] = None,
+                 obs=None):
         self.name = name
         self.device = device
+        self.obs = obs
         self._mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
         self._closed = False
         self._thread = threading.Thread(target=self._loop, name=name,
@@ -63,7 +73,14 @@ class ReplicaWorker:
                 continue
             try:
                 with self._device_scope():
-                    fut.set_result(fn())
+                    if self.obs is None:
+                        fut.set_result(fn())
+                    else:
+                        t0 = time.perf_counter()
+                        result = fn()
+                        self.obs.on_worker_task(self.name, t0,
+                                                time.perf_counter())
+                        fut.set_result(result)
             except BaseException as exc:  # propagate through the future
                 fut.set_exception(exc)
 

@@ -66,6 +66,13 @@ class Executor(abc.ABC):
     # routing affinity.
     prefix_cache: bool = False
 
+    # Optional repro.obs.Observability (set by the runtime when tracing is
+    # on).  Backends report each executor call's duration through
+    # :meth:`_observe` *after* the duration is known — never inside their
+    # timing brackets, so enabling observability cannot perturb measured
+    # durations.
+    obs = None
+
     # Optional per-chunk token stream: when set (the live Session does),
     # token-producing backends call ``token_sink(req_id, [tokens...])``
     # once per executed event, in token order, from whatever thread runs
@@ -116,6 +123,20 @@ class Executor(abc.ABC):
         elapsed duration.  ``step_time`` is the scheduler's value from
         :meth:`step_time` for this event (so analytical backends don't
         re-evaluate the cost model)."""
+
+    def generated_tokens_for(self, rep: int) -> int:
+        """Tokens replica ``rep`` has generated so far (0 for analytical
+        backends, which produce none) — read by observability sampling."""
+        return 0
+
+    def _observe(self, rep: int, kind: str, seconds: float) -> None:
+        """Report one executor call's duration (``kind``: ``"prefill"`` /
+        ``"decode"``) to the attached observability, if any — *measured
+        wall* seconds on real backends, *modeled* seconds on analytical
+        ones."""
+        obs = self.obs
+        if obs is not None:
+            obs.on_compute(rep, kind, seconds)
 
     def release(self, rep: int, state: RequestState) -> None:
         """A request finished on replica ``rep`` (free backend resources)."""
@@ -202,6 +223,7 @@ class CostModelExecutor(Executor):
             t += max(costmodel._stage_prefill_time(st, model, eff)
                      for st in cfg.stages)
             offs.append(t)
+        self._observe(rep, "prefill", t)
         return offs
 
     def step_time(self, rep: int, states: Sequence[RequestState]) -> float:
@@ -214,6 +236,7 @@ class CostModelExecutor(Executor):
 
     def decode(self, rep: int, states: Sequence[RequestState], k: int,
                step_time: float) -> float:
+        self._observe(rep, "decode", k * step_time)
         return k * step_time
 
 
@@ -272,8 +295,14 @@ class EngineExecutor(Executor):
                  paged: Optional[bool] = None, concurrent: bool = True,
                  fused_steps: Optional[int] = None,
                  prefix_cache: bool = False,
-                 seed: int = 0):
+                 seed: int = 0,
+                 clock: Optional[Callable[[], float]] = None):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
+        # Injectable time source for the measured prefill/decode brackets
+        # (``t0 = clock(); ...; elapsed = clock() - t0``).  Default is real
+        # wall time; tests pin a deterministic repro.obs.TickClock so
+        # schedules don't shift under machine load (see repro.obs.clock).
+        self.clock: Callable[[], float] = clock or time.perf_counter
         self.arch_cfgs = list(arch_cfgs)
         self.params_per_model = params_per_model or {}
         self._model_table = models
@@ -483,13 +512,14 @@ class EngineExecutor(Executor):
             # (decode tokens land in the block pools); dense cohorts carry
             # the full generation budget in their contiguous caches.
             t_max = t_prompt if paged is not None else t_prompt + self.max_new
-            t0 = time.perf_counter()
+            t0 = self.clock()
             tok, caches = engine.prefill_batch(prompts, t_max,
                                                prefix_embeds=prefix)
             jax.block_until_ready(tok)
-            elapsed = time.perf_counter() - t0
+            elapsed = self.clock() - t0
             self._gen_tokens[rep] += b
             self._compute_s[rep] += elapsed
+            self._observe(rep, "prefill", elapsed)
             first = np.asarray(tok)
             for s, t in zip(states, first):
                 self._log_tokens(s.req.req_id, [t])
@@ -522,11 +552,11 @@ class EngineExecutor(Executor):
             sub_hashes = [hashes[j] for j in idxs]
             sub_prompts = (prompts if len(idxs) == b
                            else prompts[np.asarray(idxs)])
-            t0 = time.perf_counter()
+            t0 = self.clock()
             if n_hit == 0:
                 tok, caches = engine.prefill_batch(sub_prompts, t_prompt)
                 jax.block_until_ready(tok)
-                elapsed = time.perf_counter() - t0
+                elapsed = self.clock() - t0
                 first = np.asarray(tok)
                 paged.admit_cohort(rids, caches, first, t_prompt,
                                    block_hashes_per_req=sub_hashes)
@@ -537,12 +567,13 @@ class EngineExecutor(Executor):
                 tok, suf_caches = engine.prefill_suffix_batch(
                     sub_prompts[:, t_hit:], paged.pools, tables, t_hit)
                 jax.block_until_ready(tok)
-                elapsed = time.perf_counter() - t0
+                elapsed = self.clock() - t0
                 first = np.asarray(tok)
                 paged.admit_prefixed(rids, pref, suf_caches, first,
                                      t_hit, t_prompt, sub_hashes)
             total += elapsed
             self._compute_s[rep] += elapsed
+            self._observe(rep, "prefill", elapsed)
             for j, t in zip(idxs, first):
                 first_all[j] = int(t)
         self._gen_tokens[rep] += b
@@ -560,6 +591,9 @@ class EngineExecutor(Executor):
 
     def step_time_estimate(self, rep: int) -> float:
         return self._step_ema[rep]
+
+    def generated_tokens_for(self, rep: int) -> int:
+        return self._gen_tokens[rep]
 
     EMA_ALPHA = 0.3
 
@@ -585,7 +619,7 @@ class EngineExecutor(Executor):
             assert {s.req.req_id for s in states} == set(paged._slot_of), \
                 "paged decode expects the replica's full active set"
             pools, tables, lengths, toks = paged.step_args()
-            t0 = time.perf_counter()
+            t0 = self.clock()
             blocks = []
             done = 0
             while done < k:
@@ -602,7 +636,7 @@ class EngineExecutor(Executor):
             all_toks = (blocks[0] if len(blocks) == 1
                         else jnp.concatenate(blocks, axis=1))
             jax.block_until_ready(all_toks)
-            elapsed = time.perf_counter() - t0
+            elapsed = self.clock() - t0
             slot_tok = np.asarray(all_toks)        # one (S, k) transfer
             paged.commit_chunk(slot_tok[:, -1], pools)
             for s in states:
@@ -611,6 +645,7 @@ class EngineExecutor(Executor):
             self._gen_tokens[rep] += len(states) * k
             self._compute_s[rep] += elapsed
             self._record_step(rep, elapsed / k)
+            self._observe(rep, "decode", elapsed)
             return elapsed
         ids = {s.req.req_id for s in states}
         total = 0.0
@@ -618,10 +653,10 @@ class EngineExecutor(Executor):
             live = len(g.req_ids & ids)
             if not live:
                 continue
-            t0 = time.perf_counter()
+            t0 = self.clock()
             toks, caches = engine.decode_batch_k(g.caches, g.tok, g.pos, k)
             jax.block_until_ready(toks)
-            elapsed = time.perf_counter() - t0
+            elapsed = self.clock() - t0
             g.tok, g.caches, g.pos = toks[:, -1], caches, g.pos + k
             lane_tok = np.asarray(toks)            # one (B, k) transfer
             for lane, rid in enumerate(g.order):
@@ -632,6 +667,7 @@ class EngineExecutor(Executor):
             total += elapsed
         if total > 0:
             self._record_step(rep, total / k)
+            self._observe(rep, "decode", total)
         return total
 
     def release(self, rep: int, state: RequestState) -> None:

@@ -133,6 +133,21 @@ class KVCacheManager:
         return blocks_for_tokens(tokens, self.block_size,
                                  window=self.window) + self.state_blocks
 
+    def stats(self) -> Dict[str, object]:
+        """Occupancy snapshot for observability sampling (pure read)."""
+        return {
+            "num_blocks": self.num_blocks,
+            "used_blocks": self.used_blocks,
+            "used_frac": (self.used_blocks / self.num_blocks
+                          if self.num_blocks > 0 else 0.0),
+            "peak_used": self.peak_used,
+            "watermark": self.watermark,
+            "cached_blocks": self.cached_blocks,
+            "overflow_admissions": self.overflow_admissions,
+            "prefix_cache": self.prefix_cache,
+            "prefix_hit_rate": self.prefix_hit_rate,
+        }
+
     def holds(self, req_id: int) -> bool:
         return req_id in self._held
 

@@ -253,7 +253,8 @@ class ServingRuntime:
 
     def __init__(self, plan: ServingPlan, executor: Executor, *,
                  mode: str = "events", preempt_policy: str = "latest",
-                 on_done: Optional[Callable[[RequestState], None]] = None):
+                 on_done: Optional[Callable[[RequestState], None]] = None,
+                 obs=None, clock: Optional[Callable[[], float]] = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.plan = plan
@@ -261,6 +262,17 @@ class ServingRuntime:
         self.mode = mode
         self.preempt_policy = preempt_policy
         self.on_done = on_done    # fired (orchestrator thread) per finished
+        # Optional repro.obs.Observability — a pure observer: every hook
+        # below is behind `is not None` (the disabled fast path) and only
+        # records already-known timestamps.
+        self.obs = obs
+        if obs is not None:
+            executor.obs = obs    # backends report compute durations
+        if clock is not None:
+            # Injectable time source for executors that *measure* (the
+            # engine backend); tests pin a deterministic
+            # repro.obs.TickClock here (see repro.obs.clock).
+            executor.clock = clock
         self._workers: Dict[int, ReplicaWorker] = {}   # or dropped request
         self.reset()
 
@@ -273,8 +285,11 @@ class ServingRuntime:
         self.replicas: List[ReplicaRuntime] = [
             ReplicaRuntime(i, cfg, self.executor,
                            preempt_policy=self.preempt_policy,
-                           on_done=self.on_done)
+                           on_done=self.on_done, obs=self.obs)
             for i, cfg in enumerate(self.plan.replicas)]
+        if self.obs is not None:
+            for r in self.replicas:
+                self.obs.register_replica(r.index, r.config)
         # router's plan-local replica j -> global ReplicaRuntime
         self._route_map: List[ReplicaRuntime] = list(self.replicas)
         self.router = self._make_router(self.plan, self._route_map)
@@ -305,12 +320,19 @@ class ServingRuntime:
     def _dispatch(self, state: RequestState,
                   at: Optional[float] = None) -> None:
         j = self.router.route(state.req)
+        t = state.req.arrival if at is None else at
         if j is None:
             state.replica = -1     # unroutable: no replica serves this model
+            if self.obs is not None:
+                self.obs.on_route(t, state.req, None, None, False)
             if self.on_done is not None:
                 self.on_done(state)    # unblock any waiting handle
             return
-        state.routed_at = state.req.arrival if at is None else at
+        state.routed_at = t
+        if self.obs is not None:
+            warmth, fallback = self.router.last_pick
+            self.obs.on_route(t, state.req, self._route_map[j].index,
+                              warmth, fallback)
         self._route_map[j].enqueue(state)
 
     # -------------------------------------------------------------- replan
@@ -323,6 +345,7 @@ class ServingRuntime:
         replica immediately shares a survivor's backlog."""
         new_plan = event.plan
         live = [r for r in self.replicas if not r.draining]
+        before_keys = [r.config.key for r in live]
         claimed: set = set()
         kept = 0
         new_map: List[ReplicaRuntime] = []
@@ -349,8 +372,10 @@ class ServingRuntime:
                 self.executor.add_replica(cfg)
                 rep = ReplicaRuntime(idx, cfg, self.executor,
                                      preempt_policy=self.preempt_policy,
-                                     on_done=self.on_done)
+                                     on_done=self.on_done, obs=self.obs)
                 rep.now = event.time          # spun up at the replan point
+                if self.obs is not None:
+                    self.obs.register_replica(rep.index, rep.config)
                 self.replicas.append(rep)
                 new_map.append(rep)
         migrated: List[RequestState] = []
@@ -369,6 +394,10 @@ class ServingRuntime:
         self._bump("replicas_added", len(new_plan.replicas) - kept)
         self._bump("replicas_drained", len(live) - kept)
         self._bump("requests_migrated", len(migrated))
+        if self.obs is not None:
+            self.obs.on_replan(event.time, before_keys,
+                               [c.key for c in new_plan.replicas],
+                               migrated=len(migrated), kept=kept)
 
     def _bump(self, key: str, n: float) -> None:
         self.info[key] = float(self.info.get(key, 0)) + n
@@ -392,10 +421,13 @@ class ServingRuntime:
         return snaps
 
     def _autoscale_tick(self, t: float, policy) -> None:
+        before_keys = [c.key for c in self.router.plan.replicas]
         decision = policy.update(t, self._snapshot(), self.router.plan)
         if decision is None:
             return
         self.scale_log.append(decision)
+        if self.obs is not None:
+            self.obs.on_scale_decision(t, decision, before_keys)
         self._bump("autoscale_adds" if decision.action == "add"
                    else "autoscale_drains", 1)
         self._apply_replan(ReplanEvent(time=t, plan=decision.plan),
@@ -429,10 +461,13 @@ class ServingRuntime:
             [replan] if isinstance(replan, ReplanEvent)
             else sorted(replan, key=lambda e: e.time) if replan else [])
         source.start()
+        if self.obs is not None:
+            self.obs.begin_run(self.plan, live=source.live)
         ei = 0
         tick = math.inf
         if autoscale is not None:
             autoscale.reset()
+            autoscale.obs = self.obs
             tick = source.first_arrival() + autoscale.interval
         try:
             while True:
@@ -634,6 +669,19 @@ class ServingRuntime:
                     timeout = None
             source.wait(seen, timeout)
 
+    # -------------------------------------------------------------- export
+
+    def export_trace(self, path: str) -> str:
+        """Write this runtime's observability capture as Chrome
+        trace-event JSON (open in https://ui.perfetto.dev).  Requires the
+        runtime to have been constructed with ``obs=Observability()``."""
+        if self.obs is None:
+            raise RuntimeError(
+                "export_trace requires observability: construct the "
+                "runtime with ServingRuntime(..., obs=Observability()) "
+                "or serve(..., observability=True)")
+        return self.obs.export_chrome_trace(path)
+
     # ------------------------------------------------------------- workers
 
     def _worker(self, index: int) -> ReplicaWorker:
@@ -643,7 +691,8 @@ class ServingRuntime:
             device_for = getattr(self.executor, "device_for", None)
             if device_for is not None:
                 device = device_for(index)
-            worker = ReplicaWorker(f"replica-worker-{index}", device=device)
+            worker = ReplicaWorker(f"replica-worker-{index}", device=device,
+                                   obs=self.obs)
             self._workers[index] = worker
         return worker
 

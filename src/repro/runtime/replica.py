@@ -104,7 +104,7 @@ class ReplicaRuntime:
     """Event-driven continuous batching for one replica."""
 
     def __init__(self, index: int, config: Config, executor: Executor, *,
-                 preempt_policy: str = "latest", on_done=None):
+                 preempt_policy: str = "latest", on_done=None, obs=None):
         if preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(f"preempt_policy must be one of "
                              f"{PREEMPT_POLICIES}, got {preempt_policy!r}")
@@ -112,6 +112,9 @@ class ReplicaRuntime:
         self.config = config
         self.executor = executor
         self.preempt_policy = preempt_policy
+        # Optional repro.obs.Observability; hooks fire at commit points
+        # only and never read the clock (pure observer — see repro.obs).
+        self.obs = obs
         # Completion hook (live sessions stream per-request results); always
         # fired on the orchestrator thread, after backend resources are
         # released.
@@ -150,6 +153,8 @@ class ReplicaRuntime:
         if mgr is not None:
             mgr.free(state.req.req_id)
         self.executor.release(self.index, state)
+        if self.obs is not None:
+            self.obs.on_finish(self, state, self.now)
         if self.on_done is not None:
             self.on_done(state)
 
@@ -176,6 +181,8 @@ class ReplicaRuntime:
         state.remaining = 0
         self.preempted += 1
         bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
+        if self.obs is not None:
+            self.obs.on_preempt(self, state, self.now)
 
     # ------------------------------------------------------------ planning
 
@@ -287,9 +294,12 @@ class ReplicaRuntime:
                 self._finish(s)
             else:
                 self.active.append(s)
+        if self.obs is not None:
+            self.obs.on_admit(self, group, start, offsets)
 
     def _complete_decode(self, pending: PendingEvent,
                          duration: float) -> None:
+        start = self.now
         self.now += duration
         self.busy += duration
         still: List[RequestState] = []
@@ -300,6 +310,9 @@ class ReplicaRuntime:
             else:
                 still.append(s)
         self.active = still
+        if self.obs is not None:
+            self.obs.on_decode_chunk(self, pending.batch, pending.k,
+                                     start, self.now)
 
     # ------------------------------------------------- event-mode interface
 

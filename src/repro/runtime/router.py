@@ -43,8 +43,12 @@ class AssignmentRouter:
         self._by_model: Dict[int, List[int]] = {}
         for i, cfg in enumerate(plan.replicas):
             self._by_model.setdefault(cfg.model_index, []).append(i)
+        # (prefix_warmth_of_choice | None, used_fallback) for the most
+        # recent route() call — read by the runtime's observability hook
+        self.last_pick = (None, False)
 
     def route(self, req: Request) -> Optional[int]:
+        self.last_pick = (None, False)
         d = self._index.get((req.model, req.workload))
         if d is not None:
             probs = np.clip(self.plan.assignment[:, d], 0, None)
@@ -64,6 +68,7 @@ class AssignmentRouter:
                     i = int(max(cands, key=lambda c: (
                         warmth[int(c)], self._credit[int(c), d],
                         -int(c))))
+                    self.last_pick = (warmth[i], False)
                 self._credit[i, d] -= 1.0
                 return i
         # demand not covered by the plan: round-robin among same-model
@@ -80,7 +85,11 @@ class AssignmentRouter:
             # the warmest replica win.
             order = [matching[(k + j) % len(matching)]
                      for j in range(len(matching))]
-            return max(order, key=lambda c: self.prefix_affinity(c, req))
+            warm = {c: self.prefix_affinity(c, req) for c in order}
+            pick = max(order, key=lambda c: warm[c])
+            self.last_pick = (warm[pick], True)
+            return pick
+        self.last_pick = (None, True)
         return matching[k % len(matching)]
 
     def realized_fractions(self) -> np.ndarray:

@@ -172,13 +172,16 @@ class Session:
 
     def __init__(self, plan: ServingPlan, executor, *,
                  mode: str = "events", preempt_policy: str = "latest",
-                 replan=None, autoscale=None, slo=None):
+                 replan=None, autoscale=None, slo=None, obs=None,
+                 clock=None):
         self.plan = plan
         self.executor = executor
         self.slo = slo
+        self.obs = obs          # repro.obs.Observability or None
         self.runtime = ServingRuntime(plan, executor, mode=mode,
                                       preempt_policy=preempt_policy,
-                                      on_done=self._on_done)
+                                      on_done=self._on_done, obs=obs,
+                                      clock=clock)
         executor.token_sink = self._on_tokens
         self._replan = replan
         self._autoscale = autoscale
@@ -265,6 +268,26 @@ class Session:
     def result(self) -> Optional[RuntimeResult]:
         """The drained run's result (None until :meth:`close`)."""
         return self._result
+
+    # -------------------------------------------------------- observability
+
+    def metrics(self) -> Dict[str, object]:
+        """Live point-in-time metrics snapshot (queue depths, KV
+        occupancy, prefix hit rates, latency histograms, ...) — callable
+        from any thread *while serving*.  Requires the session to have
+        been opened with observability (``serve(...,
+        observability=True)`` or ``Session(..., obs=Observability())``)."""
+        if self.obs is None:
+            raise RuntimeError(
+                "metrics() requires observability: open the session with "
+                "serve(..., observability=True) or "
+                "Session(..., obs=Observability())")
+        return self.obs.snapshot()
+
+    def export_trace(self, path: str) -> str:
+        """Write the session's trace capture as Chrome trace-event JSON
+        (see :meth:`ServingRuntime.export_trace`)."""
+        return self.runtime.export_trace(path)
 
     # --------------------------------------------------------------- submit
 
@@ -368,6 +391,7 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
           seed: Optional[int] = None,
           mode: str = "events", preempt_policy: str = "latest",
           replan=None, autoscale=None, slo=None,
+          observability=False, clock=None,
           **executor_options) -> Session:
     """Open a serving :class:`Session` from a spec (planned via the
     registry: ``strategy`` + ``plan_options``) or an existing plan.
@@ -379,6 +403,12 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
     ``executor=`` keeps the scale its owner chose) and ``backend="cost"``
     serves the analytical cost model (no tokens — useful for capacity
     dry-runs of the same session code).
+
+    ``observability`` — ``True`` (builds a fresh
+    :class:`repro.obs.Observability`) or an existing instance; enables
+    ``session.metrics()`` / ``session.export_trace(path)``.  ``clock``
+    injects the engine executor's measurement time source (tests pin
+    ``repro.obs.TickClock()`` for load-independent schedules).
     """
     if isinstance(spec_or_plan, DeploymentSpec):
         spec = spec_or_plan
@@ -406,6 +436,13 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
                              f'got {backend!r}')
     if isinstance(executor, EngineExecutor):
         executor.configure(input_len=input_len, max_new=max_new, seed=seed)
+    obs = None
+    if observability:
+        if observability is True:
+            from repro.obs import Observability
+            obs = Observability()
+        else:
+            obs = observability
     return Session(the_plan, executor, mode=mode,
                    preempt_policy=preempt_policy, replan=replan,
-                   autoscale=autoscale, slo=slo)
+                   autoscale=autoscale, slo=slo, obs=obs, clock=clock)

@@ -142,8 +142,15 @@ def test_paged_decode_steps_matches_stepwise():
 def _serve(arch_name, *, fused_steps, mode, paged=None, concurrent=False,
            replicas=1, n=5, max_batch=2, output_len=5, max_new=6):
     """One engine-backend run; returns (token_log, admission_logs,
-    preemptions-by-request, completed)."""
+    preemptions-by-request, completed).
+
+    The executor measures elapsed time around every jit call and schedules
+    on it, so on a loaded machine admission cohorts could shift between
+    the fused and stepwise runs; pinning a deterministic ``TickClock``
+    makes every measured duration — hence every schedule — load-independent
+    (each run gets a fresh clock, so both arms see identical time)."""
     from repro.configs import get_config
+    from repro.obs import TickClock
     cfg = _replica(num_blocks=50)
     reqs = _requests(n, output_len=output_len)
     trace = Trace("fuse", tuple(reqs))
@@ -152,7 +159,8 @@ def _serve(arch_name, *, fused_steps, mode, paged=None, concurrent=False,
                               models=[TINY], max_batch=max_batch,
                               input_len=8, max_new=max_new, paged=paged,
                               concurrent=concurrent,
-                              fused_steps=fused_steps)
+                              fused_steps=fused_steps,
+                              clock=TickClock())
     runtime = ServingRuntime(plan, executor, mode=mode)
     res = runtime.run(trace)
     assert res.num_completed == n
@@ -211,9 +219,11 @@ def test_fused_preemption_matches_cost_backend():
 
     logs = {}
     for fused_steps in (1, 16):
+        from repro.obs import TickClock
         engine = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
                                 models=[TINY], max_batch=8, input_len=8,
-                                max_new=5, fused_steps=fused_steps)
+                                max_new=5, fused_steps=fused_steps,
+                                clock=TickClock())
         rt = ServingRuntime(plan, engine)
         res = rt.run(trace)
         assert res.num_completed == 3

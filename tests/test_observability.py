@@ -1,0 +1,377 @@
+"""Observability tests: metrics primitives, trace-export schema, the
+pure-observer contract (byte-identical serving with tracing on vs off,
+on both backends), and the trace-summary CLI cross-check.
+"""
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import Request, Trace
+from repro.obs import (CONTROL_TRACK, MetricsRegistry, Observability,
+                       TickClock, Tracer)
+from repro.obs.export import chrome_trace, prometheus_text
+from repro.runtime import CostModelExecutor, ServingRuntime
+
+BS = 16
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+BLOCK_BYTES = BS * TINY.kv_bytes_per_token
+
+
+def _replica(num_blocks: int) -> Config:
+    free = (num_blocks + 0.5) * BLOCK_BYTES
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("obs-test", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x")
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(config: Config, n_requests: int, replicas: int = 1) -> ServingPlan:
+    return ServingPlan(replicas=[config] * replicas,
+                       assignment=np.full((replicas, 1), 1.0 / replicas),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=config.cost * replicas)
+
+
+def _trace(n, input_len=20, output_len=4, stagger=0.02):
+    return Trace("obs", tuple(
+        Request(req_id=i, workload=0, input_len=input_len,
+                output_len=output_len, arrival=stagger * i)
+        for i in range(n)))
+
+
+def _cost_run(n=12, replicas=2, num_blocks=50, obs=None, **trace_kw):
+    cfg = _replica(num_blocks)
+    plan = _plan(cfg, n, replicas=replicas)
+    runtime = ServingRuntime(plan, CostModelExecutor([cfg] * replicas,
+                                                     [TINY]), obs=obs)
+    return runtime, runtime.run(_trace(n, **trace_kw))
+
+
+# ------------------------------------------------------------- primitives
+
+def test_tick_clock_deterministic_monotone():
+    clk = TickClock(tick=0.5, start=1.0)
+    assert [clk() for _ in range(3)] == [1.5, 2.0, 2.5]
+    assert clk.now == 2.5
+    with pytest.raises(ValueError):
+        TickClock(tick=0.0)
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry(series_capacity=4)
+    c = reg.counter("requests_total", replica="0")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    assert reg.counter("requests_total", replica="0") is c   # same identity
+
+    g = reg.gauge("queue_depth")
+    g.set(5, t=0.1)
+    g.set(7, t=0.2)
+    assert g.value == 7
+    assert g.series.items() == [(0.1, 5.0), (0.2, 7.0)]
+
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 3 and h.sum == pytest.approx(5.55)
+    assert h.mean == pytest.approx(1.85)
+    assert h.quantile(0.5) == 1.0           # second obs falls in le=1.0
+    assert h.quantile(0.99) == math.inf     # third is beyond every bound
+
+
+def test_ring_series_drops_oldest():
+    reg = MetricsRegistry(series_capacity=3)
+    g = reg.gauge("x")
+    for i in range(5):
+        g.set(i, t=float(i))
+    assert g.series.items() == [(2.0, 2.0), (3.0, 3.0), (4.0, 4.0)]
+    assert g.series.appended == 5 and g.series.dropped == 2
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("n", replica="0")
+    with pytest.raises(TypeError):
+        reg.gauge("n", replica="0")
+    reg.gauge("n", replica="1")             # different label set is fine
+
+
+def test_snapshot_keys_and_histogram_stats():
+    reg = MetricsRegistry()
+    reg.counter("done_total").inc(4)
+    reg.gauge("depth", replica="1").set(2.0, t=1.0)
+    reg.histogram("lat_s").observe(0.3)
+    snap = reg.snapshot()
+    assert snap["done_total"] == 4
+    assert snap['depth{replica="1"}'] == 2.0
+    assert snap["lat_s"]["count"] == 1
+    assert snap["lat_s"]["mean"] == pytest.approx(0.3)
+    assert reg.series() == {'depth{replica="1"}': [(1.0, 2.0)]}
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("admissions_total", replica="0").inc(3)
+    reg.gauge("queue_depth").set(2.0, t=0.1)
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(5.0)
+    text = prometheus_text(reg)
+    lines = text.splitlines()
+    assert "# TYPE admissions_total counter" in lines
+    assert "# TYPE queue_depth gauge" in lines
+    assert "# TYPE lat_s histogram" in lines
+    counter = [l for l in lines
+               if l.startswith('admissions_total{replica="0"}')]
+    assert len(counter) == 1 and float(counter[0].split()[-1]) == 3.0
+    buckets = [l for l in lines if l.startswith("lat_s_bucket{")]
+    assert len(buckets) == 3                # 2 bounds + +Inf, cumulative
+    assert float(buckets[-1].split()[-1]) == 2.0
+    assert 'le="+Inf"' in buckets[-1]
+    assert float([l for l in lines
+                  if l.startswith("lat_s_count")][0].split()[-1]) == 2.0
+
+
+# ----------------------------------------------------- trace export schema
+
+def _valid_chrome_doc(doc, n_requests):
+    assert isinstance(doc["traceEvents"], list)
+    events = doc["traceEvents"]
+    json.loads(json.dumps(doc))                       # JSON-serializable
+
+    names = {e["tid"]: e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert names[CONTROL_TRACK] == "control-plane"
+    assert any(n.startswith("replica-0") for n in names.values())
+
+    # per-replica X spans: required fields, non-negative dur, and no
+    # overlap on one replica's serving-time track
+    by_tid = {}
+    for e in events:
+        if e.get("ph") == "X" and e["tid"] < CONTROL_TRACK:
+            assert e["dur"] >= 0 and "cat" in e and "name" in e
+            by_tid.setdefault(e["tid"], []).append(e)
+    assert by_tid, "no replica spans"
+    for spans in by_tid.values():
+        spans.sort(key=lambda e: e["ts"])
+        for a, b in zip(spans, spans[1:]):
+            assert b["ts"] >= a["ts"] + a["dur"] - 0.5    # 0.5us slack
+
+    # request-lifecycle async pairs balance per request id
+    per_id = {}
+    for e in events:
+        if e.get("ph") in ("b", "e"):
+            assert e.get("cat") == "request"
+            d = per_id.setdefault(e["id"], {"b": 0, "e": 0})
+            d[e["ph"]] += 1
+    assert len(per_id) == n_requests
+    assert all(d["b"] == d["e"] and d["b"] >= 2 for d in per_id.values())
+
+    # gauge ring series surface as counter tracks
+    assert any(e.get("ph") == "C" for e in events)
+    ts = [e["ts"] for e in events]
+    assert ts == sorted(ts)                           # body sorted by time
+    return names
+
+
+def test_chrome_trace_schema_and_file_export(tmp_path):
+    obs = Observability()
+    runtime, res = _cost_run(n=10, replicas=2, obs=obs)
+    assert res.num_completed == 10
+    doc = chrome_trace(obs)
+    _valid_chrome_doc(doc, n_requests=10)
+
+    path = tmp_path / "trace.json"
+    out = runtime.export_trace(str(path))
+    assert out == str(path)
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_export_trace_requires_observability():
+    runtime, _ = _cost_run(n=2, replicas=1, obs=None)
+    with pytest.raises(RuntimeError, match="observability"):
+        runtime.export_trace("nowhere.json")
+
+
+def test_preemptions_traced_and_counted():
+    """KV-overflow run: preempt instants + counters match the result."""
+    obs = Observability()
+    _, res = _cost_run(n=3, replicas=1, num_blocks=5, obs=obs,
+                       input_len=30, output_len=4, stagger=0.0)
+    assert res.num_preemptions > 0
+    snap = obs.snapshot()
+    assert snap['preemptions_total{replica="0"}'] == res.num_preemptions
+    doc = chrome_trace(obs)
+    instants = [e for e in doc["traceEvents"]
+                if e.get("ph") == "i" and e.get("name") == "preempt"]
+    assert len(instants) == res.num_preemptions
+
+
+def test_metrics_snapshot_contents_cost_run():
+    obs = Observability()
+    _, res = _cost_run(n=12, replicas=2, obs=obs)
+    snap = obs.snapshot()
+    assert snap["routed_total"] == 12
+    completed = sum(v for k, v in snap.items()
+                    if k.startswith("completed_total"))
+    assert completed == res.num_completed
+    assert snap["ttft_s"]["count"] == 12
+    assert snap["latency_s"]["count"] == 12
+    assert snap['queue_depth{replica="0"}'] == 0.0    # drained
+    assert snap["serving_time_s"] > 0
+    assert snap["trace_records"] == obs.tracer.num_records > 0
+
+
+# --------------------------------------------- pure-observer equivalence
+
+def _cost_logs(obs):
+    runtime, res = _cost_run(n=12, replicas=2, obs=obs)
+    return ([r.admission_log for r in runtime.replicas],
+            {r.req.req_id: (r.finished_at, r.preemptions)
+             for r in res.records})
+
+
+def test_on_off_equivalence_cost_backend():
+    assert _cost_logs(None) == _cost_logs(Observability())
+
+
+def test_on_off_equivalence_engine_backend():
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.runtime import EngineExecutor
+
+    def logs(obs):
+        cfg = _replica(num_blocks=50)
+        n = 4
+        plan = _plan(cfg, n)
+        executor = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                                  models=[TINY], max_batch=2, input_len=8,
+                                  max_new=5, fused_steps=8,
+                                  clock=TickClock())
+        runtime = ServingRuntime(plan, executor, obs=obs)
+        res = runtime.run(_trace(n, output_len=4))
+        assert res.num_completed == n
+        return (executor.token_log,
+                [r.admission_log for r in runtime.replicas])
+
+    assert logs(None) == logs(Observability())
+
+
+# ------------------------------------------------------- trace summarize
+
+def test_trace_summarize_matches_runtime_accounting(tmp_path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tools"))
+    import trace_summarize as tsum
+    obs = Observability()
+    runtime, res = _cost_run(n=12, replicas=2, obs=obs)
+    path = tmp_path / "t.json"
+    runtime.export_trace(str(path))
+    s = tsum.summarize(tsum.load_trace(str(path)))
+
+    info = {row["replica"]: row for row in res.info["per_replica"]}
+    assert len(s["replicas"]) == len(info)
+    for i, row in enumerate(s["replicas"]):
+        assert row["busy_s"] == pytest.approx(info[i]["busy_s"], abs=1e-6)
+        assert row["completed"] == info[i]["completed"]
+    assert s["routes"] == 12 and s["drops"] == 0
+    text = tsum.format_summary(s)
+    assert "replica-0" in text and "routed: 12" in text
+
+    assert tsum.main([str(path)]) == 0
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    assert tsum.main([str(bad)]) == 1
+
+
+# -------------------------------------------------------- session surface
+
+def test_session_metrics_live_and_export(tmp_path):
+    import repro
+    cfg = _replica(num_blocks=50)
+    plan = _plan(cfg, 4, replicas=1)
+    with repro.serve(plan, backend="cost", models=[TINY],
+                     observability=True) as session:
+        handles = [session.submit(workload=0, input_len=8, output_len=2)
+                   for _ in range(4)]
+        for h in handles:
+            h.result(timeout=60)
+        snap = session.metrics()            # live, mid-session
+        assert snap["routed_total"] == 4
+    path = tmp_path / "session.json"
+    session.export_trace(str(path))
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_session_metrics_requires_observability():
+    import repro
+    cfg = _replica(num_blocks=50)
+    session = repro.serve(_plan(cfg, 2), backend="cost", models=[TINY])
+    with pytest.raises(RuntimeError, match="observability"):
+        session.metrics()
+
+
+# ------------------------------------------------- control-plane tracing
+
+def test_control_plane_hooks_in_trace():
+    obs = Observability()
+    obs.begin_run(_plan(_replica(50), 1))
+    obs.on_replan(1.0, ["a"], ["a", "b"], migrated=2, kept=1)
+
+    class _Decision:
+        action, config_key, reason = "add", "cfg", "queue_high"
+
+        class plan:
+            replicas = ()
+    obs.on_scale_decision(2.0, _Decision(), ["a"])
+    obs.on_scale_observe(2.5, queue_depth=3.0, kv_util=0.5)
+
+    doc = chrome_trace(obs)
+    control = [e for e in doc["traceEvents"]
+               if e.get("tid") == CONTROL_TRACK and e.get("ph") == "i"]
+    by_cat = {e["cat"] for e in control}
+    assert {"run", "replan", "autoscale"} <= by_cat
+    replan = next(e for e in control if e["cat"] == "replan")
+    assert replan["args"]["before"] == ["a"]
+    assert replan["args"]["after"] == ["a", "b"]
+    snap = obs.snapshot()
+    assert snap["replans_total"] == 1
+    assert snap['autoscale_total{action="add"}'] == 1
+    assert snap["autoscale_queue_depth"] == 3.0
+
+
+def test_tracer_worker_tracks():
+    obs = Observability()
+    obs.begin_run(_plan(_replica(50), 1))
+    obs.on_worker_task("replica-0", obs.wall_start + 0.1,
+                       obs.wall_start + 0.2)
+    obs.on_worker_task("replica-1", obs.wall_start + 0.1,
+                       obs.wall_start + 0.3)
+    obs.on_worker_task("replica-0", obs.wall_start + 0.4,
+                       obs.wall_start + 0.5)
+    doc = chrome_trace(obs)
+    wall = [e for e in doc["traceEvents"]
+            if e.get("ph") == "X" and e.get("cat") == "wall"]
+    assert len(wall) == 3
+    assert len({e["tid"] for e in wall}) == 2      # one track per worker
+
+
+def test_tracer_record_counts_and_clear():
+    tr = Tracer()
+    tr.track(0, "replica-0")
+    tr.span(0, "prefill", 0.0, 1.0, cat="prefill")
+    tr.instant(0, "done", 1.0)
+    tr.async_span(7, "queued", 0.0, 0.5)
+    assert tr.num_records == 4          # span + instant + b/e pair counts 2
+    tr.clear()
+    assert tr.num_records == 0

@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Summarize an exported serving trace (Chrome trace-event JSON).
+
+Reads a trace written by ``ServingRuntime.export_trace(path)`` /
+``Session.export_trace(path)`` and prints, per replica track: busy
+fraction, prefill vs decode time split, event counts, and preemptions —
+plus the control-plane timeline (route drops, replans, autoscale
+decisions).  The busy seconds printed here are recomputed purely from
+the trace's ``X`` spans, so they cross-check the runtime's own
+``result.info["per_replica"]["busy_s"]`` accounting (asserted in
+``tests/test_observability.py``).
+
+    python tools/trace_summarize.py trace.json
+
+Importable: ``summarize(doc)`` returns the summary dict; ``format_summary``
+renders the text report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+CONTROL_TRACK = 1000     # repro.obs.CONTROL_TRACK
+WORKER_TRACK0 = 2000     # repro.obs.WORKER_TRACK0
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "traceEvents" not in doc:
+        raise ValueError(f"{path}: not a Chrome trace-event document "
+                         f"(no 'traceEvents' key)")
+    return doc
+
+
+def _track_names(events: List[dict]) -> Dict[int, str]:
+    names = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            names[e["tid"]] = e["args"]["name"]
+    return names
+
+
+def summarize(doc: dict) -> dict:
+    """Aggregate one trace document into per-replica + control summaries.
+    Times come back in seconds (trace timestamps are microseconds)."""
+    events = doc["traceEvents"]
+    names = _track_names(events)
+    replicas: Dict[int, dict] = {}
+    t_end = 0.0
+
+    def rep(tid: int) -> dict:
+        return replicas.setdefault(tid, {
+            "track": names.get(tid, f"track-{tid}"),
+            "busy_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
+            "prefill_events": 0, "decode_chunks": 0,
+            "preemptions": 0, "completed": 0})
+
+    control: List[dict] = []
+    for e in events:
+        ph, tid = e.get("ph"), e.get("tid", 0)
+        ts = e.get("ts", 0.0) / 1e6
+        if ph == "X" and tid < CONTROL_TRACK:
+            dur = e.get("dur", 0.0) / 1e6
+            r = rep(tid)
+            r["busy_s"] += dur
+            kind = e.get("cat", "")
+            if kind == "prefill":
+                r["prefill_s"] += dur
+                r["prefill_events"] += 1
+            elif kind == "decode":
+                r["decode_s"] += dur
+                r["decode_chunks"] += 1
+            t_end = max(t_end, ts + dur)
+        elif ph == "i" and tid < CONTROL_TRACK:
+            if e.get("name") == "preempt":
+                rep(tid)["preemptions"] += 1
+            elif e.get("name") == "done":
+                rep(tid)["completed"] += 1
+            t_end = max(t_end, ts)
+        elif tid == CONTROL_TRACK and ph == "i":
+            control.append({"t": ts, "name": e.get("name", ""),
+                            "cat": e.get("cat", ""),
+                            "args": e.get("args", {})})
+            t_end = max(t_end, ts)
+
+    span = t_end if t_end > 0 else 1.0
+    for r in replicas.values():
+        r["busy_frac"] = r["busy_s"] / span
+    routes = sum(1 for c in control if c["name"] == "route")
+    drops = sum(1 for c in control if c["name"] == "drop")
+    return {
+        "t_end_s": t_end,
+        "replicas": [replicas[tid] for tid in sorted(replicas)],
+        "routes": routes,
+        "drops": drops,
+        "replans": [c for c in control if c["cat"] == "replan"],
+        "autoscale": [c for c in control if c["cat"] == "autoscale"],
+    }
+
+
+def format_summary(s: dict) -> str:
+    lines = [f"trace span: {s['t_end_s']:.4f}s   "
+             f"routed: {s['routes']}   dropped: {s['drops']}"]
+    lines.append(f"{'replica':<28}{'busy':>7}{'prefill':>10}{'decode':>10}"
+                 f"{'chunks':>8}{'preempt':>9}{'done':>6}")
+    for r in s["replicas"]:
+        lines.append(
+            f"{r['track']:<28}{r['busy_frac']:>6.1%}"
+            f"{r['prefill_s']:>9.4f}s{r['decode_s']:>9.4f}s"
+            f"{r['decode_chunks']:>8}{r['preemptions']:>9}"
+            f"{r['completed']:>6}")
+    timeline = s["replans"] + s["autoscale"]
+    if timeline:
+        lines.append("control-plane timeline:")
+        for c in sorted(timeline, key=lambda c: c["t"]):
+            args = c["args"]
+            if c["cat"] == "autoscale":
+                detail = (f"{args.get('action')} {args.get('config')} "
+                          f"({args.get('reason')}): "
+                          f"{args.get('before')} -> {args.get('after')}")
+            else:
+                detail = (f"{args.get('before')} -> {args.get('after')} "
+                          f"(migrated {args.get('migrated')})")
+            lines.append(f"  t={c['t']:>9.4f}s  {c['name']:<16} {detail}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSON written by export_trace()")
+    args = ap.parse_args(argv)
+    try:
+        doc = load_trace(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    print(format_summary(summarize(doc)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
