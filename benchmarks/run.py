@@ -19,6 +19,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_online_serving  live submit()/streaming session vs trace replay
   bench_prefix_cache    cold vs warm TTFT + tokens/s at shared-prefix hit ratios
   bench_observability   enabled-tracing overhead (<2% budget) + on/off purity
+  bench_kv_swap         swap vs recompute preemption + host-tier prefix retention
 """
 from __future__ import annotations
 
@@ -48,6 +49,7 @@ MODULES = [
     "bench_online_serving",
     "bench_prefix_cache",
     "bench_observability",
+    "bench_kv_swap",
 ]
 
 

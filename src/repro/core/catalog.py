@@ -44,10 +44,17 @@ class DeviceType:
     # TFLOPS, which is the 2:4-structured-sparsity figure; dense bf16 is
     # 989.5 TFLOPS.  The cost model computes with the dense peak.
     dense_peak_flops: float = 0.0
+    # Host<->device copy bandwidth (bytes/s per device): what a KV block
+    # swap to/from host memory rides on.  PCIe 4.0 x16 sustains ~25 GB/s
+    # effective; PCIe 5.0 (H100) ~50 GB/s.  0.0 → defaulted in
+    # ``__post_init__`` so older call sites need not name it.
+    host_bw: float = 0.0
 
     def __post_init__(self):
         if self.dense_peak_flops == 0.0:
             object.__setattr__(self, "dense_peak_flops", self.peak_flops)
+        if self.host_bw == 0.0:
+            object.__setattr__(self, "host_bw", 25 * 1e9)
 
     @property
     def flops_per_dollar(self) -> float:
@@ -77,11 +84,13 @@ GPU_CATALOG: Dict[str, DeviceType] = {
     "L40":   DeviceType("L40", 181 * _T, 864 * _G, 48 * _GB, 0.83, 8, 60 * _G, _ETH, "workstation"),
     "A100":  DeviceType("A100", 312 * _T, 1555 * _G, 80 * _GB, 1.75, 8, 300 * _G, _ETH, "datacenter"),
     "H100":  DeviceType("H100", 1979 * _T, 3350 * _G, 80 * _GB, 2.99, 8, 300 * _G, _ETH, "datacenter",
-                        dense_peak_flops=989.5 * _T),
+                        dense_peak_flops=989.5 * _T, host_bw=50 * _G),
     # RTX 4090s have no NVLink and no PCIe P2P: multi-GPU traffic stages
     # through host memory, ~12 GB/s effective (the paper's 60 GB/s PCIe
     # figure applies to the workstation cards, which do support P2P).
-    "4090":  DeviceType("4090", 83 * _T, 1008 * _G, 24 * _GB, 0.53, 4, 12 * _G, _ETH, "consumer"),
+    # The same staging limit applies to host<->device KV swaps.
+    "4090":  DeviceType("4090", 83 * _T, 1008 * _G, 24 * _GB, 0.53, 4, 12 * _G, _ETH, "consumer",
+                        host_bw=12 * _G),
 }
 
 # Hardware adaptation: heterogeneous TPU slice types.  A "device" here is one

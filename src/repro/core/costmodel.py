@@ -46,6 +46,9 @@ RUNTIME_OVERHEAD_BYTES = 1 * 1024**3  # per-device activations/framework
 # framing on commodity Ethernet).  Charged per prefill and per decode step:
 # single-batch PP (vLLM semantics) does not overlap the hop with compute.
 PP_BOUNDARY_LATENCY_S = 3e-3
+# Achievable fraction of the host link's nominal bandwidth for block-granular
+# KV copies (pinned buffers, but many mid-sized transfers).
+HOST_LINK_UTIL = 0.8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +162,39 @@ def _stage_decode_step_time(stage: Stage, model: ModelProfile, batch: float,
     act_bytes = batch * model.d_model * BYTES_PER_PARAM
     t_comm = _tp_allreduce_time(stage, act_bytes, model.n_layers * frac)
     return max(t_mem, t_compute) + t_comm
+
+
+def host_link_bandwidth(stages: Sequence[Stage]) -> float:
+    """Aggregate host<->device KV-copy bandwidth of one replica (bytes/s).
+
+    Each pipeline stage holds a disjoint layer shard of every KV block, and
+    its ``tp`` devices copy their slices in parallel over independent host
+    links; a whole-block transfer therefore completes when the *slowest*
+    stage finishes its shard."""
+    return min(st.tp * st.device.host_bw for st in stages)
+
+
+def swap_time_s(stages: Sequence[Stage], n_bytes: float) -> float:
+    """Modeled wall time to move ``n_bytes`` of KV cache across the host link."""
+    bw = host_link_bandwidth(stages) * HOST_LINK_UTIL
+    if bw <= 0 or n_bytes <= 0:
+        return 0.0 if n_bytes <= 0 else float("inf")
+    return n_bytes / bw
+
+
+def preempt_costs(stages: Sequence[Stage], model: ModelProfile, *,
+                  swap_bytes: float, prompt_tokens: int) -> Tuple[float, float]:
+    """(modeled swap time, modeled recompute time) for one preemption victim.
+
+    Swap pays the victim's KV bytes over the host link twice (copy-out at
+    preemption, copy-in at readmission); recompute pays the prefill FLOPs to
+    rebuild the prompt's KV from scratch.  Both are computed analytically —
+    never from measured step times — so the cost and engine backends reach
+    identical swap-vs-recompute decisions on the same trace."""
+    swap_s = swap_time_s(stages, 2.0 * swap_bytes)
+    recompute_s = max(_stage_prefill_time(st, model, max(1, int(prompt_tokens)))
+                      for st in stages)
+    return swap_s, recompute_s
 
 
 def kv_free_bytes(stages: Sequence[Stage], model: ModelProfile) -> float:

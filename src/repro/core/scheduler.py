@@ -146,12 +146,35 @@ def _solve_min_cost(
 
 # ----------------------------------------------------- registered strategies
 
+def _hit_rate_throughput_fn(rates: Mapping[int, float]
+                            ) -> Callable[[Config, WorkloadType], float]:
+    """A ``throughput_fn`` that folds the spec's expected per-workload
+    prefix hit rates into the analytical model: workload classes with a
+    declared hit rate skip that fraction of prefill compute (see
+    ``costmodel.config_throughput``)."""
+    def fn(cfg: Config, w: WorkloadType) -> float:
+        try:
+            rate = rates.get(WORKLOAD_TYPES.index(w), 0.0)
+        except ValueError:          # a custom workload class: no declared rate
+            rate = 0.0
+        return config_throughput(cfg.stages, cfg.model, w,
+                                 prefix_hit_rate=rate)
+    return fn
+
+
 @register_planner("milp")
 def _plan_milp(spec: DeploymentSpec, **options) -> ServingPlan:
     """The paper's planner over the spec.  ``spec.objective="makespan"``
     minimizes T under the budget (binary search over the MILP feasibility
     check by default; ``method="milp"`` solves the exact MILP once);
-    ``"cost"`` minimizes $/h under ``spec.slo_makespan``."""
+    ``"cost"`` minimizes $/h under ``spec.slo_makespan``.  When the spec
+    declares ``prefix_hit_rates``, the modeled throughput table credits
+    each workload's expected prefix-cache savings (an explicit
+    ``throughput_fn`` option still wins)."""
+    if spec.prefix_hit_rates and "throughput_fn" not in options:
+        options = dict(options,
+                       throughput_fn=_hit_rate_throughput_fn(
+                           spec.prefix_hit_rates))
     if spec.objective == "cost":
         unsupported = sorted(k for k in ("method", "include_mixed", "tol")
                              if k in options)

@@ -63,6 +63,11 @@ class DeploymentSpec:
     objective: str = "makespan"
     slo: Optional[object] = None          # per-request SLO (runtime-scored)
     slo_makespan: Optional[float] = None  # seconds; required for "cost"
+    # workload-class index -> expected cross-request prefix hit rate in
+    # [0, 1] (e.g. measured from a prior run's info["prefix_hit_rate"]);
+    # the "milp" planner folds it into each config's modeled throughput,
+    # so cache-heavy workloads plan onto fewer/cheaper GPUs.
+    prefix_hit_rates: Optional[Mapping[int, float]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "models", tuple(self.models))
@@ -78,6 +83,14 @@ class DeploymentSpec:
                              f"got {self.objective!r}")
         if self.objective == "cost" and self.slo_makespan is None:
             raise ValueError('objective="cost" requires slo_makespan')
+        if self.prefix_hit_rates is not None:
+            rates = {int(k): float(v)
+                     for k, v in dict(self.prefix_hit_rates).items()}
+            for k, v in rates.items():
+                if not 0.0 <= v <= 1.0:
+                    raise ValueError(
+                        f"prefix_hit_rates[{k}] must be in [0, 1], got {v}")
+            object.__setattr__(self, "prefix_hit_rates", rates)
 
     # ------------------------------------------------------------- variants
 
@@ -100,6 +113,13 @@ class DeploymentSpec:
             self, objective=objective,
             slo_makespan=(self.slo_makespan if slo_makespan is None
                           else float(slo_makespan)))
+
+    def with_prefix_hit_rates(self, rates: Optional[Mapping[int, float]]
+                              ) -> "DeploymentSpec":
+        """The same deployment with new expected per-workload prefix hit
+        rates (e.g. fed back from a served run's measured hit rate)."""
+        return dataclasses.replace(
+            self, prefix_hit_rates=None if rates is None else dict(rates))
 
 
 # ------------------------------------------------------------ the registry

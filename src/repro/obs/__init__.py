@@ -66,7 +66,9 @@ class _ReplicaHandles:
                  "decode_chunks", "decode_chunk_s", "preemptions",
                  "completed", "latency_s", "queue_depth", "active",
                  "step_ema", "kv_used", "kv_frac", "kv_watermark",
-                 "prefix_hit", "gen_tokens", "tok_rate")
+                 "prefix_hit", "gen_tokens", "tok_rate",
+                 "swap_outs", "swap_ins", "swap_out_bytes", "swap_in_bytes",
+                 "kv_host_used")
 
     def __init__(self, m: MetricsRegistry, index: int):
         lbl = self.label = str(index)
@@ -87,10 +89,28 @@ class _ReplicaHandles:
         self.kv_watermark = m.gauge("kv_watermark_blocks", series=False,
                                     replica=lbl)
         # registered lazily so they only appear in snapshots when the
-        # replica actually has a prefix cache / generates real tokens
+        # replica actually has a prefix cache / generates real tokens /
+        # runs a host KV tier
         self.prefix_hit: Optional[Gauge] = None
         self.gen_tokens: Optional[Gauge] = None
         self.tok_rate: Optional[Gauge] = None
+        self.swap_outs: Optional[Counter] = None
+        self.swap_ins: Optional[Counter] = None
+        self.swap_out_bytes: Optional[Counter] = None
+        self.swap_in_bytes: Optional[Counter] = None
+        self.kv_host_used: Optional[Gauge] = None
+
+    def swap_handles(self, m: MetricsRegistry
+                     ) -> Tuple[Counter, Counter, Counter, Counter]:
+        if self.swap_outs is None:
+            self.swap_outs = m.counter("swap_outs_total", replica=self.label)
+            self.swap_ins = m.counter("swap_ins_total", replica=self.label)
+            self.swap_out_bytes = m.counter("swap_out_bytes_total",
+                                            replica=self.label)
+            self.swap_in_bytes = m.counter("swap_in_bytes_total",
+                                           replica=self.label)
+        return (self.swap_outs, self.swap_ins,
+                self.swap_out_bytes, self.swap_in_bytes)
 
 
 class Observability:
@@ -178,17 +198,51 @@ class Observability:
         h.decode_chunk_s.observe(t1 - t0)
         self.sample_replica(rep, t1)
 
-    def on_preempt(self, rep, state, t: float) -> None:
-        """A request was evicted mid-decode (recompute) at ``t``."""
+    def on_preempt(self, rep, state, t: float, *, swapped: bool = False,
+                   swap_bytes: float = 0.0) -> None:
+        """A request was evicted mid-decode at ``t`` — by recompute (its
+        blocks were dropped) or, when ``swapped``, by copy-out to the host
+        KV tier (``swap_bytes`` of KV left the device)."""
         rid = state.req.req_id
-        self.tracer.instant(rep.index, "preempt", t, cat="preempt",
+        self.tracer.instant(rep.index,
+                            "swap-out" if swapped else "preempt", t,
+                            cat="preempt",
                             args={"req_id": rid,
                                   "policy": rep.preempt_policy,
+                                  "mode": "swap" if swapped else "recompute",
+                                  "bytes": float(swap_bytes),
                                   "preemptions": state.preemptions})
         self.tracer.async_span(rid, "decode", state.first_token_at, t,
                                args={"req_id": rid, "preempted": True})
         self._queued_since[rid] = t
-        self._handles(rep.index).preemptions.inc()
+        h = self._handles(rep.index)
+        h.preemptions.inc()
+        if swapped:
+            outs, _, out_bytes, _ = h.swap_handles(self.metrics)
+            outs.inc()
+            out_bytes.inc(float(swap_bytes))
+
+    def on_swap_in(self, rep, group: Sequence, t0: float,
+                   offsets: Sequence[float], *,
+                   swap_bytes: float = 0.0) -> None:
+        """One group of host-swapped requests was readmitted by restoring
+        its KV blocks from the host tier (no prefill recompute)."""
+        t1 = t0 + offsets[-1]
+        rids = [s.req.req_id for s in group]
+        self.tracer.span(rep.index, f"swapin[B={len(group)}]", t0, t1,
+                         cat="swapin",
+                         args={"req_ids": rids, "bytes": float(swap_bytes)})
+        h = self._handles(rep.index)
+        for s in group:
+            rid = s.req.req_id
+            q0 = self._queued_since.pop(rid, s.req.arrival)
+            self.tracer.async_span(rid, "queued", q0, t0,
+                                   args={"req_id": rid,
+                                         "replica": rep.index})
+        _, ins, _, in_bytes = h.swap_handles(self.metrics)
+        ins.inc(len(group))
+        in_bytes.inc(float(swap_bytes))
+        self.sample_replica(rep, t1)
 
     def on_finish(self, rep, state, t: float) -> None:
         rid = state.req.req_id
@@ -218,6 +272,11 @@ class Observability:
                     h.prefix_hit = self.metrics.gauge("prefix_hit_rate",
                                                       replica=h.label)
                 h.prefix_hit.set(st["prefix_hit_rate"], t=t)
+            if st.get("host_blocks", 0):
+                if h.kv_host_used is None:
+                    h.kv_host_used = self.metrics.gauge(
+                        "kv_host_used_blocks", replica=h.label)
+                h.kv_host_used.set(st["host_used_blocks"], t=t)
         tok = rep.executor.generated_tokens_for(rep.index)
         if tok:
             if h.gen_tokens is None:

@@ -24,8 +24,9 @@ gathers through per-sequence block tables.
 from __future__ import annotations
 
 import abc
+import math
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,7 +35,8 @@ from repro.core.costmodel import ModelProfile
 from repro.core.plan import Config, ServingPlan
 from repro.core.workloads import Request
 
-from repro.runtime.kvcache.budget import DEFAULT_BLOCK_SIZE, make_kv_manager
+from repro.runtime.kvcache.budget import (DEFAULT_BLOCK_SIZE, block_bytes,
+                                          make_kv_manager)
 from repro.runtime.kvcache.manager import KVCacheManager
 from repro.runtime.kvcache.paged import (DEFAULT_ENGINE_BLOCK_SIZE,
                                          PagedEngineCache)
@@ -146,6 +148,45 @@ class Executor(abc.ABC):
         state; it re-enters through :meth:`prefill` when re-admitted."""
         self.release(rep, state)
 
+    # ------------------------------------------------- swap-based preemption
+
+    def kv_block_bytes(self, rep: int) -> float:
+        """HBM bytes one trace-scale KV block occupies on replica ``rep``
+        (0 when the backend has no block accounting) — the unit swap
+        counters and the cost-aware preemption decision price bytes in."""
+        return 0.0
+
+    def can_swap(self, rep: int, state: RequestState) -> bool:
+        """True when ``state`` could be preempted by swap-out right now
+        (host tier configured, victim's block set fits the free host
+        budget, and the backend can physically copy it)."""
+        return False
+
+    def preempt_costs(self, rep: int, state: RequestState
+                      ) -> Tuple[float, float]:
+        """(modeled swap seconds, modeled recompute seconds) for preempting
+        ``state`` — both *analytical*, never measured, so the cost and
+        engine backends make identical ``preempt_mode="auto"`` choices on
+        the same trace.  Default: swapping is never cheaper."""
+        return math.inf, 0.0
+
+    def swap_out(self, rep: int, state: RequestState) -> None:
+        """Copy a preemption victim's KV out to the host tier and release
+        its device-side state (the symbolic manager bookkeeping is the
+        replica scheduler's job).  Only called when :meth:`can_swap`."""
+        raise NotImplementedError
+
+    def swap_in(self, rep: int, states: Sequence[RequestState]
+                ) -> Sequence[float]:
+        """Readmit a group of swapped-out requests: restore their KV from
+        the host tier.  Returns per-request completion offsets like
+        :meth:`prefill` (monotone; last entry = total duration)."""
+        raise NotImplementedError
+
+    def drop_swapped(self, rep: int, state: RequestState) -> None:
+        """Discard a swapped-out request's host copy (it migrated away and
+        will recompute elsewhere)."""
+
 
 class CostModelExecutor(Executor):
     """Analytical backend: step durations from the paper's cost model.
@@ -161,11 +202,13 @@ class CostModelExecutor(Executor):
     def __init__(self, replicas: Sequence[Config] | ServingPlan,
                  models: Optional[Sequence[ModelProfile]] = None, *,
                  block_size: int = DEFAULT_BLOCK_SIZE,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 host_blocks: int = 0):
         if isinstance(replicas, ServingPlan):
             replicas = replicas.replicas
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.host_blocks = max(0, int(host_blocks))
         self.configs: List[Config] = []
         self.models: List[ModelProfile] = []
         self.kv_managers: List[Optional[KVCacheManager]] = []
@@ -185,7 +228,8 @@ class CostModelExecutor(Executor):
         for i, cfg in enumerate(self.configs):
             self.kv_managers[i] = make_kv_manager(
                 cfg, self.models[i], self.block_size,
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache,
+                host_blocks=self.host_blocks)
 
     def add_replica(self, config: Config) -> None:
         self.configs.append(config)
@@ -195,7 +239,8 @@ class CostModelExecutor(Executor):
             self.models.append(config.model)
         self.kv_managers.append(make_kv_manager(
             config, self.models[-1], self.block_size,
-            prefix_cache=self.prefix_cache))
+            prefix_cache=self.prefix_cache,
+            host_blocks=self.host_blocks))
 
     def decode_quota(self, req: Request) -> int:
         return max(1, req.output_len)
@@ -222,6 +267,13 @@ class CostModelExecutor(Executor):
                 eff = max(1, eff - mgr.prefix_hit_tokens(s.req.req_id))
             t += max(costmodel._stage_prefill_time(st, model, eff)
                      for st in cfg.stages)
+            if mgr is not None:
+                # Hit blocks revived from the host tier cost a host-link
+                # copy instead of prefill FLOPs.
+                hb = mgr.host_hit_blocks(s.req.req_id)
+                if hb:
+                    t += costmodel.swap_time_s(
+                        cfg.stages, hb * block_bytes(model, self.block_size))
             offs.append(t)
         self._observe(rep, "prefill", t)
         return offs
@@ -238,6 +290,45 @@ class CostModelExecutor(Executor):
                step_time: float) -> float:
         self._observe(rep, "decode", k * step_time)
         return k * step_time
+
+    # ------------------------------------------------- swap-based preemption
+
+    def kv_block_bytes(self, rep: int) -> float:
+        return block_bytes(self.models[rep], self.block_size)
+
+    def can_swap(self, rep: int, state: RequestState) -> bool:
+        mgr = self.kv_managers[rep]
+        return mgr is not None and mgr.can_swap_out(state.req.req_id)
+
+    def preempt_costs(self, rep: int, state: RequestState
+                      ) -> Tuple[float, float]:
+        cfg, model = self.configs[rep], self.models[rep]
+        mgr = self.kv_managers[rep]
+        blocks = mgr.held_blocks(state.req.req_id) if mgr is not None else 0
+        return costmodel.preempt_costs(
+            cfg.stages, model,
+            swap_bytes=blocks * block_bytes(model, self.block_size),
+            prompt_tokens=state.req.input_len)
+
+    def swap_out(self, rep: int, state: RequestState) -> None:
+        pass          # symbolic backend: the manager's bookkeeping is all
+
+    def swap_in(self, rep: int, states: Sequence[RequestState]
+                ) -> Sequence[float]:
+        cfg, model = self.configs[rep], self.models[rep]
+        mgr = self.kv_managers[rep]
+        bb = block_bytes(model, self.block_size)
+        offs, t = [], 0.0
+        for s in states:
+            # Charged here, at readmission: copy-out + copy-in of the
+            # blocks now restored (swap-out itself takes no event — it
+            # mirrors recompute, where eviction is free and the cost lands
+            # at re-prefill).
+            blocks = mgr.held_blocks(s.req.req_id)
+            t += costmodel.swap_time_s(cfg.stages, 2.0 * blocks * bb)
+            offs.append(t)
+        self._observe(rep, "swapin", t)
+        return offs
 
 
 class _EngineGroup:
@@ -295,6 +386,7 @@ class EngineExecutor(Executor):
                  paged: Optional[bool] = None, concurrent: bool = True,
                  fused_steps: Optional[int] = None,
                  prefix_cache: bool = False,
+                 host_blocks: int = 0,
                  seed: int = 0,
                  clock: Optional[Callable[[], float]] = None):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
@@ -307,6 +399,7 @@ class EngineExecutor(Executor):
         self.params_per_model = params_per_model or {}
         self._model_table = models
         self.prefix_cache = prefix_cache
+        self.host_blocks = max(0, int(host_blocks))
         self.max_batch_cap = max_batch
         self.input_len = input_len
         self.max_new = max_new
@@ -363,7 +456,8 @@ class EngineExecutor(Executor):
         for i, cfg in enumerate(self.configs):
             self.kv_managers[i] = make_kv_manager(
                 cfg, self._model_of(cfg), self.block_size,
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache,
+                host_blocks=self.host_blocks)
 
     # Counters are kept per replica (each replica's executor calls are
     # serialized on its own worker thread, so no locks are needed) and
@@ -406,7 +500,8 @@ class EngineExecutor(Executor):
         self.configs.append(config)
         self.kv_managers.append(make_kv_manager(
             config, self._model_of(config), self.block_size,
-            prefix_cache=self.prefix_cache))
+            prefix_cache=self.prefix_cache,
+            host_blocks=self.host_blocks))
         self._groups.append([])
         self._paged.append(None)
         self._gen_tokens.append(0)
@@ -441,11 +536,22 @@ class EngineExecutor(Executor):
             # Physical prefix matching hashes token rows, so it stays off
             # for multimodal archs whose prompts also carry patch embeds
             # (token ids alone would under-key the content hash).
+            num_slots = max(1, self.max_batch_cap)
+            t_max = self.input_len + n_prefix + self.max_new
+            # The physical host tier keeps the same host:device proportion
+            # as the symbolic manager's trace-scale budget (the two layers
+            # run at different block scales, like the device pools do).
+            mgr = self.kv_managers[rep]
+            engine_host = 0
+            if mgr is not None and mgr.host_blocks > 0 and mgr.num_blocks > 0:
+                bps = max(1, math.ceil(t_max / self.engine_block_size))
+                engine_host = math.ceil(num_slots * bps * mgr.host_blocks
+                                        / mgr.num_blocks)
             self._paged[rep] = PagedEngineCache(
-                arch, num_slots=max(1, self.max_batch_cap),
-                t_max=self.input_len + n_prefix + self.max_new,
+                arch, num_slots=num_slots, t_max=t_max,
                 block_size=self.engine_block_size,
-                prefix_cache=self.prefix_cache and n_prefix == 0)
+                prefix_cache=self.prefix_cache and n_prefix == 0,
+                host_blocks=engine_host)
         return self._paged[rep]
 
     def _prompt_arrays(self, arch, states: Sequence[RequestState]):
@@ -682,3 +788,56 @@ class EngineExecutor(Executor):
                 if not g.req_ids:
                     groups.remove(g)   # free the cohort's cache tensors
                 return
+
+    # ------------------------------------------------- swap-based preemption
+
+    def kv_block_bytes(self, rep: int) -> float:
+        return block_bytes(self._model_of(self.configs[rep]),
+                           self.block_size)
+
+    def can_swap(self, rep: int, state: RequestState) -> bool:
+        # Decision inputs are trace-scale (the shared manager), so both
+        # backends agree; the engine additionally needs physical paged
+        # storage to copy blocks from (dense cohort caches cannot swap —
+        # "swap" mode degrades to recompute for them on both backends only
+        # if neither can; mixed paged/dense plans should be driven with
+        # recompute mode when cross-backend log equality matters).
+        mgr = self.kv_managers[rep]
+        return (mgr is not None and mgr.can_swap_out(state.req.req_id)
+                and self._paged[rep] is not None)
+
+    def preempt_costs(self, rep: int, state: RequestState
+                      ) -> Tuple[float, float]:
+        cfg = self.configs[rep]
+        model = self._model_of(cfg)
+        mgr = self.kv_managers[rep]
+        blocks = mgr.held_blocks(state.req.req_id) if mgr is not None else 0
+        return costmodel.preempt_costs(
+            cfg.stages, model,
+            swap_bytes=blocks * block_bytes(model, self.block_size),
+            prompt_tokens=state.req.input_len)
+
+    def swap_out(self, rep: int, state: RequestState) -> None:
+        # Runs synchronously at preemption time on the planning thread (a
+        # deliberate asymmetry with the cost backend, which charges both
+        # copy directions at swap-in: eviction is free there exactly like
+        # recompute's).  The measured swap-in event carries the timed part.
+        self._paged[rep].swap_out_request(state.req.req_id)
+
+    def swap_in(self, rep: int, states: Sequence[RequestState]
+                ) -> Sequence[float]:
+        import jax
+        paged = self._paged[rep]
+        t0 = self.clock()
+        for s in states:
+            paged.swap_in_request(s.req.req_id)
+        jax.block_until_ready(paged.pools[0]["k"])
+        elapsed = self.clock() - t0
+        self._compute_s[rep] += elapsed
+        self._observe(rep, "swapin", elapsed)
+        return [elapsed] * len(states)
+
+    def drop_swapped(self, rep: int, state: RequestState) -> None:
+        paged = self._paged[rep]
+        if paged is not None:
+            paged.drop_swapped(state.req.req_id)

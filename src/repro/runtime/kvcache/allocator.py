@@ -27,11 +27,21 @@ while it has exactly one holder *and* no published hash
 (:meth:`writable`); :meth:`cow` hands a caller a private replacement id
 for a shared block (the physical copy is the pool owner's job — this
 layer only does the id bookkeeping).
+
+A second, host-memory tier (``host_blocks > 0``) sits under the LRU:
+instead of vanishing, an evicted block's hash *spills* to a bounded host
+pool (``on_spill`` copies the physical contents out before the device id
+is recycled) and :meth:`adopt` transparently *revives* host-resident
+hashes — allocating a fresh device id and asking ``on_revive`` to copy
+the contents back in.  The host pool is itself LRU-bounded
+(``on_host_evict`` drops the oldest spilled hash).  With
+``host_blocks=0`` every code path is byte-identical to the single-tier
+allocator.
 """
 from __future__ import annotations
 
 import collections
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 # Root of every chained block hash.  Python's hash of int tuples is
 # deterministic (PYTHONHASHSEED only salts str/bytes), so hashes agree
@@ -72,9 +82,15 @@ class BlockAllocator:
     blocks park in the LRU cached pool until evicted or revived.
     """
 
-    def __init__(self, num_blocks: int, *, first_id: int = 0):
+    def __init__(self, num_blocks: int, *, first_id: int = 0,
+                 host_blocks: int = 0,
+                 on_spill: Optional[Callable[[int, int], None]] = None,
+                 on_host_evict: Optional[Callable[[int], None]] = None,
+                 on_revive: Optional[Callable[[int, int], None]] = None):
         if num_blocks < 0:
             raise ValueError(f"num_blocks must be >= 0, got {num_blocks}")
+        if host_blocks < 0:
+            raise ValueError(f"host_blocks must be >= 0, got {host_blocks}")
         self.num_blocks = num_blocks
         self.first_id = first_id
         self._free: List[int] = list(range(first_id + num_blocks - 1,
@@ -85,9 +101,25 @@ class BlockAllocator:
         # refcount-0 committed blocks, oldest first (eviction order)
         self._lru: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()
+        # Host tier: spilled hashes, oldest first.  Physical storage is the
+        # pool owner's job, driven by the three callbacks:
+        #   on_spill(device_id, h)   copy device block out, *before* the id
+        #                            is recycled;
+        #   on_host_evict(h)         drop a spilled hash's host copy;
+        #   on_revive(device_id, h)  copy a spilled hash back into a freshly
+        #                            allocated device block.
+        self.host_blocks = host_blocks
+        self._host: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._on_spill = on_spill
+        self._on_host_evict = on_host_evict
+        self._on_revive = on_revive
         self.evictions = 0
         self.cache_hits = 0       # adopt() calls that found a block
         self.cow_copies = 0
+        self.spilled_blocks = 0   # device LRU evictions that went to host
+        self.host_evictions = 0   # spilled hashes dropped from the host tier
+        self.host_revives = 0     # adopt() hits served from the host tier
 
     # ------------------------------------------------------------- queries
 
@@ -109,6 +141,17 @@ class BlockAllocator:
     def used_blocks(self) -> int:
         """Blocks held by at least one live sequence."""
         return len(self._refs)
+
+    @property
+    def host_used_blocks(self) -> int:
+        """Spilled hashes currently resident in the host tier."""
+        return len(self._host)
+
+    def host_contains(self, h: int) -> bool:
+        """True when content hash ``h`` can be revived from the host tier
+        (device index takes precedence: a device-resident hash is never
+        reported as host-resident)."""
+        return h not in self._index and h in self._host
 
     def ref_count(self, block_id: int) -> int:
         return self._refs.get(block_id, 0)
@@ -143,12 +186,28 @@ class BlockAllocator:
         return ids
 
     def _evict_lru(self) -> int:
-        """Drop the oldest cached block: its hash leaves the index (future
-        lookups miss) and the id returns to the free list."""
+        """Evict the oldest cached block from the device.  Without a host
+        tier its hash simply leaves the index (future lookups miss); with
+        one, the hash spills to the bounded host pool — contents copied out
+        via ``on_spill`` *before* the device id returns to the free list —
+        from which :meth:`adopt` can still revive it."""
         block_id, _ = self._lru.popitem(last=False)
         h = self._hash_of.pop(block_id)
         if self._index.get(h) == block_id:
             del self._index[h]
+        if self.host_blocks > 0:
+            # Make room first so the pool owner never holds more than
+            # ``host_blocks`` spilled copies (+1 transient during a revive).
+            while len(self._host) >= self.host_blocks and h not in self._host:
+                old_h, _ = self._host.popitem(last=False)
+                if self._on_host_evict is not None:
+                    self._on_host_evict(old_h)
+                self.host_evictions += 1
+            if self._on_spill is not None:
+                self._on_spill(block_id, h)
+            self._host[h] = None
+            self._host.move_to_end(h)
+            self.spilled_blocks += 1
         self._free.append(block_id)
         self.evictions += 1
         return block_id
@@ -162,15 +221,36 @@ class BlockAllocator:
     def adopt(self, h: int) -> Optional[int]:
         """Take one reference on the block holding content hash ``h``:
         a live block gains a holder; a cached block leaves the LRU and
-        revives.  Returns None on a miss."""
+        revives; a host-resident hash revives into a freshly allocated
+        device block (``on_revive`` copies the contents back).  Returns
+        None on a miss."""
         block_id = self._index.get(h)
         if block_id is None:
+            if h in self._host:
+                return self._revive_from_host(h)
             return None
         if block_id in self._lru:           # revive from the cached pool
             del self._lru[block_id]
             self._refs[block_id] = 1
         else:
             self._refs[block_id] += 1
+        self.cache_hits += 1
+        return block_id
+
+    def _revive_from_host(self, h: int) -> Optional[int]:
+        if self.available_blocks < 1:
+            return None                     # no device block to land in
+        # Pop the host entry *first*: the alloc below may itself evict and
+        # spill another block, and must not count ``h`` against the host
+        # bound (its physical slot is released by ``on_revive``, so the
+        # pool owner briefly holds host_blocks + 1 copies).
+        del self._host[h]
+        block_id = self.alloc(1)[0]
+        self._index[h] = block_id
+        self._hash_of[block_id] = h
+        if self._on_revive is not None:
+            self._on_revive(block_id, h)
+        self.host_revives += 1
         self.cache_hits += 1
         return block_id
 

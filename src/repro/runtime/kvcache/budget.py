@@ -54,7 +54,8 @@ def state_overhead_blocks(model: ModelProfile, block_size: int) -> int:
 
 def make_kv_manager(config: Config, model: ModelProfile,
                     block_size: int = DEFAULT_BLOCK_SIZE, *,
-                    prefix_cache: bool = False
+                    prefix_cache: bool = False,
+                    host_blocks: int = 0
                     ) -> Optional[KVCacheManager]:
     """Build the admission-side manager for one replica.
 
@@ -65,13 +66,15 @@ def make_kv_manager(config: Config, model: ModelProfile,
     account — the concurrency cap alone governs them).  ``prefix_cache``
     turns on cross-request prefix sharing (the manager itself gates it off
     for sliding-window and state-only models, whose blocks are mutable or
-    absent)."""
+    absent); ``host_blocks`` sizes the host-memory tier evicted prefix
+    blocks spill to and swapped preemption victims park in (0 = off)."""
     if block_bytes(model, block_size) > 0:
         return KVCacheManager(
             num_kv_blocks(config, model, block_size), block_size,
             window=model.window,
             state_blocks=state_overhead_blocks(model, block_size),
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache,
+            host_blocks=host_blocks)
     if model.state_bytes_per_seq > 0:
         free = kv_free_bytes(config.stages, model)
         return KVCacheManager(

@@ -39,6 +39,23 @@ always accepted even if it overflows the budget — the legacy scheduler
 guaranteed one-at-a-time progress on undersized replicas, and starving a
 replica would deadlock the trace.  Overflow is recorded in
 ``overflow_admissions`` so results stay auditable.
+
+**Host tier** (``host_blocks > 0``): a second, host-memory block budget
+under the device pool.  It serves two customers sharing one bound:
+
+* *spilled prefixes* — LRU blocks evicted by :meth:`_reclaim` move to the
+  host tier instead of vanishing, and the admission walk transparently
+  revives host-resident hashes (charged like an LRU revival: one device
+  block each, plus host-link copy time the cost model accounts
+  separately via :meth:`host_hit_blocks`);
+* *swapped requests* — :meth:`swap_out` moves a preemption victim's whole
+  block set to the host tier so :meth:`swap_in` can readmit it without
+  re-running prefill.  Swapped copies are private (never matched by other
+  requests), which makes readmission independent of whatever happens to
+  the shared index in between.
+
+With ``host_blocks=0`` (default) every path degenerates to the
+single-tier behavior, byte for byte.
 """
 from __future__ import annotations
 
@@ -76,11 +93,14 @@ class KVCacheManager:
     def __init__(self, num_blocks: int, block_size: int, *,
                  window: int = 0, state_blocks: int = 0,
                  watermark_frac: float = 0.01,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 host_blocks: int = 0):
         if block_size < 0:
             raise ValueError(f"block_size must be >= 0, got {block_size}")
         if block_size == 0 and state_blocks <= 0:
             raise ValueError("state-only accounting needs state_blocks > 0")
+        if host_blocks < 0:
+            raise ValueError(f"host_blocks must be >= 0, got {host_blocks}")
         self.num_blocks = max(0, int(num_blocks))
         self.block_size = int(block_size)
         self.window = int(window)
@@ -89,6 +109,9 @@ class KVCacheManager:
         # ring rewrites its own blocks and a state-only model has none.
         self.prefix_cache = bool(prefix_cache) and self.block_size > 0 \
             and self.window == 0
+        # Host tier: block-granular swap needs per-token KV blocks (a
+        # recurrent state tensor has no block identity to copy).
+        self.host_blocks = int(host_blocks) if self.block_size > 0 else 0
         # Held-back slack for admission only (vLLM's watermark): growth of
         # the already-running batch may still use it.
         self.watermark = max(1, math.ceil(watermark_frac * self.num_blocks))
@@ -100,6 +123,11 @@ class KVCacheManager:
         self._prefix_of: Dict[int, List[_SharedBlock]] = {}
         self._private: Dict[int, int] = {}  # req_id -> non-shared blocks
         self._hit_tokens: Dict[int, int] = {}
+        # host-tier bookkeeping (all empty when host_blocks == 0)
+        self._host: "collections.OrderedDict[int, _SharedBlock]" = \
+            collections.OrderedDict()       # spilled hash -> block
+        self._swapped: Dict[int, int] = {}  # req_id -> host blocks held
+        self._host_hit_blocks: Dict[int, int] = {}
         self.used_blocks = 0
         self.peak_used = 0
         self.overflow_admissions = 0
@@ -110,6 +138,14 @@ class KVCacheManager:
         self.prefix_hit_tokens_total = 0
         self.prefix_prompt_tokens_total = 0
         self.prefix_evictions = 0
+        self.spilled_blocks = 0             # LRU evictions kept on host
+        self.host_evictions = 0             # spilled blocks dropped from host
+        self.host_hits = 0                  # blocks revived host -> device
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_out_blocks = 0
+        self.swapped_in_blocks = 0
+        self.swap_drops = 0                 # swapped state discarded (migration)
 
     # ------------------------------------------------------------ queries
 
@@ -121,6 +157,15 @@ class KVCacheManager:
     def cached_blocks(self) -> int:
         """Refcount-0 blocks parked for reuse (not counted in used)."""
         return len(self._lru)
+
+    @property
+    def host_used_blocks(self) -> int:
+        """Host-tier blocks in use: spilled prefixes + swapped requests."""
+        return len(self._host) + sum(self._swapped.values())
+
+    @property
+    def host_free_blocks(self) -> int:
+        return max(0, self.host_blocks - self.host_used_blocks)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -146,6 +191,14 @@ class KVCacheManager:
             "overflow_admissions": self.overflow_admissions,
             "prefix_cache": self.prefix_cache,
             "prefix_hit_rate": self.prefix_hit_rate,
+            "host_blocks": self.host_blocks,
+            "host_used_blocks": self.host_used_blocks,
+            "spilled_blocks": self.spilled_blocks,
+            "host_hits": self.host_hits,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swapped_out_blocks": self.swapped_out_blocks,
+            "swapped_in_blocks": self.swapped_in_blocks,
         }
 
     def holds(self, req_id: int) -> bool:
@@ -168,6 +221,11 @@ class KVCacheManager:
         most recent admission (0 when cold / cache off)."""
         return self._hit_tokens.get(req_id, 0)
 
+    def host_hit_blocks(self, req_id: int) -> int:
+        """Blocks of ``req_id``'s most recent admission revived from the
+        host tier (each one costs a host-link copy, not prefill FLOPs)."""
+        return self._host_hit_blocks.get(req_id, 0)
+
     def _prompt_hashes(self, prompt: Optional[Sequence[int]],
                        tokens: int) -> List[int]:
         """Content hashes of the matchable full blocks of ``prompt`` for an
@@ -187,7 +245,7 @@ class KVCacheManager:
         The router's warm-prefix affinity reads this."""
         n = 0
         for h in self._prompt_hashes(prompt, tokens):
-            if h not in self._index:
+            if h not in self._index and h not in self._host:
                 break
             n += 1
         return n * self.block_size
@@ -211,13 +269,19 @@ class KVCacheManager:
         need = self.blocks_for(tokens)
         hashes = self._prompt_hashes(prompt, tokens)
         hit: List[_SharedBlock] = []
+        host_hit: set = set()
         for h in hashes:
             blk = self._index.get(h)
+            if blk is None and self.host_blocks > 0:
+                blk = self._host.get(h)    # revivable from the host tier
+                if blk is not None:
+                    host_hit.add(h)
             if blk is None:
                 break
             hit.append(blk)
         # Charge only what this admission adds to the pool: new blocks
-        # plus cache revivals; blocks shared with live requests are free.
+        # plus cache revivals (LRU or host — either way one device block
+        # comes into use); blocks shared with live requests are free.
         revived = sum(1 for b in hit if b.refs == 0)
         delta = need - (len(hit) - revived)
         if not solo and self.used_blocks + delta + self.watermark \
@@ -227,8 +291,15 @@ class KVCacheManager:
             self.overflow_admissions += 1
         for b in hit:
             if b.refs == 0:
-                del self._lru[b.hash]      # revive from the cached pool
+                if b.hash in host_hit:     # revive host -> device
+                    del self._host[b.hash]
+                    self._index[b.hash] = b
+                    self.host_hits += 1
+                else:
+                    del self._lru[b.hash]  # revive from the cached pool
             b.refs += 1
+        if self.host_blocks > 0:
+            self._host_hit_blocks[req_id] = len(host_hit)
         # new blocks (shared-to-be + private) may need LRU evictions so the
         # physical pool (used + cached) stays within num_blocks
         self._reclaim(delta)
@@ -255,13 +326,23 @@ class KVCacheManager:
 
     def _reclaim(self, new_blocks: int) -> None:
         """Evict LRU cached blocks until ``new_blocks`` more fit the
-        physical pool alongside everything live + cached."""
+        physical pool alongside everything live + cached.  With a host
+        tier, evicted blocks spill there (bounded — the oldest spilled
+        block is dropped first) instead of vanishing."""
         while (self._lru
                and self.used_blocks + len(self._lru) + new_blocks
                > self.num_blocks):
             _, blk = self._lru.popitem(last=False)
             self._index.pop(blk.hash, None)
             self.prefix_evictions += 1
+            if self.host_blocks > 0:
+                while self.host_free_blocks < 1 and self._host:
+                    self._host.popitem(last=False)
+                    self.host_evictions += 1
+                if self.host_free_blocks >= 1:
+                    self._host[blk.hash] = blk
+                    self._host.move_to_end(blk.hash)
+                    self.spilled_blocks += 1
 
     # ------------------------------------------------------------- growth
 
@@ -325,8 +406,70 @@ class KVCacheManager:
                 self._lru.move_to_end(blk.hash)
         self._private.pop(req_id, None)
         self._hit_tokens.pop(req_id, None)
+        self._host_hit_blocks.pop(req_id, None)
         self.used_blocks -= released
         self.freed += 1
+
+    # ---------------------------------------------------- swap (host tier)
+
+    def can_swap_out(self, req_id: int) -> bool:
+        """True when ``req_id``'s whole block set fits in the free host
+        tier right now.  The *whole* set — shared prompt blocks included —
+        goes to host, so readmission never depends on what the shared
+        index looks like after arbitrary churn in between."""
+        held = self._held.get(req_id, 0)
+        return 0 < held <= self.host_free_blocks
+
+    def swap_out(self, req_id: int) -> int:
+        """Move a preemption victim's blocks to the host tier.  Device-side
+        bookkeeping is exactly a :meth:`free` (shared blocks decref and may
+        park in the LRU for *other* requests); the victim's own copy is
+        accounted against the host budget until :meth:`swap_in` or
+        :meth:`drop_swapped`.  Returns the host blocks charged."""
+        held = self._held.get(req_id, 0)
+        assert held > 0, f"swap_out of request {req_id} holding no blocks"
+        assert req_id not in self._swapped, f"request {req_id} already swapped"
+        self.free(req_id)
+        self.freed -= 1                    # it is swapped, not freed
+        self._swapped[req_id] = held
+        self.swap_outs += 1
+        self.swapped_out_blocks += held
+        return held
+
+    def swapped_blocks(self, req_id: int) -> int:
+        """Host blocks a swapped-out request holds (0 when not swapped)."""
+        return self._swapped.get(req_id, 0)
+
+    def swap_in(self, req_id: int, tokens: int, *, solo: bool = False) -> bool:
+        """Readmit a swapped-out request: reserve device blocks for its
+        ``tokens`` logical tokens under the same watermark / solo-overflow
+        rules as :meth:`admit`, releasing the host-tier copy.  No prefix
+        matching — restored blocks are private.  Returns False (state
+        unchanged) when the device pool cannot take it yet."""
+        assert req_id in self._swapped, f"request {req_id} not swapped out"
+        assert req_id not in self._held, f"request {req_id} already held"
+        need = self.blocks_for(tokens)
+        if not solo and self.used_blocks + need + self.watermark \
+                > self.num_blocks:
+            return False
+        if solo and self.used_blocks + need > self.num_blocks:
+            self.overflow_admissions += 1
+        self._reclaim(need)
+        restored = self._swapped.pop(req_id)
+        self._held[req_id] = need
+        if self.prefix_cache:
+            self._private[req_id] = need
+        self.used_blocks += need
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        self.swap_ins += 1
+        self.swapped_in_blocks += restored
+        return True
+
+    def drop_swapped(self, req_id: int) -> None:
+        """Discard a swapped-out request's host copy (e.g. it migrated to
+        another replica and must recompute there)."""
+        if self._swapped.pop(req_id, None) is not None:
+            self.swap_drops += 1
 
     def reset(self) -> None:
         self._held.clear()
@@ -335,6 +478,9 @@ class KVCacheManager:
         self._prefix_of.clear()
         self._private.clear()
         self._hit_tokens.clear()
+        self._host.clear()
+        self._swapped.clear()
+        self._host_hit_blocks.clear()
         self.used_blocks = 0
         self.peak_used = 0
         self.overflow_admissions = 0
@@ -345,6 +491,14 @@ class KVCacheManager:
         self.prefix_hit_tokens_total = 0
         self.prefix_prompt_tokens_total = 0
         self.prefix_evictions = 0
+        self.spilled_blocks = 0
+        self.host_evictions = 0
+        self.host_hits = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_out_blocks = 0
+        self.swapped_in_blocks = 0
+        self.swap_drops = 0
 
 
 def logical_tokens(input_len: int, quota: int, remaining: int) -> int:

@@ -36,6 +36,18 @@ Slots are runtime-scale (``t_max`` = prompt + generated tokens on this
 container), so the pool is sized to hold every slot at full length —
 admission control (and therefore preemption) is the symbolic manager's
 job; this layer proves the plan executes through real paged storage.
+
+**Host tier** (``host_blocks > 0``): the physical counterpart of the
+manager's symbolic tier.  Evicted-but-hashed blocks spill into a bounded
+:class:`~repro.serving.engine.HostBlockPool` — preallocated NumPy storage
+with block-granular device_get/device_put copies — driven by the
+allocator's spill/evict/revive callbacks, so ``adopt`` transparently
+revives a host-resident prefix block bitwise-identical into a fresh
+device block.  Swap-based preemption rides the same copy machinery:
+:meth:`swap_out_request` lands a victim's occupied blocks in transient
+host buffers (bounded by the symbolic manager's host budget, which gates
+every swap) and :meth:`swap_in_request` scatters them back and rebinds
+the slot, so decode resumes exactly where it stopped.
 """
 from __future__ import annotations
 
@@ -54,7 +66,7 @@ class PagedEngineCache:
 
     def __init__(self, cfg, num_slots: int, t_max: int,
                  block_size: int = DEFAULT_ENGINE_BLOCK_SIZE, *,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, host_blocks: int = 0):
         import jax.numpy as jnp
         self.cfg = cfg
         self.block_size = block_size
@@ -71,7 +83,13 @@ class PagedEngineCache:
              "v": jnp.zeros((np_, self.num_blocks, block_size, kv, dh),
                             jnp.bfloat16)}
             for _ in cfg.period]
-        self.allocator = BlockAllocator(self.num_blocks - 1, first_id=1)
+        self.host_blocks = max(0, int(host_blocks))
+        self.allocator = BlockAllocator(
+            self.num_blocks - 1, first_id=1,
+            host_blocks=self.host_blocks,
+            on_spill=self._spill_block if self.host_blocks else None,
+            on_host_evict=self._drop_host_hash if self.host_blocks else None,
+            on_revive=self._revive_block if self.host_blocks else None)
         self.tables = np.zeros((self.num_slots, self.blocks_per_seq),
                                np.int32)
         self.lengths = np.zeros(self.num_slots, np.int32)
@@ -79,8 +97,16 @@ class PagedEngineCache:
         self._free_slots: List[int] = list(range(self.num_slots - 1, -1, -1))
         self._slot_of: Dict[int, int] = {}
         self._blocks_of: Dict[int, List[int]] = {}
+        # host tier (all idle when host_blocks == 0)
+        self._host_pool = None               # lazy HostBlockPool
+        self._host_slot_of_hash: Dict[int, int] = {}
+        self._host_swapped: Dict[int, tuple] = {}
         self.physical_hit_blocks = 0     # aliased instead of prefilled
         self.physical_hit_requests = 0
+        self.host_spill_bytes = 0
+        self.host_revive_bytes = 0
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
 
     @property
     def active_slots(self) -> int:
@@ -102,13 +128,57 @@ class PagedEngineCache:
                            max_match_tokens=min(len(row), t_prompt) - 1)
 
     def match_len(self, hashes: Sequence[int]) -> int:
-        """Longest indexed prefix of ``hashes`` (no state change)."""
+        """Longest matchable prefix of ``hashes`` (no state change):
+        device-indexed blocks plus host-resident spilled blocks, which
+        :meth:`adopt_prefix` revives on adoption."""
         n = 0
         for h in hashes:
-            if self.allocator.lookup(h) is None:
+            if (self.allocator.lookup(h) is None
+                    and not self.allocator.host_contains(h)):
                 break
             n += 1
         return n
+
+    # ----------------------------------------------------------- host tier
+
+    def _ensure_host_pool(self):
+        if self._host_pool is None:
+            from repro.serving.engine import HostBlockPool
+            cfg = self.cfg
+            # +1 slot of slack: during a host revive the incoming block's
+            # copy is still resident while the device alloc it triggers may
+            # spill one more block out (see BlockAllocator._revive_from_host).
+            self._host_pool = HostBlockPool(
+                len(cfg.period), cfg.n_periods, self.host_blocks + 1,
+                self.block_size, cfg.n_kv_heads, cfg.head_dim,
+                self.pools[0]["k"].dtype)
+        return self._host_pool
+
+    def _spill_block(self, block_id: int, h: int) -> None:
+        """Allocator callback: copy an evicted device block out to host
+        before its id is recycled."""
+        pool = self._ensure_host_pool()
+        stale = self._host_slot_of_hash.pop(h, None)
+        if stale is not None:            # re-spill of a hash we still hold
+            pool.free([stale])
+        slot = pool.alloc(1)[0]
+        self.host_spill_bytes += pool.put([slot], self.pools, [block_id])
+        self._host_slot_of_hash[h] = slot
+
+    def _drop_host_hash(self, h: int) -> None:
+        """Allocator callback: the host tier evicted a spilled hash."""
+        slot = self._host_slot_of_hash.pop(h, None)
+        if slot is not None:
+            self._host_pool.free([slot])
+
+    def _revive_block(self, block_id: int, h: int) -> None:
+        """Allocator callback: copy a host-resident hash back into a fresh
+        device block (bitwise-identical contents)."""
+        slot = self._host_slot_of_hash.pop(h)
+        self.pools, moved = self._host_pool.get([slot], self.pools,
+                                                [block_id])
+        self.host_revive_bytes += moved
+        self._host_pool.free([slot])
 
     # ---------------------------------------------------------- admission
 
@@ -311,3 +381,67 @@ class PagedEngineCache:
         self.lengths[slot] = 0
         self.tokens[slot] = 0
         self._free_slots.append(slot)
+
+    # ------------------------------------------------------ swap preemption
+
+    def swap_out_request(self, req_id: int) -> int:
+        """Copy a preemption victim's occupied blocks to host and release
+        its slot.  The *whole* occupied block set goes out — shared prefix
+        blocks included (they are read-shared, so copying is safe) — making
+        the saved state independent of index churn before readmission.
+        Capacity is the symbolic manager's host budget (it gates every
+        swap); the copies here are transient per-request host buffers.
+        Returns bytes moved."""
+        slot = self._slot_of[req_id]
+        length = int(self.lengths[slot])
+        nb = max(1, min(self.blocks_per_seq,
+                        math.ceil(length / self.block_size)))
+        idx = np.asarray(self._blocks_of[req_id][:nb], np.int32)
+        saved = []
+        moved = 0
+        for pool in self.pools:
+            entry = {}
+            for key in ("k", "v"):
+                rows = np.asarray(pool[key][:, idx])   # device_get
+                entry[key] = rows
+                moved += rows.nbytes
+            saved.append(entry)
+        self._host_swapped[req_id] = (saved, length, int(self.tokens[slot]))
+        self.swap_out_bytes += moved
+        self.release(req_id)
+        return moved
+
+    def swap_in_request(self, req_id: int) -> int:
+        """Rebind a swapped-out request: allocate a slot + fresh blocks,
+        scatter the saved host copy back (device_put), and restore length
+        and last token so decode resumes mid-stream.  Restored blocks stay
+        private and unhashed — no index pollution.  Returns bytes moved."""
+        import jax.numpy as jnp
+        saved, length, last_token = self._host_swapped.pop(req_id)
+        if not self._free_slots:
+            raise MemoryError(f"swap_in of request {req_id} with no free slot")
+        slot = self._free_slots.pop()
+        ids = self.allocator.alloc(self.blocks_per_seq)
+        self._slot_of[req_id] = slot
+        self._blocks_of[req_id] = ids
+        self.tables[slot, :] = ids
+        nb = saved[0]["k"].shape[1]
+        idx = jnp.asarray(np.asarray(ids[:nb], np.int32))
+        moved = 0
+        for i, entry in enumerate(saved):
+            for key in ("k", "v"):
+                rows = entry[key]
+                self.pools[i][key] = self.pools[i][key].at[:, idx].set(
+                    jnp.asarray(rows).astype(self.pools[i][key].dtype))
+                moved += rows.nbytes
+        self.lengths[slot] = length
+        self.tokens[slot] = last_token
+        self.swap_in_bytes += moved
+        return moved
+
+    def has_swapped(self, req_id: int) -> bool:
+        return req_id in self._host_swapped
+
+    def drop_swapped(self, req_id: int) -> None:
+        """Discard a swapped-out request's host copy (migration path)."""
+        self._host_swapped.pop(req_id, None)

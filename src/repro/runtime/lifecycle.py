@@ -48,8 +48,10 @@ class RequestState:
     finished_at: float = math.nan
     quota: int = 0                 # decode steps after the first token
     remaining: int = 0             # decode steps left
-    preemptions: int = 0           # times evicted from KV cache (recompute)
+    preemptions: int = 0           # times evicted from KV cache
     admission_index: int = -1      # replica-local admission sequence number
+    swapped: bool = False          # queued with KV parked in the host tier
+    swap_ins: int = 0              # times readmitted by swap-in (not prefill)
 
     @property
     def ttft(self) -> float:

@@ -253,6 +253,7 @@ class ServingRuntime:
 
     def __init__(self, plan: ServingPlan, executor: Executor, *,
                  mode: str = "events", preempt_policy: str = "latest",
+                 preempt_mode: str = "recompute",
                  on_done: Optional[Callable[[RequestState], None]] = None,
                  obs=None, clock: Optional[Callable[[], float]] = None):
         if mode not in MODES:
@@ -261,6 +262,7 @@ class ServingRuntime:
         self.executor = executor
         self.mode = mode
         self.preempt_policy = preempt_policy
+        self.preempt_mode = preempt_mode
         self.on_done = on_done    # fired (orchestrator thread) per finished
         # Optional repro.obs.Observability — a pure observer: every hook
         # below is behind `is not None` (the disabled fast path) and only
@@ -285,6 +287,7 @@ class ServingRuntime:
         self.replicas: List[ReplicaRuntime] = [
             ReplicaRuntime(i, cfg, self.executor,
                            preempt_policy=self.preempt_policy,
+                           preempt_mode=self.preempt_mode,
                            on_done=self.on_done, obs=self.obs)
             for i, cfg in enumerate(self.plan.replicas)]
         if self.obs is not None:
@@ -372,6 +375,7 @@ class ServingRuntime:
                 self.executor.add_replica(cfg)
                 rep = ReplicaRuntime(idx, cfg, self.executor,
                                      preempt_policy=self.preempt_policy,
+                                     preempt_mode=self.preempt_mode,
                                      on_done=self.on_done, obs=self.obs)
                 rep.now = event.time          # spun up at the replan point
                 if self.obs is not None:
@@ -501,13 +505,11 @@ class ServingRuntime:
         per_replica: List[Dict[str, object]] = []
         kv_peaks: List[float] = []
         hit_tok, prompt_tok = 0, 0
+        swap_outs = swap_ins = 0
+        swap_out_bytes = swap_in_bytes = spilled = 0.0
         for r in self.replicas:
             mgr = self.executor.kv_manager(r.index)
-            if mgr is not None:
-                kv_peaks.append(mgr.peak_used)
-                hit_tok += mgr.prefix_hit_tokens_total
-                prompt_tok += mgr.prefix_prompt_tokens_total
-            per_replica.append({
+            entry = {
                 "replica": r.index,
                 "config": r.config.key,
                 "busy_s": float(r.busy),
@@ -520,10 +522,32 @@ class ServingRuntime:
                                     if mgr is not None and mgr.prefix_cache
                                     else None),
                 "step_time_s": self.executor.step_time_estimate(r.index),
-            })
+            }
+            if mgr is not None:
+                kv_peaks.append(mgr.peak_used)
+                hit_tok += mgr.prefix_hit_tokens_total
+                prompt_tok += mgr.prefix_prompt_tokens_total
+                if mgr.host_blocks > 0:
+                    bb = self.executor.kv_block_bytes(r.index)
+                    entry["swap_outs"] = mgr.swap_outs
+                    entry["swap_ins"] = mgr.swap_ins
+                    entry["swapped_out_bytes"] = mgr.swapped_out_blocks * bb
+                    entry["swapped_in_bytes"] = mgr.swapped_in_blocks * bb
+                    swap_outs += mgr.swap_outs
+                    swap_ins += mgr.swap_ins
+                    swap_out_bytes += mgr.swapped_out_blocks * bb
+                    swap_in_bytes += mgr.swapped_in_blocks * bb
+                    spilled += mgr.spilled_blocks
+            per_replica.append(entry)
         info["per_replica"] = per_replica
         if kv_peaks:
             info["kv_peak_blocks"] = float(max(kv_peaks))
+        if swap_outs or swap_ins or spilled:
+            info["swap_outs"] = float(swap_outs)
+            info["swap_ins"] = float(swap_ins)
+            info["swapped_out_bytes"] = float(swap_out_bytes)
+            info["swapped_in_bytes"] = float(swap_in_bytes)
+            info["host_spilled_blocks"] = float(spilled)
         if getattr(self.executor, "prefix_cache", False):
             info["prefix_hit_rate"] = (hit_tok / prompt_tok
                                        if prompt_tok else 0.0)

@@ -35,6 +35,16 @@ Semantics (inherited from the validated simulator, now shared):
   ``held_blocks`` counts only the blocks eviction would actually
   reclaim, and readmission re-resolves the prefix index — a preempted
   request typically re-aliases its own still-cached prefix;
+* with a host KV tier configured, ``preempt_mode`` selects what eviction
+  does with the victim's blocks: ``"recompute"`` (drop and re-prefill,
+  the default), ``"swap"`` (copy the blocks to the host pool and readmit
+  by a **swap-in** event that restores them without re-running prefill),
+  or ``"auto"`` (per victim, compare the modeled swap transfer time
+  against the modeled prefill-recompute time and take the cheaper one —
+  both backends use the same analytical model, so they decide
+  identically).  A swapped request keeps its decode position
+  (``remaining`` is preserved) and re-enters the queue FCFS like any
+  preempted request;
 * a ``draining`` replica (removed by a replan) finishes its active batch
   but admits nothing new — and never preempts, since its queue can no
   longer drain through admission;
@@ -69,16 +79,19 @@ from repro.runtime.kvcache.manager import batch_tokens, logical_tokens
 from repro.runtime.lifecycle import Phase, RequestState
 
 PREEMPT_POLICIES = ("latest", "fewest-blocks")
+PREEMPT_MODES = ("recompute", "swap", "auto")
 
 
 class PendingEvent:
     """One planned-but-not-yet-executed replica event.
 
-    ``kind`` is ``"prefill"`` (``batch`` is the admission group) or
-    ``"decode"`` (``batch``/``k``/``t_step`` are the lockstep chunk).
-    ``until`` records the barrier the event was planned under so
-    completion can reproduce the sequential scheduler's post-event
-    admission gating exactly.
+    ``kind`` is ``"prefill"`` (``batch`` is the admission group),
+    ``"swapin"`` (``batch`` is a group of host-swapped requests being
+    readmitted by block restore instead of prefill) or ``"decode"``
+    (``batch``/``k``/``t_step`` are the lockstep chunk).  ``until``
+    records the barrier the event was planned under so completion can
+    reproduce the sequential scheduler's post-event admission gating
+    exactly.
     """
 
     __slots__ = ("kind", "batch", "k", "t_step", "until")
@@ -97,6 +110,8 @@ class PendingEvent:
         prefill offsets or the decode duration."""
         if self.kind == "prefill":
             return executor.prefill(rep, self.batch)
+        if self.kind == "swapin":
+            return executor.swap_in(rep, self.batch)
         return executor.decode(rep, self.batch, self.k, self.t_step)
 
 
@@ -104,14 +119,19 @@ class ReplicaRuntime:
     """Event-driven continuous batching for one replica."""
 
     def __init__(self, index: int, config: Config, executor: Executor, *,
-                 preempt_policy: str = "latest", on_done=None, obs=None):
+                 preempt_policy: str = "latest",
+                 preempt_mode: str = "recompute", on_done=None, obs=None):
         if preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(f"preempt_policy must be one of "
                              f"{PREEMPT_POLICIES}, got {preempt_policy!r}")
+        if preempt_mode not in PREEMPT_MODES:
+            raise ValueError(f"preempt_mode must be one of "
+                             f"{PREEMPT_MODES}, got {preempt_mode!r}")
         self.index = index
         self.config = config
         self.executor = executor
         self.preempt_policy = preempt_policy
+        self.preempt_mode = preempt_mode
         # Optional repro.obs.Observability; hooks fire at commit points
         # only and never read the clock (pure observer — see repro.obs).
         self.obs = obs
@@ -141,8 +161,18 @@ class ReplicaRuntime:
         bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
 
     def strip_queue(self) -> List[RequestState]:
-        """Remove and return all not-yet-admitted requests (for migration)."""
+        """Remove and return all not-yet-admitted requests (for migration).
+        A host-swapped request cannot carry its parked blocks to another
+        replica: its swap state is dropped and it degrades to recompute."""
         stripped, self.queue = self.queue, []
+        mgr = self.executor.kv_manager(self.index)
+        for s in stripped:
+            if s.swapped:
+                self.executor.drop_swapped(self.index, s)
+                if mgr is not None:
+                    mgr.drop_swapped(s.req.req_id)
+                s.swapped = False
+                s.remaining = 0
         return stripped
 
     def _finish(self, state: RequestState) -> None:
@@ -169,34 +199,58 @@ class ReplicaRuntime:
         return max(batch, key=lambda s: s.admission_index)
 
     def _preempt(self, state: RequestState) -> None:
-        """Evict one decoding request to recompute: free its KV blocks and
-        send it back to the queue; it will prefill again when admitted."""
+        """Evict one decoding request.  Recompute mode frees its KV blocks
+        and sends it back to the queue to prefill again; swap mode parks
+        the blocks in the host tier so readmission restores them instead.
+        Auto mode compares the two modeled costs per victim."""
         self.active.remove(state)
         mgr = self.executor.kv_manager(self.index)
-        if mgr is not None:
-            mgr.free(state.req.req_id)
-        self.executor.preempt(self.index, state)
+        use_swap = (self.preempt_mode != "recompute"
+                    and self.executor.can_swap(self.index, state))
+        if use_swap and self.preempt_mode == "auto":
+            swap_s, recompute_s = self.executor.preempt_costs(self.index,
+                                                              state)
+            use_swap = swap_s < recompute_s
+        swap_bytes = 0.0
+        if use_swap:
+            # Copy the physical blocks out *before* the symbolic swap-out
+            # recycles their ids (the engine backend reads the device pool
+            # rows the ids still address).
+            self.executor.swap_out(self.index, state)
+            n = mgr.swap_out(state.req.req_id)
+            swap_bytes = n * self.executor.kv_block_bytes(self.index)
+            state.swapped = True
+        else:
+            if mgr is not None:
+                mgr.free(state.req.req_id)
+            self.executor.preempt(self.index, state)
+            state.remaining = 0
         state.phase = Phase.QUEUED
         state.preemptions += 1
-        state.remaining = 0
         self.preempted += 1
         bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
         if self.obs is not None:
-            self.obs.on_preempt(self, state, self.now)
+            self.obs.on_preempt(self, state, self.now, swapped=use_swap,
+                                swap_bytes=swap_bytes)
 
     # ------------------------------------------------------------ planning
 
-    def _plan_admission_group(self, until: float = math.inf
-                              ) -> Optional[List[RequestState]]:
+    def _plan_admission_event(self, until: float = math.inf
+                              ) -> Optional[PendingEvent]:
         """One iteration of the admission loop: pop every queued request
         that has arrived and fits (count cap + KV blocks, FCFS) into one
-        prefill group, reserving its blocks.  Returns None when no group
-        can start (admission never *starts* at or after ``until``, so a
-        replan barrier sees a consistent queue)."""
+        admission group, reserving its blocks.  A group is homogeneous —
+        all fresh (kind ``"prefill"``) or all host-swapped (kind
+        ``"swapin"``) — because the two readmission paths are different
+        executor calls; the queue head decides the kind, keeping FCFS
+        exact.  Returns None when no group can start (admission never
+        *starts* at or after ``until``, so a replan barrier sees a
+        consistent queue)."""
         if self.draining or not self.queue or self.now >= until:
             return None
         mgr = self.executor.kv_manager(self.index)
         group: List[RequestState] = []
+        kind = "prefill"
         cap = math.inf
         for s in self.active:
             cap = min(cap, self.executor.max_batch(self.index,
@@ -211,12 +265,22 @@ class ReplicaRuntime:
                             # barrier (e.g. arrival == replan time): defer,
                             # exactly like the event heap does
                 self.now = nxt.req.arrival   # idle: jump to next arrival
+            if group and nxt.swapped != (kind == "swapin"):
+                break       # homogeneous group: next kind waits its turn
             c = min(cap, self.executor.max_batch(self.index,
                                                  nxt.req.workload))
             if len(self.active) + len(group) + 1 > max(1, int(c)):
                 break
             solo = not self.active and not group
-            if mgr is not None and not mgr.admit(
+            if nxt.swapped:
+                if mgr is None or not mgr.swap_in(
+                        nxt.req.req_id,
+                        logical_tokens(nxt.req.input_len, nxt.quota,
+                                       nxt.remaining),
+                        solo=solo):
+                    break                    # FCFS: no queue jumping
+                kind = "swapin"
+            elif mgr is not None and not mgr.admit(
                     nxt.req.req_id, nxt.req.input_len + 1, solo=solo,
                     prompt=nxt.req.prompt):
                 break                        # FCFS: no queue jumping
@@ -229,7 +293,7 @@ class ReplicaRuntime:
         if not group:
             return None
         self.admission_log.append(tuple(s.req.req_id for s in group))
-        return group
+        return PendingEvent(kind, group, until=until)
 
     def _plan_decode(self, until: float = math.inf) -> PendingEvent:
         """Choose the next lockstep decode chunk: batch, step count (never
@@ -297,6 +361,34 @@ class ReplicaRuntime:
         if self.obs is not None:
             self.obs.on_admit(self, group, start, offsets)
 
+    def _complete_swapin(self, group: Sequence[RequestState],
+                         offsets: Sequence[float]) -> None:
+        """Commit a swap-in readmission: the group resumes decoding at its
+        preserved position — ``quota``/``remaining``/``first_token_at``
+        are untouched, so the emitted token stream is byte-identical to
+        the recompute path's tail."""
+        start = self.now
+        mgr = self.executor.kv_manager(self.index)
+        blocks = 0
+        for s in group:
+            s.phase = Phase.DECODE
+            s.admitted_at = start
+            s.swapped = False
+            s.swap_ins += 1
+            if mgr is not None:
+                blocks += mgr.held_blocks(s.req.req_id)
+        self.now = start + offsets[-1]
+        self.busy += offsets[-1]
+        for s in group:
+            if s.remaining <= 0:   # defensive: quota exhausted pre-swap
+                self._finish(s)
+            else:
+                self.active.append(s)
+        if self.obs is not None:
+            self.obs.on_swap_in(
+                self, group, start, offsets,
+                swap_bytes=blocks * self.executor.kv_block_bytes(self.index))
+
     def _complete_decode(self, pending: PendingEvent,
                          duration: float) -> None:
         start = self.now
@@ -339,15 +431,15 @@ class ReplicaRuntime:
                 return None
             if self.queue[0].req.arrival >= until:
                 return None
-            group = self._plan_admission_group(until)
-            if group is None:
+            event = self._plan_admission_event(until)
+            if event is None:
                 return None
             self._admit_turn = True
-            return PendingEvent("prefill", group, until=until)
+            return event
         if self._admit_turn:
-            group = self._plan_admission_group(until)
-            if group is not None:
-                return PendingEvent("prefill", group, until=until)
+            event = self._plan_admission_event(until)
+            if event is not None:
+                return event
             self._admit_turn = False
         return self._plan_decode(until)
 
@@ -356,6 +448,8 @@ class ReplicaRuntime:
         measured/predicted duration and retire finished requests."""
         if pending.kind == "prefill":
             self._complete_prefill(pending.batch, result)
+        elif pending.kind == "swapin":
+            self._complete_swapin(pending.batch, result)
         else:
             self._complete_decode(pending, result)
         # The sequential scheduler re-attempts admission right after every
@@ -378,14 +472,17 @@ class ReplicaRuntime:
 
     def _admit(self, until: float = math.inf) -> None:
         """Admit arrived requests in batched groups, paying each group's
-        prefill; loops so arrivals landing during a prefill window are
-        admitted before decode resumes."""
+        prefill (or swap-in restore); loops so arrivals landing during a
+        prefill window are admitted before decode resumes."""
         while True:
-            group = self._plan_admission_group(until)
-            if group is None:
+            event = self._plan_admission_event(until)
+            if event is None:
                 return
-            self._complete_prefill(group,
-                                   self.executor.prefill(self.index, group))
+            result = event.execute(self.executor, self.index)
+            if event.kind == "prefill":
+                self._complete_prefill(event.batch, result)
+            else:
+                self._complete_swapin(event.batch, result)
 
     def step(self, until: float = math.inf) -> bool:
         """Advance one compound event (admission and/or lockstep decode).

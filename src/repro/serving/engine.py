@@ -94,6 +94,83 @@ def _shared_jit(key: tuple, make):
     return fn
 
 
+class HostBlockPool:
+    """Preallocated host-memory (NumPy) storage for paged KV blocks.
+
+    The engine's pools live on-device as ``(n_periods, num_blocks, bs, KV,
+    D)`` k/v tensors per layer; this pool mirrors that layout in host RAM as
+    ``(capacity, n_periods, bs, KV, D)`` arrays so one host *slot* holds one
+    device *block* across all cache periods of one layer.  Copies are
+    block-granular: :meth:`put` is a device_get (gather the block columns,
+    land them in pinned-path NumPy rows), :meth:`get` returns the rows for
+    the caller's ``device_put`` scatter.  The pool only manages slots and
+    bytes — which hashes or requests occupy them is the
+    :class:`~repro.runtime.kvcache.paged.PagedEngineCache`'s bookkeeping.
+    """
+
+    def __init__(self, n_layers: int, n_periods: int, capacity: int,
+                 block_size: int, kv_heads: int, head_dim: int, dtype):
+        self.capacity = int(capacity)
+        shape = (self.capacity, n_periods, block_size, kv_heads, head_dim)
+        self._store = [
+            {"k": np.zeros(shape, dtype=dtype),
+             "v": np.zeros(shape, dtype=dtype)}
+            for _ in range(n_layers)
+        ]
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_slots(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(d["k"].nbytes + d["v"].nbytes for d in self._store)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"host pool exhausted: requested {n} slots, "
+                f"{len(self._free)} free of {self.capacity}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, slots: List[int]) -> None:
+        self._free.extend(slots)
+
+    def put(self, slots: List[int], pools, block_ids: List[int]) -> int:
+        """Copy device blocks ``block_ids`` (one per slot) out of the
+        per-layer ``pools`` into host ``slots``.  Returns bytes moved."""
+        idx = np.asarray(block_ids, dtype=np.int32)
+        moved = 0
+        for layer, pool in zip(self._store, pools):
+            for key in ("k", "v"):
+                # (n_periods, n, bs, KV, D) gather -> host rows (n, np_, ...)
+                rows = np.asarray(pool[key][:, idx])
+                layer[key][np.asarray(slots)] = np.moveaxis(rows, 1, 0)
+                moved += rows.nbytes
+        return moved
+
+    def get(self, slots: List[int], pools, block_ids: List[int]):
+        """Scatter host ``slots`` back into device blocks ``block_ids``;
+        returns ``(new_pools, bytes_moved)`` (functional `.at` update)."""
+        idx = jnp.asarray(np.asarray(block_ids, dtype=np.int32))
+        sel = np.asarray(slots)
+        out = []
+        moved = 0
+        for layer, pool in zip(self._store, pools):
+            new = dict(pool)
+            for key in ("k", "v"):
+                rows = np.moveaxis(layer[key][sel], 0, 1)  # (np_, n, bs, ...)
+                new[key] = pool[key].at[:, idx].set(jnp.asarray(rows))
+                moved += rows.nbytes
+            out.append(new)
+        return out, moved
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, max_new)

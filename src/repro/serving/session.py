@@ -172,6 +172,7 @@ class Session:
 
     def __init__(self, plan: ServingPlan, executor, *,
                  mode: str = "events", preempt_policy: str = "latest",
+                 preempt_mode: str = "recompute",
                  replan=None, autoscale=None, slo=None, obs=None,
                  clock=None):
         self.plan = plan
@@ -180,6 +181,7 @@ class Session:
         self.obs = obs          # repro.obs.Observability or None
         self.runtime = ServingRuntime(plan, executor, mode=mode,
                                       preempt_policy=preempt_policy,
+                                      preempt_mode=preempt_mode,
                                       on_done=self._on_done, obs=obs,
                                       clock=clock)
         executor.token_sink = self._on_tokens
@@ -390,6 +392,7 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
           input_len: Optional[int] = None, max_new: Optional[int] = None,
           seed: Optional[int] = None,
           mode: str = "events", preempt_policy: str = "latest",
+          preempt_mode: str = "recompute",
           replan=None, autoscale=None, slo=None,
           observability=False, clock=None,
           **executor_options) -> Session:
@@ -444,5 +447,6 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
         else:
             obs = observability
     return Session(the_plan, executor, mode=mode,
-                   preempt_policy=preempt_policy, replan=replan,
-                   autoscale=autoscale, slo=slo, obs=obs, clock=clock)
+                   preempt_policy=preempt_policy, preempt_mode=preempt_mode,
+                   replan=replan, autoscale=autoscale, slo=slo, obs=obs,
+                   clock=clock)

@@ -1,0 +1,488 @@
+"""Two-tier KV cache tests: host spill/revive on the allocator, the
+manager's swap accounting, swap-based preemption end to end (token streams
+byte-identical to recompute), the cost-aware auto policy, backend-identical
+admission in swap mode, and the planner's prefix-hit-rate spec input."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.plan import Config, ServingPlan
+from repro.core.workloads import Request, Trace
+from repro.runtime import CostModelExecutor, ServingRuntime
+from repro.runtime.kvcache import BlockAllocator, KVCacheManager
+
+BS = 16
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+BLOCK_BYTES = BS * TINY.kv_bytes_per_token
+
+
+def _replica(num_blocks: int, **dev_kw) -> Config:
+    free = (num_blocks + 0.5) * BLOCK_BYTES
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("kv-swap-test", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9,
+                     "x", **dev_kw)
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(config: Config, n_requests: int) -> ServingPlan:
+    return ServingPlan(replicas=[config], assignment=np.ones((1, 1)),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=config.cost)
+
+
+def _trace(reqs) -> Trace:
+    return Trace("kv-swap", tuple(reqs))
+
+
+def _overflow_requests(n=3, input_len=30, output_len=4):
+    return [Request(req_id=i, workload=0, input_len=input_len,
+                    output_len=output_len, arrival=0.0) for i in range(n)]
+
+
+# -------------------------------------------------- unit: two-tier allocator
+
+class _SpillRecorder:
+    """Callback triple that mirrors what a pool owner would do, plus the
+    assertions a physical pool depends on (spill never sees a live id)."""
+
+    def __init__(self):
+        self.host = {}            # hash -> device id it was spilled from
+        self.allocator = None
+
+    def on_spill(self, block_id, h):
+        assert self.allocator.ref_count(block_id) == 0, \
+            "spill callback fired for a live block"
+        assert h not in self.host
+        self.host[h] = block_id
+
+    def on_host_evict(self, h):
+        del self.host[h]
+
+    def on_revive(self, block_id, h):
+        assert self.allocator.ref_count(block_id) == 1
+        del self.host[h]
+
+
+def _two_tier(num_blocks, host_blocks):
+    rec = _SpillRecorder()
+    a = BlockAllocator(num_blocks, first_id=1, host_blocks=host_blocks,
+                       on_spill=rec.on_spill,
+                       on_host_evict=rec.on_host_evict,
+                       on_revive=rec.on_revive)
+    rec.allocator = a
+    return a, rec
+
+
+def test_allocator_spills_to_host_and_revives():
+    a, rec = _two_tier(num_blocks=2, host_blocks=2)
+    ids = a.alloc(2)
+    a.commit(ids[0], 101)
+    a.commit(ids[1], 102)
+    a.free(ids)                       # both park in the device LRU
+    fresh = a.alloc(2)                # evicts both -> spills to host
+    assert a.spilled_blocks == 2 and set(rec.host) == {101, 102}
+    assert a.host_contains(101) and a.lookup(101) is None
+    assert a.adopt(101) is None       # no device block free to revive into
+    a.free([fresh[0]])
+    revived = a.adopt(101)            # revive host -> device
+    assert revived is not None and a.lookup(101) == revived
+    assert not a.host_contains(101) and a.host_revives == 1
+    assert set(rec.host) == {102}
+    a.free([revived, fresh[1]])
+
+
+def test_allocator_host_tier_is_bounded():
+    a, rec = _two_tier(num_blocks=3, host_blocks=2)
+    ids = a.alloc(3)
+    for i, h in zip(ids, (1, 2, 3)):
+        a.commit(i, h)
+    a.free(ids)
+    a.alloc(3)                        # evict all three, host holds only 2
+    assert a.host_used_blocks == 2 and a.host_evictions == 1
+    assert set(rec.host) == {2, 3}    # oldest spilled hash dropped first
+    assert not a.host_contains(1)
+
+
+def _allocator_invariant_sweep(num_blocks, host_blocks, ops):
+    """Drive a random op sequence and check the two-tier invariants after
+    every step: device partition exact, host bound respected, host hashes
+    never shadowing device-indexed ones, spills only of refcount-0 blocks
+    (asserted inside the callbacks)."""
+    a, rec = _two_tier(num_blocks, host_blocks)
+    live = []                         # ids we hold references on
+    next_hash = [1]
+    for kind, val in ops:
+        if kind == "alloc":
+            n = 1 + val % max(1, num_blocks)
+            if n <= a.available_blocks:
+                live.extend(a.alloc(n))
+        elif kind == "commit" and live:
+            bid = live[val % len(live)]
+            if a.block_hash(bid) is None:
+                a.commit(bid, next_hash[0])
+                next_hash[0] += 1
+        elif kind == "free" and live:
+            a.free([live.pop(val % len(live))])
+        elif kind == "adopt" and next_hash[0] > 1:
+            got = a.adopt(1 + val % (next_hash[0] - 1))
+            if got is not None:
+                live.append(got)
+        # --- invariants ---
+        assert (a.free_blocks + a.used_blocks + a.cached_blocks
+                == num_blocks)
+        assert a.host_used_blocks <= host_blocks
+        assert len(rec.host) == a.host_used_blocks
+        assert set(a._free).isdisjoint(a._refs)
+        assert set(a._free).isdisjoint(a._lru)
+        assert all(bid in a._refs or bid in a._lru
+                   for bid in a._index.values())
+        for h in rec.host:
+            assert a.lookup(h) is None      # host never shadows device
+        for bid in live:
+            assert a.ref_count(bid) >= 1    # a held block is never evicted
+    a.free(live)
+    assert a.used_blocks == 0
+
+
+_OP_KINDS = ("alloc", "commit", "free", "adopt")
+
+
+def test_two_tier_allocator_invariants_seeded():
+    rng = np.random.default_rng(42)
+    for _ in range(20):
+        num_blocks = int(rng.integers(2, 24))
+        host_blocks = int(rng.integers(0, 16))
+        ops = [(_OP_KINDS[int(rng.integers(0, 4))], int(rng.integers(0, 64)))
+               for _ in range(int(rng.integers(5, 60)))]
+        _allocator_invariant_sweep(num_blocks, host_blocks, ops)
+
+
+def test_two_tier_allocator_invariants_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=40, deadline=None)
+    @hypothesis.given(
+        num_blocks=st.integers(min_value=2, max_value=24),
+        host_blocks=st.integers(min_value=0, max_value=16),
+        ops=st.lists(st.tuples(st.sampled_from(_OP_KINDS),
+                               st.integers(0, 63)),
+                     min_size=1, max_size=60),
+    )
+    def run(num_blocks, host_blocks, ops):
+        _allocator_invariant_sweep(num_blocks, host_blocks, ops)
+
+    run()
+
+
+# ----------------------------------------------------- unit: manager swap
+
+def test_manager_swap_roundtrip_accounting():
+    m = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=4)
+    assert m.admit(0, 31, solo=True)            # 2 blocks
+    assert m.can_swap_out(0)
+    assert m.swap_out(0) == 2
+    assert m.used_blocks == 0 and m.host_used_blocks == 2
+    assert m.swapped_blocks(0) == 2
+    assert not m.can_swap_out(0)                # nothing held any more
+    assert m.swap_in(0, 31, solo=True)
+    assert m.used_blocks == 2 and m.host_used_blocks == 0
+    assert (m.swap_outs, m.swap_ins) == (1, 1)
+    assert m.swapped_in_blocks == 2
+    m.free(0)
+    assert m.used_blocks == 0
+
+
+def test_manager_swap_gated_by_host_capacity():
+    m = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=1)
+    assert m.admit(0, 31, solo=True)            # 2 blocks > 1 host block
+    assert not m.can_swap_out(0)
+    m2 = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=0)
+    assert m2.admit(0, 31, solo=True)
+    assert not m2.can_swap_out(0)               # tier off: never swappable
+    m3 = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=3)
+    assert m3.admit(0, 31, solo=True) and m3.admit(1, 31)
+    assert m3.swap_out(0) == 2
+    assert not m3.can_swap_out(1)               # 1 free host block < 2 held
+    m3.drop_swapped(0)
+    assert m3.host_used_blocks == 0 and m3.swap_drops == 1
+    assert m3.can_swap_out(1)
+
+
+# --------------------------------------------------- unit: cost-model terms
+
+def test_host_link_bandwidth_is_slowest_stage():
+    fast = DeviceType("fast", 1e12, 1e11, 1e11, 1.0, 8, 1e11, 1e9, "x",
+                      host_bw=50e9)
+    slow = DeviceType("slow", 1e12, 1e11, 1e11, 1.0, 8, 1e11, 1e9, "x",
+                      host_bw=10e9)
+    stages = (Stage(fast, 2, 0.5), Stage(slow, 1, 0.5))
+    assert costmodel.host_link_bandwidth(stages) == 10e9
+    t = costmodel.swap_time_s(stages, 10e9 * costmodel.HOST_LINK_UTIL)
+    assert math.isclose(t, 1.0)
+    assert costmodel.swap_time_s(stages, 0.0) == 0.0
+
+
+def test_preempt_costs_direction():
+    """The auto policy's two regimes: a compute-rich replica with a slow
+    host link should recompute; a compute-starved one with a fast link
+    should swap."""
+    compute_rich = Config(stages=(Stage(DeviceType(
+        "rich", 1e15, 1e12, 1e11, 1.0, 8, 1e11, 1e9, "x", host_bw=1e6),
+        1, 1.0),), model_index=0, model=TINY)
+    link_rich = Config(stages=(Stage(DeviceType(
+        "linky", 1e9, 1e9, 1e11, 1.0, 8, 1e11, 1e9, "x", host_bw=1e12),
+        1, 1.0),), model_index=0, model=TINY)
+    swap_bytes = 4 * BLOCK_BYTES
+    s1, r1 = costmodel.preempt_costs(compute_rich.stages, TINY,
+                                     swap_bytes=swap_bytes,
+                                     prompt_tokens=50)
+    assert r1 < s1                    # recompute wins on the fat GPU
+    s2, r2 = costmodel.preempt_costs(link_rich.stages, TINY,
+                                     swap_bytes=swap_bytes,
+                                     prompt_tokens=50)
+    assert s2 < r2                    # swap wins over the fast link
+
+
+# ---------------------------------------- integration: swap preemption (cost)
+
+def _run_cost(num_blocks, reqs, *, preempt_mode, host_blocks, **dev_kw):
+    cfg = _replica(num_blocks, **dev_kw)
+    executor = CostModelExecutor([cfg], [TINY], host_blocks=host_blocks)
+    runtime = ServingRuntime(_plan(cfg, len(reqs)), executor,
+                             preempt_mode=preempt_mode)
+    res = runtime.run(_trace(reqs))
+    return res, runtime, executor
+
+
+def test_swap_preemption_completes_and_accounts():
+    reqs = _overflow_requests(n=4, input_len=30, output_len=8)
+    res, runtime, executor = _run_cost(5, reqs, preempt_mode="swap",
+                                       host_blocks=16)
+    mgr = executor.kv_manager(0)
+    assert res.num_completed == 4
+    assert res.num_preemptions > 0
+    assert mgr.swap_outs == mgr.swap_ins > 0
+    assert res.info["swap_ins"] == mgr.swap_ins
+    assert res.info["swapped_out_bytes"] == \
+        mgr.swapped_out_blocks * BLOCK_BYTES
+    assert mgr.used_blocks == 0 and mgr.host_used_blocks == 0
+    # a swap-readmitted request does NOT pay prefill again: its id shows
+    # up in a swap-in admission group, and total admissions still cover
+    # every preemption
+    readmitted = [rid for g in runtime.replicas[0].admission_log for rid in g]
+    assert len(readmitted) == len(reqs) + res.num_preemptions
+
+
+def test_swap_mode_without_host_tier_degrades_to_recompute():
+    reqs = _overflow_requests(n=4, input_len=30, output_len=8)
+    rec_res, rec_rt, _ = _run_cost(5, reqs, preempt_mode="recompute",
+                                   host_blocks=0)
+    swp_res, swp_rt, executor = _run_cost(5, reqs, preempt_mode="swap",
+                                          host_blocks=0)
+    # no host budget -> can_swap is always False -> byte-identical schedule
+    assert (rec_rt.replicas[0].admission_log
+            == swp_rt.replicas[0].admission_log)
+    assert rec_res.num_preemptions == swp_res.num_preemptions
+    assert executor.kv_manager(0).swap_outs == 0
+    assert "swap_ins" not in swp_res.info
+
+
+def test_auto_mode_picks_the_modeled_cheaper_policy():
+    reqs = _overflow_requests(n=4, input_len=30, output_len=8)
+    # fast host link on a tiny model: swap is modeled cheaper -> auto swaps
+    auto_res, _, ex = _run_cost(5, reqs, preempt_mode="auto",
+                                host_blocks=16, host_bw=1e12)
+    assert auto_res.num_completed == 4
+    assert ex.kv_manager(0).swap_outs > 0
+    # pathologically slow host link: recompute is cheaper -> auto recomputes
+    slow_res, _, ex2 = _run_cost(5, reqs, preempt_mode="auto",
+                                 host_blocks=16, host_bw=1.0)
+    assert slow_res.num_completed == 4
+    assert ex2.kv_manager(0).swap_outs == 0
+    assert slow_res.num_preemptions > 0
+
+
+def test_invalid_preempt_mode_rejected():
+    cfg = _replica(5)
+    with pytest.raises(ValueError):
+        ServingRuntime(_plan(cfg, 1), CostModelExecutor([cfg], [TINY]),
+                       preempt_mode="maybe")
+
+
+# -------------------------------------------- integration: engine backend
+
+def test_engine_host_revive_bitwise_equal():
+    """A hashed block evicted to the host tier and revived via adopt must
+    come back with bitwise-identical pool contents."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.runtime.kvcache.paged import PagedEngineCache
+    from repro.serving.engine import ReplicaEngine
+
+    cfg = get_config("llama3-8b").reduced()
+    eng = ReplicaEngine(cfg, seed=0)
+    t_prompt = 33                     # 4 full 8-token blocks matchable
+    paged = PagedEngineCache(cfg, num_slots=2, t_max=40, block_size=8,
+                             prefix_cache=True, host_blocks=8)
+    rng = np.random.default_rng(0)
+    row = rng.integers(0, cfg.vocab_size, t_prompt)
+    tok, caches = eng.prefill_batch(jnp.asarray(row[None], jnp.int32),
+                                    t_prompt)
+    hashes = paged.block_hashes(row, t_prompt)
+    paged.admit_cohort([0], caches, np.asarray(tok), t_prompt,
+                       block_hashes_per_req=[hashes])
+    owned = list(paged._blocks_of[0])
+    before = {key: np.asarray(paged.pools[0][key][:, np.asarray(
+        owned[:len(hashes)], np.int32)]) for key in ("k", "v")}
+    paged.release(0)                  # hashed blocks park in the LRU
+    # exhaust the free list so further allocation evicts + spills
+    hog = paged.allocator.alloc(paged.allocator.free_blocks)
+    evict = paged.allocator.alloc(len(hashes))
+    assert paged.allocator.spilled_blocks >= len(hashes)
+    assert all(paged.allocator.host_contains(h) for h in hashes)
+    paged.allocator.free(evict)
+    assert paged.match_len(hashes) == len(hashes)   # visible via host tier
+    revived = paged.adopt_prefix(hashes)
+    after = {key: np.asarray(paged.pools[0][key][:, np.asarray(
+        revived, np.int32)]) for key in ("k", "v")}
+    for key in ("k", "v"):
+        assert np.array_equal(before[key], after[key])
+    assert paged.allocator.host_revives == len(hashes)
+    assert paged.host_revive_bytes > 0
+    paged.allocator.free(revived)
+    paged.allocator.free(hog)
+
+
+def _run_engine(reqs, *, preempt_mode, host_blocks, num_blocks=5):
+    from repro.configs import get_config
+    from repro.runtime import EngineExecutor
+
+    cfg = _replica(num_blocks)
+    plan = _plan(cfg, len(reqs))
+    # max_new=5 -> engine decode quota min(output_len, 4) == cost quota.
+    # fused_steps=1: cross-schedule token comparisons need every decode
+    # step to run the same single-step program — fused chunk boundaries
+    # differ between preemption modes, and distinct XLA programs can flip
+    # a bf16 argmax near-tie.
+    executor = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                              models=[TINY], max_batch=8, input_len=8,
+                              max_new=5, fused_steps=1,
+                              host_blocks=host_blocks)
+    runtime = ServingRuntime(plan, executor, preempt_mode=preempt_mode)
+    res = runtime.run(_trace(reqs))
+    return res, runtime, executor
+
+
+def test_swap_readmission_token_stream_matches_recompute():
+    """Acceptance: resuming from swapped-in KV must generate exactly the
+    tokens recompute would — a swapped request's log is the tail of its
+    recompute log (recompute re-enters prefill, duplicating early tokens),
+    and untouched requests log identically."""
+    pytest.importorskip("jax")
+    reqs = _overflow_requests(n=3, input_len=30, output_len=4)
+    rec_res, _, rec_ex = _run_engine(reqs, preempt_mode="recompute",
+                                     host_blocks=0)
+    swp_res, _, swp_ex = _run_engine(reqs, preempt_mode="swap",
+                                     host_blocks=16)
+    assert rec_res.num_completed == swp_res.num_completed == 3
+    assert swp_res.info["swap_ins"] > 0
+    swapped_rids = {r.req.req_id for r in swp_res.records if r.swap_ins}
+    assert swapped_rids
+    for rid in (r.req.req_id for r in swp_res.records):
+        rec_log = list(rec_ex.token_log[rid])
+        swp_log = list(swp_ex.token_log[rid])
+        if rid in swapped_rids:
+            assert len(swp_log) < len(rec_log)      # no re-prefill tokens
+            assert swp_log == rec_log[-len(swp_log):]
+        else:
+            assert swp_log == rec_log
+    paged = swp_ex._paged[0]
+    assert paged.allocator.used_blocks == 0
+    assert paged.swap_in_bytes == paged.swap_out_bytes > 0
+
+
+def test_swap_mode_backend_admission_equivalence():
+    """Cost-model and engine backends make identical admission AND swap
+    decisions on the same overflow trace with the host tier on."""
+    pytest.importorskip("jax")
+    reqs = _overflow_requests(n=3, input_len=30, output_len=4)
+    cost_res, cost_rt, cost_ex = _run_cost(5, reqs, preempt_mode="swap",
+                                           host_blocks=16)
+    eng_res, eng_rt, eng_ex = _run_engine(reqs, preempt_mode="swap",
+                                          host_blocks=16)
+    assert cost_res.num_completed == eng_res.num_completed == 3
+    assert (cost_rt.replicas[0].admission_log
+            == eng_rt.replicas[0].admission_log)
+    cm, em = cost_ex.kv_manager(0), eng_ex.kv_manager(0)
+    assert (cm.swap_outs, cm.swap_ins) == (em.swap_outs, em.swap_ins)
+    assert cm.swap_outs > 0
+    cost_swaps = {r.req.req_id: r.swap_ins for r in cost_res.records}
+    eng_swaps = {r.req.req_id: r.swap_ins for r in eng_res.records}
+    assert cost_swaps == eng_swaps
+
+
+# ------------------------------------------------ trace tooling: swap rows
+
+def test_trace_summarize_reports_swap_traffic():
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "tools"))
+    import trace_summarize
+
+    doc = {"traceEvents": [
+        {"ph": "M", "name": "thread_name", "tid": 0,
+         "args": {"name": "replica-0 cfg"}},
+        {"ph": "X", "tid": 0, "ts": 0.0, "dur": 2e6, "cat": "prefill",
+         "name": "prefill[2]"},
+        {"ph": "i", "tid": 0, "ts": 2.5e6, "name": "swap-out",
+         "args": {"bytes": 4096.0}},
+        {"ph": "X", "tid": 0, "ts": 3e6, "dur": 1e6, "cat": "swapin",
+         "name": "swapin[B=1]", "args": {"bytes": 4096.0}},
+    ]}
+    s = trace_summarize.summarize(doc)
+    rep = s["replicas"][0]
+    assert rep["preemptions"] == 1
+    assert rep["swap_ins"] == 1 and rep["swap_in_s"] == 1.0
+    assert rep["swap_out_bytes"] == rep["swap_in_bytes"] == 4096.0
+    text = trace_summarize.format_summary(s)
+    assert "swapin" in text and "out-MB" in text
+
+
+# --------------------------------------- planner: prefix-hit-rate spec input
+
+def test_spec_prefix_hit_rates_validated_and_fed_to_planner():
+    from repro.core import (AVAILABILITY_SNAPSHOTS, GPU_CATALOG, LLAMA3_8B,
+                            DeploymentSpec, make_trace, plan)
+
+    trace = make_trace("trace1", num_requests=120, seed=0)
+    spec = DeploymentSpec(models=[LLAMA3_8B], workload=trace,
+                          catalog=GPU_CATALOG,
+                          availability=AVAILABILITY_SNAPSHOTS["avail1"],
+                          budget=20.0)
+    with pytest.raises(ValueError):
+        spec.with_prefix_hit_rates({0: 1.5})
+    with pytest.raises(ValueError):
+        spec.with_prefix_hit_rates({0: -0.1})
+    warm = spec.with_prefix_hit_rates({i: 0.9 for i in range(9)})
+    assert warm.prefix_hit_rates[0] == 0.9
+    assert spec.prefix_hit_rates is None        # original untouched
+    base = plan(spec, tol=2.0)
+    hot = plan(warm, tol=2.0)
+    # cached prompt tokens skip prefill FLOPs -> the same budget finishes
+    # the trace strictly faster
+    assert hot.makespan < base.makespan
+    # an explicit throughput_fn wins over the spec's hit rates
+    from repro.core.costmodel import config_throughput
+    override = plan(warm, tol=2.0,
+                    throughput_fn=lambda cfg, w: config_throughput(
+                        cfg.stages, cfg.model, w))
+    assert math.isclose(override.makespan, base.makespan, rel_tol=1e-6)

@@ -3,9 +3,10 @@
 
 Reads a trace written by ``ServingRuntime.export_trace(path)`` /
 ``Session.export_trace(path)`` and prints, per replica track: busy
-fraction, prefill vs decode time split, event counts, and preemptions —
-plus the control-plane timeline (route drops, replans, autoscale
-decisions).  The busy seconds printed here are recomputed purely from
+fraction, prefill vs decode time split, event counts, preemptions, and —
+when the run used a host KV tier — swap-in counts with per-replica
+swap-out/swap-in bytes; plus the control-plane timeline (route drops,
+replans, autoscale decisions).  The busy seconds printed here are recomputed purely from
 the trace's ``X`` spans, so they cross-check the runtime's own
 ``result.info["per_replica"]["busy_s"]`` accounting (asserted in
 ``tests/test_observability.py``).
@@ -56,7 +57,9 @@ def summarize(doc: dict) -> dict:
             "track": names.get(tid, f"track-{tid}"),
             "busy_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_events": 0, "decode_chunks": 0,
-            "preemptions": 0, "completed": 0})
+            "preemptions": 0, "completed": 0,
+            "swap_ins": 0, "swap_in_s": 0.0,
+            "swap_in_bytes": 0.0, "swap_out_bytes": 0.0})
 
     control: List[dict] = []
     for e in events:
@@ -73,11 +76,22 @@ def summarize(doc: dict) -> dict:
             elif kind == "decode":
                 r["decode_s"] += dur
                 r["decode_chunks"] += 1
+            elif kind == "swapin":
+                r["swap_ins"] += 1
+                r["swap_in_s"] += dur
+                r["swap_in_bytes"] += float(
+                    e.get("args", {}).get("bytes", 0.0))
             t_end = max(t_end, ts + dur)
         elif ph == "i" and tid < CONTROL_TRACK:
-            if e.get("name") == "preempt":
+            name = e.get("name")
+            if name == "preempt":
                 rep(tid)["preemptions"] += 1
-            elif e.get("name") == "done":
+            elif name == "swap-out":
+                r = rep(tid)
+                r["preemptions"] += 1
+                r["swap_out_bytes"] += float(
+                    e.get("args", {}).get("bytes", 0.0))
+            elif name == "done":
                 rep(tid)["completed"] += 1
             t_end = max(t_end, ts)
         elif tid == CONTROL_TRACK and ph == "i":
@@ -104,14 +118,23 @@ def summarize(doc: dict) -> dict:
 def format_summary(s: dict) -> str:
     lines = [f"trace span: {s['t_end_s']:.4f}s   "
              f"routed: {s['routes']}   dropped: {s['drops']}"]
+    swapping = any(r["swap_ins"] or r["swap_out_bytes"]
+                   for r in s["replicas"])
     lines.append(f"{'replica':<28}{'busy':>7}{'prefill':>10}{'decode':>10}"
-                 f"{'chunks':>8}{'preempt':>9}{'done':>6}")
+                 f"{'chunks':>8}{'preempt':>9}{'done':>6}"
+                 + (f"{'swapin':>8}{'out-MB':>9}{'in-MB':>8}"
+                    if swapping else ""))
     for r in s["replicas"]:
-        lines.append(
+        line = (
             f"{r['track']:<28}{r['busy_frac']:>6.1%}"
             f"{r['prefill_s']:>9.4f}s{r['decode_s']:>9.4f}s"
             f"{r['decode_chunks']:>8}{r['preemptions']:>9}"
             f"{r['completed']:>6}")
+        if swapping:
+            line += (f"{r['swap_ins']:>8}"
+                     f"{r['swap_out_bytes'] / 1e6:>9.2f}"
+                     f"{r['swap_in_bytes'] / 1e6:>8.2f}")
+        lines.append(line)
     timeline = s["replans"] + s["autoscale"]
     if timeline:
         lines.append("control-plane timeline:")
