@@ -20,6 +20,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_prefix_cache    cold vs warm TTFT + tokens/s at shared-prefix hit ratios
   bench_observability   enabled-tracing overhead (<2% budget) + on/off purity
   bench_kv_swap         swap vs recompute preemption + host-tier prefix retention
+  bench_fault_tolerance goodput under spot churn: recovery vs no-recovery
 """
 from __future__ import annotations
 
@@ -50,6 +51,7 @@ MODULES = [
     "bench_prefix_cache",
     "bench_observability",
     "bench_kv_swap",
+    "bench_fault_tolerance",
 ]
 
 

@@ -357,6 +357,8 @@ class ReplicaSnapshot:
     active: int             # requests decoding
     kv_used_frac: float     # used / total KV blocks (0 when unmanaged)
     draining: bool
+    dead: bool = False      # torn down by a fault (reclaim/crash): not
+                            # load, and not capacity either
     step_time_s: float = 0.0   # backend's decode-step estimate (engine:
                                # EMA of measured durations; 0 if unknown)
 
@@ -491,7 +493,7 @@ class ScalePolicy:
     def update(self, now: float, snapshots: Sequence[ReplicaSnapshot],
                plan: ServingPlan) -> Optional[ScaleDecision]:
         """Observe one tick; returns a decision or None."""
-        live = [s for s in snapshots if not s.draining]
+        live = [s for s in snapshots if not s.draining and not s.dead]
         if not live:
             return None
         self._history.append((

@@ -75,7 +75,25 @@ class DeploymentSpec:
         # caller keeps mutating the dict it was built from (e.g. a live
         # availability watcher updating its snapshot in place).
         object.__setattr__(self, "catalog", dict(self.catalog))
-        object.__setattr__(self, "availability", dict(self.availability))
+        # A negative or fractional device count would flow silently into
+        # the MILP's per-type capacity constraints; fail at construction.
+        # Integer-valued numerics (numpy ints from computed snapshots)
+        # normalize to plain ints.
+        avail: Dict[str, int] = {}
+        for name, n in dict(self.availability).items():
+            ok = not isinstance(n, bool)
+            if ok:
+                try:
+                    ni = int(n)
+                    ok = ni == n
+                except (TypeError, ValueError):
+                    ok = False
+            if not ok or ni < 0:
+                raise ValueError(
+                    f"availability[{name!r}] must be a non-negative int, "
+                    f"got {n!r}")
+            avail[name] = ni
+        object.__setattr__(self, "availability", avail)
         if self.budget <= 0:
             raise ValueError(f"budget must be > 0, got {self.budget}")
         if self.objective not in OBJECTIVES:
@@ -97,7 +115,14 @@ class DeploymentSpec:
     def with_availability(self, availability: Mapping[str, int]
                           ) -> "DeploymentSpec":
         """The same deployment against a new pool snapshot (Fig 2: cloud
-        availability fluctuates; this is the replanning input)."""
+        availability fluctuates; this is the replanning input).  GPU
+        types absent from the catalog are rejected — a typo'd snapshot
+        key would otherwise just vanish inside the planner."""
+        unknown = sorted(set(availability) - set(self.catalog))
+        if unknown:
+            raise ValueError(
+                f"with_availability: unknown GPU type(s) {unknown}; "
+                f"catalog has {sorted(self.catalog)}")
         return dataclasses.replace(self, availability=dict(availability))
 
     def with_budget(self, budget: float) -> "DeploymentSpec":

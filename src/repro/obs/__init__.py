@@ -335,6 +335,45 @@ class Observability:
         m.gauge("autoscale_queue_depth").set(queue_depth, t=t)
         m.gauge("autoscale_kv_util").set(kv_util, t=t)
 
+    # ----------------------------------------------------------- fault hooks
+
+    def on_fault(self, t: float, kind: str, gpu_type: str,
+                 victims: Sequence[int]) -> None:
+        """One injected fault event applied (``victims`` are the replica
+        indices torn down; empty for recoveries)."""
+        self.tracer.instant(CONTROL_TRACK, f"fault-{kind}", t, cat="fault",
+                            args={"kind": kind, "gpu_type": gpu_type,
+                                  "victims": list(victims)})
+        self.metrics.counter("faults_total", kind=kind).inc()
+
+    def on_replica_dead(self, index: int, t: float) -> None:
+        """A replica was torn down by a fault (or a wedged worker) at
+        ``t``; it stays down for the rest of the run, so its downtime is
+        the gap from this instant to the trace end (recomputed per
+        replica by ``tools/trace_summarize.py``)."""
+        self.tracer.instant(index, "dead", t, cat="fault",
+                            args={"replica": index})
+        self.metrics.counter("replicas_lost_total").inc()
+        self.metrics.gauge("replica_down_since_s", series=False,
+                           replica=str(index)).set(t)
+
+    def on_worker_failure(self, index: int, t: float, error: str) -> None:
+        """An executor call on replica ``index``'s worker raised (or hit
+        its ``call_timeout``) — surfaced as a structured failure."""
+        self.tracer.instant(CONTROL_TRACK, "worker-failure", t,
+                            cat="fault",
+                            args={"replica": index, "error": error})
+        self.metrics.counter("worker_failures_total").inc()
+
+    def on_request_failed(self, t: float, req, retries: int) -> None:
+        """The runtime gave up on a request (retry budget exhausted or
+        orphaned at run end)."""
+        self.tracer.instant(CONTROL_TRACK, "request-failed", t,
+                            cat="fault",
+                            args={"req_id": req.req_id,
+                                  "retries": int(retries)})
+        self.metrics.counter("requests_failed_total").inc()
+
     # ------------------------------------------- executor / worker hooks
     # (may run on per-replica worker threads)
 

@@ -17,9 +17,11 @@ as ``ServingRuntime(..., obs=...)`` for request-lifecycle tracing and
 live metrics (``export_trace(path)`` writes Perfetto-loadable Chrome
 trace JSON).
 """
-from repro.runtime.actor import ReplicaWorker
+from repro.runtime.actor import ReplicaWorker, WorkerTimeout
 from repro.runtime.executor import (CostModelExecutor, EngineExecutor,
                                     Executor)
+from repro.runtime.faults import (AvailabilityWatcher, FaultEvent,
+                                  FaultInjector, FaultPlan, spot_schedule)
 from repro.runtime.kvcache import (BlockAllocator, KVCacheManager,
                                    PagedEngineCache, make_kv_manager,
                                    num_kv_blocks)
@@ -31,10 +33,11 @@ from repro.runtime.replica import PendingEvent, ReplicaRuntime
 from repro.runtime.router import AssignmentRouter
 
 __all__ = [
-    "ArrivalSource", "AssignmentRouter", "BlockAllocator",
-    "CostModelExecutor", "EngineExecutor", "Executor", "KVCacheManager",
+    "ArrivalSource", "AssignmentRouter", "AvailabilityWatcher",
+    "BlockAllocator", "CostModelExecutor", "EngineExecutor", "Executor",
+    "FaultEvent", "FaultInjector", "FaultPlan", "KVCacheManager",
     "LiveSource", "PagedEngineCache", "PendingEvent", "Phase",
     "ReplanEvent", "ReplicaRuntime", "ReplicaWorker", "RequestState",
     "RuntimeResult", "SLO", "ServingRuntime", "TraceSource",
-    "make_kv_manager", "num_kv_blocks",
+    "WorkerTimeout", "make_kv_manager", "num_kv_blocks", "spot_schedule",
 ]

@@ -24,18 +24,34 @@ import contextlib
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Callable, Optional
 
 
+class WorkerTimeout(Exception):
+    """A worker call exceeded its ``call_timeout`` — the device call hung
+    (driver wedge, reclaimed accelerator, ...).  Raised *through the
+    future*, so the orchestrator sees it exactly like an executor
+    exception: a structured per-replica failure instead of a stuck event
+    heap."""
+
+
 class ReplicaWorker:
-    """One mailbox thread executing a replica's backend calls in order."""
+    """One mailbox thread executing a replica's backend calls in order.
+
+    ``call_timeout`` (seconds, wall clock) bounds each submitted call:
+    when it expires before the call completes, the future fails with
+    :class:`WorkerTimeout` and the worker marks itself dead — its thread
+    may still be wedged inside the device call, so the mailbox cannot be
+    trusted for further work; the owner builds a fresh worker (the
+    orchestrator already recreates dead workers lazily)."""
 
     def __init__(self, name: str, device: Optional[object] = None,
-                 obs=None):
+                 obs=None, call_timeout: Optional[float] = None):
         self.name = name
         self.device = device
         self.obs = obs
+        self.call_timeout = call_timeout
         self._mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
         self._closed = False
         self._thread = threading.Thread(target=self._loop, name=name,
@@ -55,7 +71,27 @@ class ReplicaWorker:
             raise RuntimeError(f"worker {self.name} is closed")
         fut: Future = Future()
         self._mailbox.put((fn, fut))
+        if self.call_timeout is not None:
+            self._arm_timeout(fut)
         return fut
+
+    def _arm_timeout(self, fut: Future) -> None:
+        def expire() -> None:
+            if fut.done():
+                return
+            # Mark dead *before* failing the future: the orchestrator's
+            # error path checks ``alive`` to decide whether to rebuild.
+            self._closed = True
+            try:
+                fut.set_exception(WorkerTimeout(
+                    f"worker {self.name} call exceeded "
+                    f"{self.call_timeout}s"))
+            except InvalidStateError:
+                pass            # completed in the race window — fine
+        timer = threading.Timer(self.call_timeout, expire)
+        timer.daemon = True
+        timer.start()
+        fut.add_done_callback(lambda _f: timer.cancel())
 
     def _device_scope(self):
         if self.device is None:
@@ -74,15 +110,25 @@ class ReplicaWorker:
             try:
                 with self._device_scope():
                     if self.obs is None:
-                        fut.set_result(fn())
+                        self._finish(fut, fn())
                     else:
                         t0 = time.perf_counter()
                         result = fn()
                         self.obs.on_worker_task(self.name, t0,
                                                 time.perf_counter())
-                        fut.set_result(result)
+                        self._finish(fut, result)
             except BaseException as exc:  # propagate through the future
-                fut.set_exception(exc)
+                try:
+                    fut.set_exception(exc)
+                except InvalidStateError:
+                    pass            # already failed by the timeout timer
+
+    @staticmethod
+    def _finish(fut: Future, result: object) -> None:
+        try:
+            fut.set_result(result)
+        except InvalidStateError:
+            pass          # the timeout timer already failed this future
 
     def close(self, timeout: float = 5.0) -> None:
         """Drain the mailbox and stop the thread (idempotent)."""

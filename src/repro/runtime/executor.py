@@ -187,6 +187,32 @@ class Executor(abc.ABC):
         """Discard a swapped-out request's host copy (it migrated away and
         will recompute elsewhere)."""
 
+    # ------------------------------------------- cross-replica swap restore
+
+    def export_swapped(self, rep: int, state: RequestState):
+        """Detach a swapped-out request's host-tier payload from replica
+        ``rep`` so a *different* replica can restore it (graceful spot
+        reclaim: the doomed replica's host copies migrate with their
+        requests).  Returns an opaque payload for :meth:`import_swapped`,
+        or None when the backend holds nothing to migrate — the caller
+        then degrades the request to recompute."""
+        return None
+
+    def import_swapped(self, rep: int, state: RequestState,
+                       payload) -> bool:
+        """Adopt a payload from :meth:`export_swapped` into replica
+        ``rep``'s host tier, so the request swap-readmits there as if it
+        had been swapped out locally.  Returns False (state unchanged)
+        when the payload cannot be adopted (shape mismatch across
+        heterogeneous replicas, no paged storage, ...)."""
+        return False
+
+    def teardown(self, rep: int) -> None:
+        """Replica ``rep`` was torn down by a fault (spot reclaim /
+        crash): drop whatever backend state only that replica's hardware
+        held.  Called after the orchestrator has drained/exported every
+        in-flight request; the replica is never executed again."""
+
 
 class CostModelExecutor(Executor):
     """Analytical backend: step durations from the paper's cost model.
@@ -329,6 +355,18 @@ class CostModelExecutor(Executor):
             offs.append(t)
         self._observe(rep, "swapin", t)
         return offs
+
+    # ------------------------------------------- cross-replica swap restore
+
+    def export_swapped(self, rep: int, state: RequestState):
+        # Symbolic backend: the block accounting migrates through the KV
+        # managers' own export/import (the orchestrator's job); a sentinel
+        # marks "payload exists" so both backends walk the same branch.
+        return ()
+
+    def import_swapped(self, rep: int, state: RequestState,
+                       payload) -> bool:
+        return payload is not None
 
 
 class _EngineGroup:
@@ -841,3 +879,29 @@ class EngineExecutor(Executor):
         paged = self._paged[rep]
         if paged is not None:
             paged.drop_swapped(state.req.req_id)
+
+    # ------------------------------------------- cross-replica swap restore
+
+    def export_swapped(self, rep: int, state: RequestState):
+        paged = self._paged[rep]
+        if paged is None:
+            return None
+        return paged.export_swapped(state.req.req_id)
+
+    def import_swapped(self, rep: int, state: RequestState,
+                       payload) -> bool:
+        paged = self._paged_cache(rep)
+        if paged is None or payload is None:
+            return False
+        return paged.import_swapped(state.req.req_id, payload)
+
+    def teardown(self, rep: int) -> None:
+        # The dead replica's paged KV pools (device arrays) and host-tier
+        # slot accounting must not outlive the fault: exported payloads
+        # are already detached NumPy, so dropping the cache frees the
+        # rest.  The engine itself stays (its weights may be shared with
+        # surviving replicas of the same model).
+        paged = self._paged[rep]
+        if paged is not None and paged._host_pool is not None:
+            paged._host_pool.reset()
+        self._paged[rep] = None

@@ -1,0 +1,248 @@
+"""Fault injection and availability-driven replanning for spot GPU churn.
+
+The paper's planner optimizes under a *real-time availability snapshot*;
+this module makes that snapshot move.  A :class:`FaultInjector` feeds a
+deterministic schedule of spot reclaims / crashes / recoveries into the
+runtime's global event heap (the orchestrator treats fault times as
+barriers exactly like scheduled replans), and an
+:class:`AvailabilityWatcher` folds each fault into the spec's availability
+snapshot and re-solves the plan through ``spec.with_availability`` — the
+same ``replan`` path a human operator would drive by hand.
+
+Determinism contract: a schedule is *pure data* — either scripted
+(:class:`FaultPlan`) or materialized up front from a seeded generator
+(:func:`spot_schedule`) — and victim selection in the orchestrator depends
+only on plan structure (config device counts and replica indices), never
+on backend timing.  The same seed therefore produces identical fault logs
+on the cost and engine backends.
+
+Fault semantics (see README "Fault tolerance & spot churn"):
+
+* ``"reclaim"`` — a spot reclaim with ``grace`` seconds of notice.  The
+  orchestrator drains the doomed replica inside the grace window: live
+  requests' KV swaps out to the host tier and migrates to a surviving
+  replica (cross-replica swap restore), queued work migrates untouched.
+* ``"crash"`` — an ungraceful failure: device *and* host-tier state are
+  lost; in-flight requests requeue elsewhere with a bounded per-request
+  retry budget and re-serve from scratch.
+* ``"recover"`` — capacity returns to the pool; the watcher replans and
+  parked (unroutable) requests re-dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.plan import ServingPlan
+from repro.core.spec import DeploymentSpec
+from repro.core.spec import replan as spec_replan
+
+FAULT_KINDS = ("reclaim", "crash", "recover")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled availability change for a GPU type.
+
+    ``count`` is in *devices* of ``gpu_type`` (a replica whose config uses
+    two of them dies when either is reclaimed).  ``grace`` only applies to
+    ``kind="reclaim"``: seconds of advance notice the orchestrator may
+    spend swap-draining the victim before the capacity disappears.
+    """
+
+    time: float
+    kind: str
+    gpu_type: str
+    count: int = 1
+    grace: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+        if self.time < 0 or not math.isfinite(self.time):
+            raise ValueError(f"fault time must be finite and >= 0, "
+                             f"got {self.time}")
+        if self.count < 1:
+            raise ValueError(f"fault count must be >= 1, got {self.count}")
+        if self.grace < 0:
+            raise ValueError(f"grace must be >= 0, got {self.grace}")
+        if self.grace > 0 and self.kind != "reclaim":
+            raise ValueError(
+                f'grace only applies to kind="reclaim", got '
+                f"kind={self.kind!r} grace={self.grace}")
+
+
+class FaultPlan:
+    """An ordered, immutable schedule of :class:`FaultEvent`\\ s.
+
+    Events sort by time (stable: ties keep authoring order), so a plan is
+    a reproducible script independent of how it was assembled.
+    """
+
+    def __init__(self, events: Iterable[FaultEvent]):
+        evs = list(events)
+        for e in evs:
+            if not isinstance(e, FaultEvent):
+                raise TypeError(f"FaultPlan takes FaultEvents, got {e!r}")
+        self.events: Sequence[FaultEvent] = tuple(
+            sorted(evs, key=lambda e: e.time))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __repr__(self) -> str:
+        return f"FaultPlan({list(self.events)!r})"
+
+
+def spot_schedule(
+    gpu_types: Sequence[str],
+    *,
+    horizon: float,
+    seed: int = 0,
+    mtbf_s: float = 60.0,
+    mttr_s: float = 20.0,
+    reclaim_frac: float = 1.0,
+    grace_s: float = 5.0,
+) -> FaultPlan:
+    """A stochastic-but-reproducible spot-churn schedule.
+
+    Each GPU type alternates up/down phases with exponential durations
+    (mean ``mtbf_s`` up, ``mttr_s`` down) over ``[0, horizon)``; each
+    failure is a graceful reclaim with probability ``reclaim_frac`` (grace
+    ``grace_s``), else an ungraceful crash.  The whole schedule is drawn
+    up front from one ``numpy`` generator, so a given ``(seed, args)``
+    pair is pure data — identical on every backend and every run.
+    """
+    if horizon <= 0 or not math.isfinite(horizon):
+        raise ValueError(f"horizon must be finite and > 0, got {horizon}")
+    if not 0.0 <= reclaim_frac <= 1.0:
+        raise ValueError(f"reclaim_frac must be in [0, 1], "
+                         f"got {reclaim_frac}")
+    rng = np.random.default_rng(seed)
+    events: List[FaultEvent] = []
+    # iterate types in sorted order so the single rng stream is
+    # insensitive to the caller's container ordering
+    for g in sorted(set(gpu_types)):
+        t = float(rng.exponential(mtbf_s))
+        while t < horizon:
+            graceful = bool(rng.random() < reclaim_frac)
+            events.append(FaultEvent(
+                time=t, kind="reclaim" if graceful else "crash",
+                gpu_type=g, grace=grace_s if graceful else 0.0))
+            t_up = t + float(rng.exponential(mttr_s))
+            if t_up >= horizon:
+                break
+            events.append(FaultEvent(time=t_up, kind="recover", gpu_type=g))
+            t = t_up + float(rng.exponential(mtbf_s))
+    return FaultPlan(events)
+
+
+class AvailabilityWatcher:
+    """Folds fault events into an availability snapshot and replans.
+
+    The watcher owns the *current* availability view: reclaims/crashes
+    decrement the affected type, recoveries restore it (clamped at the
+    spec's original pool — a recovery can't invent capacity the spec
+    never had).  :meth:`replan` re-solves through
+    ``spec.with_availability(snapshot)`` using the registered planner
+    strategy, or a custom ``planner`` callable (``planner(spec) ->
+    ServingPlan``) for tests/benchmarks whose plans don't come from the
+    registry.
+    """
+
+    def __init__(self, spec: DeploymentSpec, *, strategy: str = "milp",
+                 planner: Optional[Callable[[DeploymentSpec],
+                                            ServingPlan]] = None,
+                 plan_options: Optional[Mapping[str, object]] = None):
+        self.spec = spec
+        self.strategy = strategy
+        self.planner = planner
+        self.plan_options = dict(plan_options or {})
+        self.reset()
+
+    def reset(self) -> None:
+        """Restore the snapshot to the spec's original pool."""
+        self.availability: Dict[str, int] = dict(self.spec.availability)
+        self.replans = 0
+
+    def observe(self, event: FaultEvent) -> Dict[str, int]:
+        """Apply one fault event; returns the updated snapshot."""
+        base = int(self.spec.availability.get(event.gpu_type, 0))
+        cur = int(self.availability.get(event.gpu_type, 0))
+        if event.kind == "recover":
+            cur = min(base, cur + event.count)
+        else:
+            cur = max(0, cur - event.count)
+        self.availability[event.gpu_type] = cur
+        return dict(self.availability)
+
+    def replan(self, old_plan: ServingPlan) -> ServingPlan:
+        """Re-solve under the current snapshot (``spec.with_availability``)."""
+        spec = self.spec.with_availability(self.availability)
+        if self.planner is not None:
+            new_plan = self.planner(spec)
+        else:
+            new_plan = spec_replan(old_plan, spec, strategy=self.strategy,
+                                   **self.plan_options)
+        self.replans += 1       # count only replans that actually solved
+        return new_plan
+
+
+class FaultInjector:
+    """Runtime-facing cursor over a :class:`FaultPlan`.
+
+    The orchestrator polls :meth:`next_time` to fold the schedule into
+    its barrier computation and :meth:`pop`\\ s events as their times are
+    reached; applied events (with the deterministically chosen victim
+    replica indices) accumulate in :attr:`log` for cross-backend
+    equivalence checks.  An attached :class:`AvailabilityWatcher` makes
+    every fault drive a replan automatically.
+    """
+
+    def __init__(self, plan: FaultPlan | Iterable[FaultEvent], *,
+                 watcher: Optional[AvailabilityWatcher] = None):
+        if not isinstance(plan, FaultPlan):
+            plan = FaultPlan(plan)
+        self.plan = plan
+        self.watcher = watcher
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind the schedule (called by the runtime at run start)."""
+        self._pos = 0
+        # (time, kind, gpu_type, victim replica indices) per applied event
+        self.log: List[tuple] = []
+        if self.watcher is not None:
+            self.watcher.reset()
+
+    @property
+    def exhausted(self) -> bool:
+        return self._pos >= len(self.plan.events)
+
+    def next_time(self) -> float:
+        if self.exhausted:
+            return math.inf
+        return self.plan.events[self._pos].time
+
+    def pop(self) -> FaultEvent:
+        if self.exhausted:
+            raise IndexError("fault schedule exhausted")
+        ev = self.plan.events[self._pos]
+        self._pos += 1
+        return ev
+
+
+def as_injector(obj) -> FaultInjector:
+    """Coerce ``faults=`` arguments: an injector passes through, a
+    :class:`FaultPlan` (or plain list of events) wraps watcher-less."""
+    if isinstance(obj, FaultInjector):
+        return obj
+    return FaultInjector(obj)

@@ -146,6 +146,8 @@ class KVCacheManager:
         self.swapped_out_blocks = 0
         self.swapped_in_blocks = 0
         self.swap_drops = 0                 # swapped state discarded (migration)
+        self.swap_exports = 0               # swapped state migrated out (faults)
+        self.swap_imports = 0               # swapped state adopted from a peer
 
     # ------------------------------------------------------------ queries
 
@@ -471,6 +473,32 @@ class KVCacheManager:
         if self._swapped.pop(req_id, None) is not None:
             self.swap_drops += 1
 
+    def export_swapped(self, req_id: int) -> int:
+        """Detach a swapped-out request's host charge for cross-replica
+        migration (graceful spot-reclaim drain: the request's host copy
+        leaves with the request, not with the dying machine).  Returns the
+        block count to hand :meth:`import_swapped` on the target; 0 when
+        the request holds no swapped state here."""
+        held = self._swapped.pop(req_id, None)
+        if held is None:
+            return 0
+        self.swap_exports += 1
+        return held
+
+    def import_swapped(self, req_id: int, blocks: int) -> bool:
+        """Adopt a migrated request's swapped block set into *this*
+        replica's host tier (the receiving half of :meth:`export_swapped`).
+        Charged against the local host budget like any swapped copy, so a
+        full tier rejects the import and the request degrades to recompute.
+        Returns False (state unchanged) when it does not fit."""
+        if blocks <= 0 or req_id in self._swapped or req_id in self._held:
+            return False
+        if self.host_free_blocks < blocks:
+            return False
+        self._swapped[req_id] = int(blocks)
+        self.swap_imports += 1
+        return True
+
     def reset(self) -> None:
         self._held.clear()
         self._index.clear()
@@ -499,6 +527,8 @@ class KVCacheManager:
         self.swapped_out_blocks = 0
         self.swapped_in_blocks = 0
         self.swap_drops = 0
+        self.swap_exports = 0
+        self.swap_imports = 0
 
 
 def logical_tokens(input_len: int, quota: int, remaining: int) -> int:

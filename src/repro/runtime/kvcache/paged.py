@@ -445,3 +445,36 @@ class PagedEngineCache:
     def drop_swapped(self, req_id: int) -> None:
         """Discard a swapped-out request's host copy (migration path)."""
         self._host_swapped.pop(req_id, None)
+
+    # ----------------------------------------------- cross-replica migration
+
+    def export_swapped(self, req_id: int) -> Optional[tuple]:
+        """Detach a swapped-out request's saved host buffers so they can
+        migrate to another replica of the same model (graceful spot-reclaim
+        drain).  The payload is pure host-side NumPy — ``(per-layer k/v
+        rows, length, last token)`` — so it survives this replica's device
+        state being torn down.  Returns None when nothing is swapped."""
+        return self._host_swapped.pop(req_id, None)
+
+    def import_swapped(self, req_id: int, payload: tuple) -> bool:
+        """Adopt a migrated request's saved buffers into *this* replica's
+        swap staging area (the receiving half of :meth:`export_swapped`);
+        a later :meth:`swap_in_request` restores them exactly like a local
+        swap.  The payload's row shapes must match this pool's layout
+        (same arch / block size) — a mismatched import is rejected and the
+        caller degrades the request to recompute.  Returns success."""
+        if payload is None or req_id in self._host_swapped \
+                or req_id in self._slot_of:
+            return False
+        saved, length, _last = payload
+        if len(saved) != len(self.pools):
+            return False
+        np_, nb, bs, kv, dh = saved[0]["k"].shape
+        pool_shape = self.pools[0]["k"].shape
+        if (np_, bs, kv, dh) != (pool_shape[0], pool_shape[2],
+                                 pool_shape[3], pool_shape[4]):
+            return False
+        if nb > self.blocks_per_seq or length > self.t_max:
+            return False
+        self._host_swapped[req_id] = payload
+        return True

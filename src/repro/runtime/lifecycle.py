@@ -52,6 +52,8 @@ class RequestState:
     admission_index: int = -1      # replica-local admission sequence number
     swapped: bool = False          # queued with KV parked in the host tier
     swap_ins: int = 0              # times readmitted by swap-in (not prefill)
+    retries: int = 0               # re-serves forced by replica faults
+    failed: bool = False           # dropped: retry budget exhausted / orphaned
 
     @property
     def ttft(self) -> float:
@@ -117,6 +119,17 @@ class RuntimeResult:
         """Total KV-cache evictions (each re-enters the queue and pays a
         recompute prefill)."""
         return sum(r.preemptions for r in self.records)
+
+    @property
+    def num_failed(self) -> int:
+        """Requests the runtime gave up on under faults (retry budget
+        exhausted, or no capacity ever recovered to serve them)."""
+        return sum(1 for r in self.records if r.failed)
+
+    @property
+    def num_retries(self) -> int:
+        """Total fault-forced re-serves across all requests."""
+        return sum(r.retries for r in self.records)
 
     @cached_property
     def latencies(self) -> np.ndarray:

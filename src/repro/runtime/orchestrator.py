@@ -64,6 +64,7 @@ from repro.core.workloads import Trace
 
 from repro.runtime.actor import ReplicaWorker
 from repro.runtime.executor import Executor
+from repro.runtime.faults import FaultEvent, FaultInjector, as_injector
 from repro.runtime.lifecycle import RequestState, RuntimeResult
 from repro.runtime.replica import ReplicaRuntime
 from repro.runtime.router import AssignmentRouter
@@ -255,14 +256,25 @@ class ServingRuntime:
                  mode: str = "events", preempt_policy: str = "latest",
                  preempt_mode: str = "recompute",
                  on_done: Optional[Callable[[RequestState], None]] = None,
-                 obs=None, clock: Optional[Callable[[], float]] = None):
+                 obs=None, clock: Optional[Callable[[], float]] = None,
+                 retry_budget: int = 2,
+                 worker_timeout: Optional[float] = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if retry_budget < 0:
+            raise ValueError(f"retry_budget must be >= 0, "
+                             f"got {retry_budget}")
         self.plan = plan
         self.executor = executor
         self.mode = mode
         self.preempt_policy = preempt_policy
         self.preempt_mode = preempt_mode
+        # Fault tolerance: how many fault-forced re-serves one request may
+        # pay before the runtime gives up on it (``RequestState.failed``),
+        # and the wall-clock bound on each worker call (None = unbounded;
+        # see repro.runtime.actor.WorkerTimeout).
+        self.retry_budget = int(retry_budget)
+        self.worker_timeout = worker_timeout
         self.on_done = on_done    # fired (orchestrator thread) per finished
         # Optional repro.obs.Observability — a pure observer: every hook
         # below is behind `is not None` (the disabled fast path) and only
@@ -298,6 +310,12 @@ class ServingRuntime:
         self.router = self._make_router(self.plan, self._route_map)
         self.info: Dict[str, object] = {}
         self.scale_log: List[object] = []     # ScaleDecision records
+        # Fault recovery: requests displaced with nowhere to go wait here
+        # for capacity to recover (re-dispatched after every fault/replan;
+        # failed if the run ends first), and exported host-tier payloads
+        # ride along keyed by req_id until their request lands somewhere.
+        self._orphans: List[RequestState] = []
+        self._swap_payloads: Dict[int, tuple] = {}
 
     def _make_router(self, plan: ServingPlan,
                      route_map: List[ReplicaRuntime]) -> AssignmentRouter:
@@ -331,12 +349,20 @@ class ServingRuntime:
             if self.on_done is not None:
                 self.on_done(state)    # unblock any waiting handle
             return
+        target = self._route_map[j]
+        if target.dead:
+            # Routed onto a faulted replica (no watcher replanned around
+            # it): park until capacity recovers instead of queueing on a
+            # corpse — at run end still-parked requests fail.
+            self._orphans.append(state)
+            self._bump("requests_orphaned", 1)
+            return
         state.routed_at = t
         if self.obs is not None:
             warmth, fallback = self.router.last_pick
-            self.obs.on_route(t, state.req, self._route_map[j].index,
+            self.obs.on_route(t, state.req, target.index,
                               warmth, fallback)
-        self._route_map[j].enqueue(state)
+        target.enqueue(state)
 
     # -------------------------------------------------------------- replan
 
@@ -406,6 +432,155 @@ class ServingRuntime:
     def _bump(self, key: str, n: float) -> None:
         self.info[key] = float(self.info.get(key, 0)) + n
 
+    # --------------------------------------------------------------- faults
+
+    def _fault_victims(self, event: FaultEvent) -> List[ReplicaRuntime]:
+        """Deterministic victim choice for a capacity-loss event: live
+        replicas whose config uses the faulted GPU type, highest index
+        first, until ``event.count`` devices are reclaimed.  Depends only
+        on plan structure (device counts and replica indices) — never on
+        load or backend timing — so the cost and engine backends kill
+        identical replicas for the same schedule."""
+        victims: List[ReplicaRuntime] = []
+        need = event.count
+        for rep in sorted(self.replicas, key=lambda r: -r.index):
+            if rep.dead or rep.draining:
+                continue
+            used = rep.config.device_counts().get(event.gpu_type, 0)
+            if used <= 0:
+                continue
+            victims.append(rep)
+            need -= used
+            if need <= 0:
+                break
+        return victims
+
+    def _fail_request(self, state: RequestState, t: float) -> None:
+        """Give up on a request (retry budget exhausted, or the run ended
+        with it still orphaned): terminal for its handle, never served."""
+        state.failed = True
+        self._bump("requests_failed", 1)
+        if self.obs is not None:
+            self.obs.on_request_failed(t, state.req, state.retries)
+        if self.on_done is not None:
+            self.on_done(state)      # unblock any waiting handle
+
+    def _kill_replica(self, rep: ReplicaRuntime, t: float, *,
+                      grace: float = 0.0,
+                      extra: Sequence[RequestState] = ()
+                      ) -> List[RequestState]:
+        """Tear one replica down (fault or wedged worker) and sort its
+        requests into migrate / requeue / fail; returns everything that
+        still needs a new home."""
+        displaced, lost, payloads = rep.force_drain(t, grace=grace,
+                                                    extra=extra)
+        self._swap_payloads.update(payloads)
+        self._bump("replicas_lost", 1)
+        if self.obs is not None:
+            self.obs.on_replica_dead(rep.index, t)
+        worker = self._workers.pop(rep.index, None)
+        if worker is not None:
+            worker.close(timeout=0.1)   # its thread may be wedged: don't
+                                        # block the serving loop on it
+        self.executor.teardown(rep.index)   # payloads are already detached
+        out: List[RequestState] = []
+        for s in displaced:
+            if s.retries > self.retry_budget:
+                self._swap_payloads.pop(s.req.req_id, None)
+                self._fail_request(s, t)
+            else:
+                out.append(s)
+        self._bump("requests_requeued",
+                   sum(1 for s in lost if not s.failed))
+        return out
+
+    def _dispatch_fault(self, state: RequestState, t: float) -> None:
+        """Re-route a fault-displaced request.  A swap-migrated request
+        adopts its exported host payload on the target (symbolic blocks
+        first, then the physical rows; either refusing degrades it to
+        recompute).  With no live target it parks in the orphan pen."""
+        j = self.router.route(state.req)
+        target = self._route_map[j] if j is not None else None
+        if target is None or target.dead or target.draining:
+            self._orphans.append(state)
+            self._bump("requests_orphaned", 1)
+            return
+        rid = state.req.req_id
+        payload = self._swap_payloads.pop(rid, None)
+        if state.swapped:
+            ok = False
+            if payload is not None:
+                sym, phys = payload
+                mgr = self.executor.kv_manager(target.index)
+                if mgr is not None and mgr.import_swapped(rid, sym):
+                    ok = self.executor.import_swapped(target.index, state,
+                                                      phys)
+                    if not ok:
+                        mgr.drop_swapped(rid)
+            if ok:
+                self._bump("swap_migrations", 1)
+            else:
+                state.swapped = False
+                state.remaining = 0
+                self._bump("swap_migrations_failed", 1)
+        state.routed_at = t
+        if self.obs is not None:
+            warmth, fallback = self.router.last_pick
+            self.obs.on_route(t, state.req, target.index, warmth, fallback)
+        target.enqueue(state)
+
+    def _apply_fault(self, event: FaultEvent,
+                     injector: FaultInjector) -> None:
+        """Fold one fault event into the live pool: kill victims (with
+        grace-window swap draining on a reclaim), let the attached
+        watcher replan under the new availability, then re-dispatch the
+        displaced requests and any parked orphans."""
+        t = event.time
+        victims = ([] if event.kind == "recover"
+                   else self._fault_victims(event))
+        injector.log.append((t, event.kind, event.gpu_type,
+                             tuple(r.index for r in victims)))
+        self._bump("faults_injected", 1)
+        self._bump(f"fault_{event.kind}s", 1)
+        if self.obs is not None:
+            self.obs.on_fault(t, event.kind, event.gpu_type,
+                              [r.index for r in victims])
+        displaced: List[RequestState] = []
+        grace = event.grace if event.kind == "reclaim" else 0.0
+        for rep in victims:
+            displaced.extend(self._kill_replica(rep, t, grace=grace))
+        watcher = injector.watcher
+        if watcher is not None:
+            watcher.observe(event)
+            try:
+                new_plan = watcher.replan(self.router.plan)
+            except Exception:
+                # Infeasible under the new snapshot (e.g. the pool went
+                # to zero): keep serving on what's left; orphans wait.
+                new_plan = None
+                self._bump("fault_replan_failures", 1)
+            if new_plan is not None:
+                self._apply_replan(ReplanEvent(time=t, plan=new_plan))
+                self._bump("fault_replans", 1)
+        parked, self._orphans = self._orphans, []
+        for state in sorted(parked + displaced,
+                            key=lambda s: s.req.arrival):
+            self._dispatch_fault(state, t)
+
+    def _worker_failure(self, rep: ReplicaRuntime, pending,
+                        exc: BaseException) -> None:
+        """An executor call failed (worker exception or
+        :class:`~repro.runtime.actor.WorkerTimeout`): structured failure
+        — the replica is treated as crashed and its requests requeue —
+        instead of a corrupted or hung event heap."""
+        self._bump("worker_failures", 1)
+        if self.obs is not None:
+            self.obs.on_worker_failure(rep.index, rep.now, repr(exc))
+        displaced = self._kill_replica(rep, rep.now, grace=0.0,
+                                       extra=pending.batch)
+        for state in sorted(displaced, key=lambda s: s.req.arrival):
+            self._dispatch_fault(state, rep.now)
+
     # ---------------------------------------------------------- autoscaling
 
     def _snapshot(self):
@@ -420,7 +595,7 @@ class ServingRuntime:
             snaps.append(ReplicaSnapshot(
                 index=r.index, config=r.config, queue_len=len(r.queue),
                 active=len(r.active), kv_used_frac=float(kv),
-                draining=r.draining,
+                draining=r.draining, dead=r.dead,
                 step_time_s=self.executor.step_time_estimate(r.index)))
         return snaps
 
@@ -441,29 +616,37 @@ class ServingRuntime:
 
     def run(self, trace: Trace, *,
             replan: Union[ReplanEvent, Sequence[ReplanEvent], None] = None,
-            autoscale=None) -> RuntimeResult:
+            autoscale=None, faults=None) -> RuntimeResult:
         """Serve a recorded trace (thin wrapper over :meth:`run_source`
         with a :class:`TraceSource`; byte-identical to the historical
         trace loop)."""
         return self.run_source(TraceSource(trace), replan=replan,
-                               autoscale=autoscale)
+                               autoscale=autoscale, faults=faults)
 
     def run_source(self, source: ArrivalSource, *,
                    replan: Union[ReplanEvent, Sequence[ReplanEvent],
                                  None] = None,
-                   autoscale=None) -> RuntimeResult:
+                   autoscale=None, faults=None) -> RuntimeResult:
         """Serve every arrival the source produces; returns per-request
         records + aggregate metrics.
 
         ``replan`` passes pre-planned :class:`ReplanEvent` s; ``autoscale``
         optionally passes a :class:`~repro.core.scheduler.ScalePolicy`
-        that emits further replans online from observed load.  With a
-        ``live`` source, replan/tick times are wall-clock offsets from the
-        run start and the loop blocks while idle instead of returning.
+        that emits further replans online from observed load; ``faults``
+        passes a :class:`~repro.runtime.faults.FaultInjector` (or a
+        :class:`~repro.runtime.faults.FaultPlan` / plain event list) whose
+        schedule is folded into the barrier computation exactly like
+        scheduled replans.  With a ``live`` source, replan/tick/fault
+        times are wall-clock offsets from the run start and the loop
+        blocks while idle instead of returning.
         """
         events: List[ReplanEvent] = (
             [replan] if isinstance(replan, ReplanEvent)
             else sorted(replan, key=lambda e: e.time) if replan else [])
+        injector: Optional[FaultInjector] = None
+        if faults is not None:
+            injector = as_injector(faults)
+            injector.reset()
         source.start()
         if self.obs is not None:
             self.obs.begin_run(self.plan, live=source.live)
@@ -477,7 +660,9 @@ class ServingRuntime:
             while True:
                 next_replan = (events[ei].time if ei < len(events)
                                else math.inf)
-                barrier = min(next_replan, tick)
+                next_fault = (injector.next_time() if injector is not None
+                              else math.inf)
+                barrier = min(next_replan, tick, next_fault)
                 for state in source.take_until(barrier):
                     self._dispatch(state)
                 if source.live:
@@ -486,18 +671,29 @@ class ServingRuntime:
                     self._advance_all(until=barrier)
                 if barrier == math.inf:
                     break
-                if next_replan <= tick:
+                if next_fault <= barrier:
+                    # fault first on ties: a simultaneous replan then sees
+                    # the post-fault pool, like a real availability feed
+                    self._apply_fault(injector.pop(), injector)
+                elif next_replan <= tick:
                     self._apply_replan(events[ei])
                     ei += 1
                 else:
                     self._autoscale_tick(tick, autoscale)
                     tick += autoscale.interval
                     if (source.exhausted() and ei >= len(events)
+                            and (injector is None or injector.exhausted)
                             and all(r.next_event_time() == math.inf
                                     for r in self.replicas)):
                         break     # fully served and closed: stop ticking
         finally:
             self._close_workers()
+        if self._orphans:
+            # the schedule never brought capacity back for these
+            parked, self._orphans = self._orphans, []
+            t_end = max([r.now for r in self.replicas] or [0.0])
+            for state in parked:
+                self._fail_request(state, t_end)
         states = source.records()
         busy = np.array([r.busy for r in self.replicas])
         info = dict(self.info)
@@ -516,6 +712,8 @@ class ServingRuntime:
                 "completed": r.completed,
                 "preemptions": r.preempted,
                 "draining": r.draining,
+                "dead": r.dead,
+                "dead_at": r.dead_at,
                 "kv_peak_blocks": mgr.peak_used if mgr is not None else None,
                 "kv_blocks": mgr.num_blocks if mgr is not None else None,
                 "prefix_hit_rate": (mgr.prefix_hit_rate
@@ -554,6 +752,12 @@ class ServingRuntime:
             info["prefix_hit_tokens"] = float(hit_tok)
         if autoscale is not None:
             info["autoscale_events"] = float(len(self.scale_log))
+        if injector is not None:
+            # (time, kind, gpu_type, victim indices) per applied event —
+            # backend-independent by construction, asserted in tests
+            info["fault_log"] = list(injector.log)
+            if injector.watcher is not None:
+                info["watcher_replans"] = float(injector.watcher.replans)
         return RuntimeResult(records=states, per_replica_busy=busy,
                              info=info)
 
@@ -583,11 +787,31 @@ class ServingRuntime:
         while heap:
             _, i = heapq.heappop(heap)
             rep = self.replicas[i]
-            if not rep.step_event(until):
+            pending = rep.begin_step(until)
+            if pending is None:
                 continue
+            try:
+                result = pending.execute(self.executor, i)
+            except Exception as exc:
+                self._worker_failure(rep, pending, exc)
+                self._repush(heap, until, busy=())
+                continue
+            rep.complete_step(pending, result)
             t2 = rep.next_event_time()
             if t2 < until:
                 heapq.heappush(heap, (t2, i))
+
+    def _repush(self, heap: List, until: float, busy) -> None:
+        """After a worker failure re-dispatched requests, idle replicas
+        (absent from the heap) may suddenly have work: rebuild the heap
+        from scratch — except replicas with an executor call in flight."""
+        heap.clear()
+        for r in self.replicas:
+            if r.index in busy:
+                continue
+            t = r.next_event_time()
+            if t < until:
+                heapq.heappush(heap, (t, r.index))
 
     def _advance_concurrent(self, until: float = math.inf) -> None:
         """Event heap with overlapped execution: planned events are
@@ -603,6 +827,8 @@ class ServingRuntime:
         while heap or inflight:
             while heap:
                 _, i = heapq.heappop(heap)
+                if any(r.index == i for r, _ in inflight.values()):
+                    continue       # stale duplicate: the replica is busy
                 rep = self.replicas[i]
                 pending = rep.begin_step(until)
                 if pending is None:
@@ -616,7 +842,15 @@ class ServingRuntime:
                               return_when=cf.FIRST_COMPLETED)
             for fut in done:
                 rep, pending = inflight.pop(fut)
-                rep.complete_step(pending, fut.result())
+                try:
+                    result = fut.result()
+                except Exception as exc:
+                    self._worker_failure(rep, pending, exc)
+                    self._repush(heap, until,
+                                 busy={r.index
+                                       for r, _ in inflight.values()})
+                    continue
+                rep.complete_step(pending, result)
                 t2 = rep.next_event_time()
                 if t2 < until:
                     heapq.heappush(heap, (t2, rep.index))
@@ -649,7 +883,12 @@ class ServingRuntime:
             for fut in done:
                 rep, pending = inflight.pop(fut)
                 busy.discard(rep.index)
-                rep.complete_step(pending, fut.result())
+                try:
+                    result = fut.result()
+                except Exception as exc:
+                    self._worker_failure(rep, pending, exc)
+                    continue
+                rep.complete_step(pending, result)
             for state in source.take_until(until):
                 self._dispatch(state)
             launched = False
@@ -670,9 +909,12 @@ class ServingRuntime:
                     busy.add(rep.index)
                     fut.add_done_callback(lambda _f: source.kick())
                 else:
-                    rep.complete_step(pending,
-                                      pending.execute(self.executor,
-                                                      rep.index))
+                    try:
+                        result = pending.execute(self.executor, rep.index)
+                    except Exception as exc:
+                        self._worker_failure(rep, pending, exc)
+                        continue
+                    rep.complete_step(pending, result)
             if launched or done:
                 continue
             if not inflight:
@@ -716,7 +958,8 @@ class ServingRuntime:
             if device_for is not None:
                 device = device_for(index)
             worker = ReplicaWorker(f"replica-worker-{index}", device=device,
-                                   obs=self.obs)
+                                   obs=self.obs,
+                                   call_timeout=self.worker_timeout)
             self._workers[index] = worker
         return worker
 

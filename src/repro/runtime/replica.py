@@ -70,7 +70,7 @@ from __future__ import annotations
 
 import bisect
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.plan import Config
 
@@ -146,6 +146,8 @@ class ReplicaRuntime:
         self.completed = 0
         self.preempted = 0
         self.draining = False
+        self.dead = False             # torn down by a fault: never serves again
+        self.dead_at = math.nan
         self._admission_seq = 0
         # event mode: after a completed event, whether the next event should
         # attempt admission before decoding (mirrors the sequential step's
@@ -174,6 +176,95 @@ class ReplicaRuntime:
                 s.swapped = False
                 s.remaining = 0
         return stripped
+
+    def force_drain(self, t: float, *, grace: float = 0.0,
+                    extra: Sequence[RequestState] = ()
+                    ) -> Tuple[List[RequestState], List[RequestState],
+                               Dict[int, tuple]]:
+        """Tear this replica down at time ``t`` (spot reclaim or crash):
+        the fault-driven counterpart of the replan ``draining`` path,
+        except nothing gets to finish here — the device is going away.
+
+        With ``grace > 0`` (a reclaim with notice) live requests swap out
+        to the host tier in admission order for as long as the modeled
+        copy-out time fits the remaining grace budget, and their host
+        payloads are *exported* for adoption by a surviving replica
+        (cross-replica swap restore); already-parked host copies of queued
+        requests travel for free.  Everything that doesn't fit the window
+        — and everything on an ungraceful crash, including the host tier
+        itself — loses its KV state and degrades to a from-scratch
+        re-serve (one ``retries`` tick).  ``extra`` carries requests in a
+        planned-but-uncommitted event (a prefill group is in neither
+        ``active`` nor ``queue``).
+
+        Returns ``(displaced, lost, payloads)``: every request the caller
+        must re-route (in admission order, then queue order), the subset
+        whose work was lost (retry accounting), and the exported host
+        payloads by req_id (``(symbolic blocks, physical payload)``).
+        """
+        self.dead = True
+        self.dead_at = t
+        self.draining = True
+        self.now = max(self.now, t)
+        mgr = self.executor.kv_manager(self.index)
+        payloads: Dict[int, tuple] = {}
+        lost: List[RequestState] = []
+        seen = set()
+        affected: List[RequestState] = []
+        for s in list(self.active) + list(extra):
+            if id(s) not in seen:
+                seen.add(id(s))
+                affected.append(s)
+        affected.sort(key=lambda s: s.admission_index)
+        budget = float(grace)
+        for s in affected:
+            rid = s.req.req_id
+            use_swap = False
+            if budget > 0 and self.executor.can_swap(self.index, s):
+                swap_s, _ = self.executor.preempt_costs(self.index, s)
+                if swap_s <= budget:
+                    use_swap = True
+                    budget -= swap_s
+            if use_swap:
+                # Physical copy-out before the symbolic swap-out recycles
+                # the block ids (same order as ``_preempt``).
+                self.executor.swap_out(self.index, s)
+                mgr.swap_out(rid)
+                sym = mgr.export_swapped(rid)
+                phys = self.executor.export_swapped(self.index, s)
+                payloads[rid] = (sym, phys)
+                s.swapped = True
+                s.preemptions += 1
+                self.preempted += 1
+            else:
+                if mgr is not None:
+                    mgr.free(rid)
+                self.executor.preempt(self.index, s)
+                s.remaining = 0
+                s.swapped = False
+                s.retries += 1
+                lost.append(s)
+            s.phase = Phase.QUEUED
+        queued, self.queue = self.queue, []
+        for s in queued:
+            if not s.swapped:
+                continue            # nothing parked: plain queue migration
+            rid = s.req.req_id
+            if grace > 0:
+                sym = mgr.export_swapped(rid) if mgr is not None else 0
+                phys = self.executor.export_swapped(self.index, s)
+                payloads[rid] = (sym, phys)
+            else:
+                # the crash took the host tier with it
+                self.executor.drop_swapped(self.index, s)
+                if mgr is not None:
+                    mgr.drop_swapped(rid)
+                s.swapped = False
+                s.remaining = 0
+                s.retries += 1
+                lost.append(s)
+        self.active = []
+        return affected + queued, lost, payloads
 
     def _finish(self, state: RequestState) -> None:
         state.phase = Phase.DONE

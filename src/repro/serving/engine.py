@@ -141,6 +141,14 @@ class HostBlockPool:
     def free(self, slots: List[int]) -> None:
         self._free.extend(slots)
 
+    def reset(self) -> None:
+        """Release every slot at once — the teardown path when a fault
+        (spot reclaim / crash) kills the owning replica: the backing
+        arrays stay allocated (the pool object may be garbage-collected
+        wholesale) but the slot accounting returns to empty so nothing
+        reads stale occupancy from a dead replica's host tier."""
+        self._free = list(range(self.capacity - 1, -1, -1))
+
     def put(self, slots: List[int], pools, block_ids: List[int]) -> int:
         """Copy device blocks ``block_ids`` (one per slot) out of the
         per-layer ``pools`` into host ``slots``.  Returns bytes moved."""

@@ -134,9 +134,15 @@ class RequestHandle:
     @property
     def failed(self) -> bool:
         """True when the request left the runtime unserved: no replica
-        serves its model (dropped), or the serving loop died before the
-        request was even built."""
+        serves its model (dropped), its fault-retry budget ran out
+        (``state.failed``), or the serving loop died before the request
+        was even built."""
         return self._done and (self.state is None or not self.state.done)
+
+    @property
+    def retries(self) -> int:
+        """Re-serves forced by replica faults so far (0 before submit)."""
+        return 0 if self.state is None else self.state.retries
 
     @property
     def ttft(self) -> float:
@@ -173,8 +179,9 @@ class Session:
     def __init__(self, plan: ServingPlan, executor, *,
                  mode: str = "events", preempt_policy: str = "latest",
                  preempt_mode: str = "recompute",
-                 replan=None, autoscale=None, slo=None, obs=None,
-                 clock=None):
+                 replan=None, autoscale=None, faults=None,
+                 retry_budget: int = 2, worker_timeout=None,
+                 slo=None, obs=None, clock=None):
         self.plan = plan
         self.executor = executor
         self.slo = slo
@@ -182,11 +189,14 @@ class Session:
         self.runtime = ServingRuntime(plan, executor, mode=mode,
                                       preempt_policy=preempt_policy,
                                       preempt_mode=preempt_mode,
+                                      retry_budget=retry_budget,
+                                      worker_timeout=worker_timeout,
                                       on_done=self._on_done, obs=obs,
                                       clock=clock)
         executor.token_sink = self._on_tokens
         self._replan = replan
         self._autoscale = autoscale
+        self._faults = faults   # FaultPlan / FaultInjector / event sequence
         self._lock = threading.Lock()
         self._handles: Dict[int, RequestHandle] = {}
         self._next_id = 0
@@ -223,7 +233,8 @@ class Session:
     def _serve_loop(self) -> None:
         try:
             self._result = self.runtime.run_source(
-                self.source, replan=self._replan, autoscale=self._autoscale)
+                self.source, replan=self._replan, autoscale=self._autoscale,
+                faults=self._faults)
         except BaseException as exc:   # surface through close()/submit()
             self._error = exc
         finally:
@@ -349,11 +360,13 @@ class Session:
     # --------------------------------------------------------------- replay
 
     def replay(self, trace: Trace, *, replan=None,
-               autoscale=None) -> RuntimeResult:
+               autoscale=None, faults=None) -> RuntimeResult:
         """Serve a recorded trace through this session's runtime (offline
         twin of the live path; resets runtime *and* executor state first —
         token trails, counters, replan-added replicas — so sessions and
-        servers can run many traces back to back)."""
+        servers can run many traces back to back).  ``faults`` injects a
+        :class:`~repro.runtime.FaultPlan` (or injector / event sequence)
+        for this replay only — the session-level plan stays live-only."""
         if self._thread is not None and self._thread.is_alive():
             raise RuntimeError("session is live; replay needs a fresh or "
                                "drained session")
@@ -361,7 +374,8 @@ class Session:
         if configure is not None:
             configure()       # keeps the scale/seed set at serve() time
         self.runtime.reset()
-        return self.runtime.run(trace, replan=replan, autoscale=autoscale)
+        return self.runtime.run(trace, replan=replan, autoscale=autoscale,
+                                faults=faults)
 
     # ------------------------------------------------------------ callbacks
 
@@ -393,8 +407,9 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
           seed: Optional[int] = None,
           mode: str = "events", preempt_policy: str = "latest",
           preempt_mode: str = "recompute",
-          replan=None, autoscale=None, slo=None,
-          observability=False, clock=None,
+          replan=None, autoscale=None, faults=None,
+          retry_budget: int = 2, worker_timeout: Optional[float] = None,
+          slo=None, observability=False, clock=None,
           **executor_options) -> Session:
     """Open a serving :class:`Session` from a spec (planned via the
     registry: ``strategy`` + ``plan_options``) or an existing plan.
@@ -406,6 +421,15 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
     ``executor=`` keeps the scale its owner chose) and ``backend="cost"``
     serves the analytical cost model (no tokens — useful for capacity
     dry-runs of the same session code).
+
+    ``faults`` injects spot-churn events into the live serving loop (a
+    :class:`~repro.runtime.FaultPlan`, an event sequence, or a
+    :class:`~repro.runtime.FaultInjector` carrying an
+    :class:`~repro.runtime.AvailabilityWatcher` for availability-driven
+    replanning); ``retry_budget`` bounds per-request fault re-serves
+    before the request is dropped with ``handle.failed``; and
+    ``worker_timeout`` (seconds) turns a hung replica worker call into a
+    structured :class:`~repro.runtime.WorkerTimeout` crash.
 
     ``observability`` — ``True`` (builds a fresh
     :class:`repro.obs.Observability`) or an existing instance; enables
@@ -448,5 +472,6 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
             obs = observability
     return Session(the_plan, executor, mode=mode,
                    preempt_policy=preempt_policy, preempt_mode=preempt_mode,
-                   replan=replan, autoscale=autoscale, slo=slo, obs=obs,
-                   clock=clock)
+                   replan=replan, autoscale=autoscale, faults=faults,
+                   retry_budget=retry_budget, worker_timeout=worker_timeout,
+                   slo=slo, obs=obs, clock=clock)

@@ -1,0 +1,519 @@
+"""Fault tolerance under spot GPU churn: fault plan/injector units, the
+availability watcher, spec validation satellites, graceful-reclaim KV
+migration (zero loss; byte-identical engine token streams), crash requeue
+with a bounded retry budget (recovered streams are byte-identical tails),
+worker-timeout structured failure, live-session failed handles, and the
+trace-summary fault columns cross-checked against ``result.info``."""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import DeviceType
+from repro.core.costmodel import ModelProfile, Stage
+from repro.core.plan import Config, ServingPlan
+from repro.core.spec import DeploymentSpec
+from repro.core.workloads import Request, Trace
+from repro.runtime import (AvailabilityWatcher, CostModelExecutor,
+                           FaultEvent, FaultInjector, FaultPlan,
+                           ServingRuntime, WorkerTimeout, spot_schedule)
+from repro.runtime.actor import ReplicaWorker
+from repro.runtime.faults import as_injector
+from repro.runtime.kvcache import KVCacheManager
+
+BS = 16
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+GPU = "spot-gpu"
+
+
+def _replica(num_blocks: int = 5, **dev_kw) -> Config:
+    free = (num_blocks + 0.5) * BS * TINY.kv_bytes_per_token
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType(GPU, 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9, "x", **dev_kw)
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY)
+
+
+def _plan(cfgs, n_requests: int) -> ServingPlan:
+    cfgs = list(cfgs)
+    return ServingPlan(replicas=cfgs,
+                       assignment=np.ones((len(cfgs), 1)) / len(cfgs),
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=sum(c.cost for c in cfgs))
+
+
+def _trace(n=4, input_len=30, output_len=4) -> Trace:
+    return Trace("faults", tuple(
+        Request(req_id=i, workload=0, input_len=input_len,
+                output_len=output_len, arrival=0.0) for i in range(n)))
+
+
+def _tiny_watcher(cfg: Config, trace: Trace, n: int) -> AvailabilityWatcher:
+    """Watcher over the tiny single-type pool whose planner just resizes
+    the replica set to the surviving device count (bench-style custom
+    planner: the plan does not come from the strategy registry)."""
+    dev = cfg.stages[0].device
+    spec = DeploymentSpec(models=[TINY], workload=trace,
+                          catalog={GPU: dev}, availability={GPU: n},
+                          budget=100.0)
+
+    def planner(s: DeploymentSpec) -> ServingPlan:
+        k = s.availability.get(GPU, 0)
+        if k <= 0:
+            raise ValueError("pool is empty")
+        return _plan([cfg] * k, trace.num_requests)
+
+    return AvailabilityWatcher(spec, planner=planner)
+
+
+# --------------------------------------------------- unit: events and plans
+
+def test_fault_event_validation():
+    ev = FaultEvent(time=1.0, kind="reclaim", gpu_type="H100", grace=5.0)
+    assert ev.grace == 5.0 and ev.count == 1
+    with pytest.raises(ValueError):
+        FaultEvent(time=1.0, kind="meteor", gpu_type="H100")
+    with pytest.raises(ValueError):
+        FaultEvent(time=-1.0, kind="crash", gpu_type="H100")
+    with pytest.raises(ValueError):
+        FaultEvent(time=1.0, kind="crash", gpu_type="H100", count=0)
+    with pytest.raises(ValueError):
+        # a grace window only makes sense on a reclaim
+        FaultEvent(time=1.0, kind="crash", gpu_type="H100", grace=5.0)
+
+
+def test_fault_plan_sorts_and_injector_protocol():
+    e1 = FaultEvent(time=2.0, kind="recover", gpu_type="A100")
+    e2 = FaultEvent(time=0.5, kind="crash", gpu_type="A100")
+    plan = FaultPlan([e1, e2])
+    assert [e.time for e in plan.events] == [0.5, 2.0]
+    inj = as_injector(plan)
+    assert isinstance(inj, FaultInjector) and not inj.exhausted
+    assert inj.next_time() == 0.5
+    assert inj.pop() is plan.events[0]
+    assert inj.next_time() == 2.0
+    assert inj.pop() is plan.events[1]
+    assert inj.exhausted and inj.next_time() == math.inf
+    inj.reset()
+    assert inj.next_time() == 0.5
+    # a bare event sequence and an existing injector pass through too
+    assert as_injector([e2]).next_time() == 0.5
+    assert as_injector(inj) is inj
+
+
+def test_spot_schedule_deterministic():
+    kw = dict(horizon=60.0, mtbf_s=8.0, mttr_s=8.0)
+    a = spot_schedule(["H100", "A100"], seed=7, **kw)
+    b = spot_schedule(["A100", "H100"], seed=7, **kw)
+    assert a.events == b.events          # order-insensitive, seed-stable
+    assert a.events != spot_schedule(["H100", "A100"], seed=8, **kw).events
+    assert all(0.0 <= e.time <= 60.0 for e in a.events)
+    # per type, losses and recoveries alternate starting with a loss
+    for gpu in ("H100", "A100"):
+        kinds = [e.kind for e in sorted(a.events, key=lambda e: e.time)
+                 if e.gpu_type == gpu]
+        assert all(k == "recover" if i % 2 else k != "recover"
+                   for i, k in enumerate(kinds))
+    graceful = spot_schedule(["H100"], horizon=60.0, seed=7, mtbf_s=8.0,
+                             mttr_s=8.0, reclaim_frac=1.0, grace_s=3.0)
+    assert all(e.kind == "reclaim" and e.grace == 3.0
+               for e in graceful.events if e.kind != "recover")
+
+
+# ------------------------------------------- satellites: spec validation
+
+def test_spec_availability_validation():
+    def spec(avail):
+        return DeploymentSpec(models=[TINY], workload=_trace(1),
+                              catalog={GPU: _replica().stages[0].device},
+                              availability=avail, budget=10.0)
+    with pytest.raises(ValueError):
+        spec({GPU: -1})
+    with pytest.raises(ValueError):
+        spec({GPU: 1.5})
+    with pytest.raises(ValueError):
+        spec({GPU: True})           # bools are not device counts
+    with pytest.raises(ValueError):
+        spec({GPU: "four"})
+    s = spec({GPU: np.int64(4)})    # numpy ints normalize to plain ints
+    assert s.availability == {GPU: 4}
+    assert type(s.availability[GPU]) is int
+
+
+def test_with_availability_rejects_unknown_gpu_types():
+    s = DeploymentSpec(models=[TINY], workload=_trace(1),
+                       catalog={GPU: _replica().stages[0].device},
+                       availability={GPU: 2}, budget=10.0)
+    assert s.with_availability({GPU: 1}).availability == {GPU: 1}
+    with pytest.raises(ValueError, match="unknown GPU type"):
+        s.with_availability({"H100-typo": 4})
+
+
+def test_watcher_tracks_availability_and_replans():
+    cfg = _replica()
+    trace = _trace(2)
+    w = _tiny_watcher(cfg, trace, n=2)
+    assert w.availability == {GPU: 2}
+    w.observe(FaultEvent(time=1.0, kind="crash", gpu_type=GPU))
+    assert w.availability == {GPU: 1}
+    w.observe(FaultEvent(time=2.0, kind="crash", gpu_type=GPU, count=5))
+    assert w.availability == {GPU: 0}        # clamped at zero
+    with pytest.raises(ValueError):
+        w.replan(_plan([cfg], 2))            # planner refuses an empty pool
+    w.observe(FaultEvent(time=3.0, kind="recover", gpu_type=GPU, count=9))
+    assert w.availability == {GPU: 2}        # clamped at the base snapshot
+    new = w.replan(_plan([cfg], 2))
+    assert len(new.replicas) == 2 and w.replans == 1
+    w.reset()
+    assert w.availability == {GPU: 2} and w.replans == 0
+
+
+def test_retry_budget_validation():
+    cfg = _replica()
+    with pytest.raises(ValueError):
+        ServingRuntime(_plan([cfg], 1), CostModelExecutor([cfg], [TINY]),
+                       retry_budget=-1)
+
+
+# -------------------------------------------- unit: symbolic KV migration
+
+def test_manager_export_import_swapped():
+    src = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=4)
+    dst = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=4)
+    assert src.admit(0, 31, solo=True)          # 2 blocks
+    assert src.swap_out(0) == 2
+    blocks = src.export_swapped(0)
+    assert blocks == 2 and src.host_used_blocks == 0
+    assert src.export_swapped(0) == 0           # already exported
+    assert dst.import_swapped(0, blocks)
+    assert dst.host_used_blocks == 2
+    assert not dst.import_swapped(0, blocks)    # duplicate rejected
+    assert dst.swap_in(0, 31, solo=True)
+    assert (src.swap_exports, dst.swap_imports) == (1, 1)
+    tight = KVCacheManager(num_blocks=5, block_size=BS, host_blocks=1)
+    assert not tight.import_swapped(1, 2)       # over the host budget
+    assert not tight.import_swapped(1, 0)       # nothing to adopt
+
+
+# ------------------------------------- integration (cost): reclaim / crash
+
+def _catalog_spec(n_requests=40):
+    from repro.core import GPU_CATALOG, LLAMA3_70B, make_trace
+    trace = make_trace("trace1", n_requests, arrival_rate=20.0, seed=0)
+    return DeploymentSpec(models=[LLAMA3_70B], workload=trace,
+                          catalog=GPU_CATALOG,
+                          availability={"A100": 8, "H100": 4}, budget=40.0)
+
+
+def _serve_catalog(spec, faults, *, retry_budget=2, watch=True,
+                   preempt_mode="swap", host_blocks=256, obs=None):
+    from repro.core import plan as plan_spec
+    p = plan_spec(spec)
+    executor = CostModelExecutor(p, host_blocks=host_blocks)
+    runtime = ServingRuntime(p, executor, preempt_mode=preempt_mode,
+                             retry_budget=retry_budget, obs=obs)
+    injector = as_injector(faults)
+    if watch and injector.watcher is None:
+        injector = FaultInjector(FaultPlan(list(faults.events)),
+                                 watcher=AvailabilityWatcher(spec))
+    return runtime.run(spec.workload, faults=injector), runtime
+
+
+def test_graceful_reclaim_zero_loss_cost():
+    spec = _catalog_spec()
+    fp = FaultPlan([FaultEvent(time=0.5, kind="reclaim", gpu_type="H100",
+                               grace=5.0)])
+    res, runtime = _serve_catalog(spec, fp)
+    assert res.num_completed == spec.workload.num_requests
+    assert res.num_failed == 0 and res.num_retries == 0
+    assert res.info["fault_log"] == [(0.5, "reclaim", "H100", (2,))]
+    assert res.info["fault_reclaims"] == 1.0
+    assert res.info["swap_migrations"] > 0
+    assert res.info["fault_replans"] == 1.0
+    assert res.info["watcher_replans"] == 1.0
+    dead = [e for e in res.info["per_replica"] if e["dead"]]
+    assert [e["replica"] for e in dead] == [2]
+    assert dead[0]["dead_at"] == 0.5
+    assert runtime.replicas[2].dead and runtime.replicas[2].draining
+
+
+def test_crash_and_recover_requeues_within_budget():
+    spec = _catalog_spec()
+    fp = FaultPlan([
+        FaultEvent(time=0.5, kind="crash", gpu_type="H100"),
+        FaultEvent(time=3.0, kind="recover", gpu_type="H100"),
+    ])
+    res, _ = _serve_catalog(spec, fp)
+    assert res.num_completed == spec.workload.num_requests
+    assert res.num_failed == 0
+    assert res.num_retries > 0                  # crash re-serves work
+    assert res.info["requests_requeued"] > 0
+    assert res.info["fault_crashs"] == 1.0
+    assert res.info["fault_recovers"] == 1.0
+    assert res.info["watcher_replans"] == 2.0   # shrink, then grow back
+    # the log records the recover with no victims
+    kinds = [(kind, victims) for _, kind, _, victims in
+             res.info["fault_log"]]
+    assert ("recover", ()) in kinds
+
+
+def test_no_recovery_baseline_loses_requests():
+    spec = _catalog_spec()
+    fp = FaultPlan([FaultEvent(time=0.5, kind="crash", gpu_type="H100")])
+    res, _ = _serve_catalog(spec, fp, retry_budget=0, watch=False)
+    assert res.num_failed > 0
+    assert res.num_completed < spec.workload.num_requests
+    assert res.num_completed + res.num_failed == spec.workload.num_requests
+    assert res.info["requests_orphaned"] > 0
+    for r in res.records:
+        if r.failed:
+            assert not r.done and r.phase.name != "DONE"
+
+
+# ----------------------------- acceptance: identical logs on both backends
+
+def _run_faulted(executor, plan, trace, watcher, fault_time, kind,
+                 grace=0.0, **rt_kw):
+    runtime = ServingRuntime(plan, executor, **rt_kw)
+    fp = FaultPlan([FaultEvent(time=fault_time, kind=kind, gpu_type=GPU,
+                               grace=grace)])
+    injector = FaultInjector(fp, watcher=watcher)
+    res = runtime.run(trace, faults=injector)
+    return res, runtime, injector
+
+
+def _engine_executor(plan, **kw):
+    from repro.configs import get_config
+    from repro.runtime import EngineExecutor
+    return EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                          models=[TINY], max_batch=8, input_len=8,
+                          max_new=5, fused_steps=1, **kw)
+
+
+def test_fault_schedule_identical_logs_cost_vs_engine():
+    pytest.importorskip("jax")
+    trace = _trace(n=4)
+    cfg = _replica()
+    outs = {}
+    for backend in ("cost", "engine"):
+        plan = _plan([cfg, cfg], trace.num_requests)
+        executor = (CostModelExecutor([cfg, cfg], [TINY])
+                    if backend == "cost" else _engine_executor(plan))
+        res, runtime, injector = _run_faulted(
+            executor, plan, trace, _tiny_watcher(cfg, trace, 2),
+            fault_time=0.0, kind="crash")
+        assert res.num_completed == trace.num_requests
+        outs[backend] = (list(injector.log),
+                         list(runtime.replicas[0].admission_log),
+                         {r.req.req_id: r.retries for r in res.records})
+    assert outs["cost"] == outs["engine"]
+
+
+# ------------------- acceptance: byte-identical streams (engine backend)
+
+def _engine_fault_run(trace, fault_time=None, kind="reclaim", grace=1e6,
+                      retry_budget=2):
+    from repro.obs import TickClock
+    cfg = _replica()
+    plan = _plan([cfg, cfg], trace.num_requests)
+    executor = _engine_executor(plan, host_blocks=16, clock=TickClock())
+    if fault_time is None:
+        runtime = ServingRuntime(plan, executor, preempt_mode="swap")
+        res = runtime.run(trace)
+        return res, executor
+    res, _, _ = _run_faulted(
+        executor, plan, trace, _tiny_watcher(_replica(), trace, 2),
+        fault_time, kind, grace=grace, preempt_mode="swap",
+        retry_budget=retry_budget)
+    return res, executor
+
+
+def test_graceful_reclaim_streams_byte_identical_engine():
+    """Acceptance: under a mid-run reclaim with a grace window, every
+    affected request's token stream equals the fault-free run's stream
+    exactly — the KV migrated to a surviving replica of the same model,
+    so decode resumes with no re-prefill and no token drift."""
+    pytest.importorskip("jax")
+    trace = _trace(n=4)
+    base_res, base_ex = _engine_fault_run(trace)
+    assert base_res.num_completed == trace.num_requests
+    makespan = max(r.finished_at for r in base_res.records)
+    res, ex = _engine_fault_run(trace, fault_time=makespan / 2)
+    assert res.num_completed == trace.num_requests
+    assert res.num_failed == 0 and res.num_retries == 0
+    assert res.info["swap_migrations"] > 0
+    assert res.info.get("swap_migrations_failed", 0.0) == 0.0
+    for rid in base_ex.token_log:
+        assert list(ex.token_log[rid]) == list(base_ex.token_log[rid])
+
+
+def test_crash_recovery_streams_are_tails_engine():
+    """An ungraceful crash re-serves lost work from the prompt: the
+    fault-free stream must be a byte-identical *tail* of the recovered
+    stream (the recompute replays prefill, duplicating early tokens)."""
+    pytest.importorskip("jax")
+    trace = _trace(n=4)
+    base_res, base_ex = _engine_fault_run(trace)
+    makespan = max(r.finished_at for r in base_res.records)
+    res, ex = _engine_fault_run(trace, fault_time=makespan / 2,
+                                kind="crash", grace=0.0)
+    assert res.num_completed == trace.num_requests
+    assert res.num_retries > 0
+    retried = {r.req.req_id for r in res.records if r.retries}
+    assert retried
+    for rid, base_log in base_ex.token_log.items():
+        log = list(ex.token_log[rid])
+        base_log = list(base_log)
+        assert log[-len(base_log):] == base_log
+        if rid in retried:
+            assert len(log) > len(base_log)     # replayed prefill tokens
+        else:
+            assert log == base_log
+
+
+# ------------------------------------ worker failure: structured, not hung
+
+class _FlakyCostExecutor(CostModelExecutor):
+    """Raises once from replica 1's first prefill (a died device call)."""
+
+    armed = True
+
+    def prefill(self, rep, states):
+        if rep == 1 and self.armed:
+            self.armed = False
+            raise RuntimeError("injected device fault")
+        return super().prefill(rep, states)
+
+
+def test_worker_exception_becomes_structured_failure():
+    trace = _trace(n=4)
+    cfg = _replica()
+    plan = _plan([cfg, cfg], trace.num_requests)
+    runtime = ServingRuntime(plan, _FlakyCostExecutor([cfg, cfg], [TINY]))
+    res = runtime.run(trace)
+    assert res.info["worker_failures"] == 1.0
+    assert runtime.replicas[1].dead
+    assert res.num_completed + res.num_failed == trace.num_requests
+    assert res.num_completed > 0                # survivors keep serving
+
+
+def test_worker_call_timeout_unit():
+    worker = ReplicaWorker("test-timeout", call_timeout=0.05)
+    fut = worker.submit(lambda: time.sleep(1.0) or "late")
+    with pytest.raises(WorkerTimeout):
+        fut.result(timeout=5.0)
+    assert not worker.alive                     # marked dead for rebuild
+    with pytest.raises(RuntimeError):
+        worker.submit(lambda: None)
+    ok = ReplicaWorker("test-fast", call_timeout=5.0)
+    assert ok.submit(lambda: 42).result(timeout=5.0) == 42
+    ok.close()
+
+
+# ----------------------------------------- live session: failed handles
+
+class _HangingCostExecutor(CostModelExecutor):
+    """Concurrent cost executor whose replica-1 calls wedge (a reclaimed
+    accelerator that stops answering) — exercised through the actor
+    workers so ``worker_timeout`` turns the hang into a WorkerTimeout."""
+
+    concurrent = True
+
+    def prefill(self, rep, states):
+        if rep == 1:
+            time.sleep(2.0)
+        return super().prefill(rep, states)
+
+
+def test_live_session_retry_exhausted_handle_fails():
+    from repro.serving import serve
+    cfg = _replica()
+    plan = _plan([cfg, cfg], 2)
+    session = serve(plan, executor=_HangingCostExecutor([cfg, cfg], [TINY]),
+                    retry_budget=0, worker_timeout=0.2)
+    with session:
+        served = session.submit(input_len=30, output_len=4)   # replica 0
+        doomed = session.submit(input_len=30, output_len=4)   # replica 1
+        state = doomed.result(timeout=30.0)
+        assert state is not None and state.failed
+        assert doomed.failed and not doomed.done
+        assert doomed.retries == 1
+        assert list(doomed.tokens(timeout=5.0)) == []   # terminates empty
+        assert served.result(timeout=30.0).done
+    res = session.result
+    assert res.num_failed == 1 and res.num_completed == 1
+    assert res.info["worker_failures"] == 1.0
+
+
+def test_session_replay_accepts_fault_plan():
+    from repro.serving import Session
+    trace = _trace(n=4)
+    cfg = _replica()
+    plan = _plan([cfg, cfg], trace.num_requests)
+    session = Session(plan, CostModelExecutor([cfg, cfg], [TINY]))
+    fp = FaultPlan([FaultEvent(time=0.0, kind="crash", gpu_type=GPU)])
+    res = session.replay(trace, faults=FaultInjector(
+        fp, watcher=_tiny_watcher(cfg, trace, 2)))
+    assert res.num_completed == trace.num_requests
+    assert res.info["fault_crashs"] == 1.0
+    clean = session.replay(trace)               # fault plan does not stick
+    assert "fault_log" not in clean.info
+
+
+# --------------------------------------- trace summary: fault columns
+
+def _load_summarizer():
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "tools"))
+    import trace_summarize
+    return trace_summarize
+
+
+def test_trace_summarize_fault_columns_synthetic():
+    tsz = _load_summarizer()
+    doc = {"traceEvents": [
+        {"ph": "M", "name": "thread_name", "tid": 0,
+         "args": {"name": "replica-0 cfg"}},
+        {"ph": "X", "tid": 0, "ts": 0.0, "dur": 2e6, "cat": "decode",
+         "name": "decode[1]"},
+        {"ph": "i", "tid": 0, "ts": 1e6, "name": "dead", "cat": "fault",
+         "args": {"replica": 0}},
+        {"ph": "i", "tid": 1000, "ts": 1e6, "name": "fault-crash",
+         "cat": "fault", "args": {"kind": "crash", "gpu_type": "H100",
+                                  "victims": [0]}},
+        {"ph": "i", "tid": 1000, "ts": 1.5e6, "name": "request-failed",
+         "cat": "fault", "args": {"req_id": 3, "retries": 2}},
+    ]}
+    s = tsz.summarize(doc)
+    rep = s["replicas"][0]
+    assert rep["faults"] == 1
+    assert rep["dead_at_s"] == 1.0
+    assert rep["downtime_s"] == pytest.approx(1.0)    # t_end(2.0) - dead
+    assert s["requests_failed"] == 1
+    text = tsz.format_summary(s)
+    assert "down-s" in text and "fault-crash" in text
+    assert "req 3 after 2 retries" in text
+
+
+def test_trace_summarize_cross_checks_runtime_info(tmp_path):
+    from repro.obs import Observability
+    tsz = _load_summarizer()
+    spec = _catalog_spec()
+    obs = Observability()
+    fp = FaultPlan([FaultEvent(time=0.5, kind="crash", gpu_type="H100")])
+    res, runtime = _serve_catalog(spec, fp, retry_budget=0, watch=False,
+                                  obs=obs)
+    path = runtime.export_trace(str(tmp_path / "faults.json"))
+    s = tsz.summarize(tsz.load_trace(path))
+    assert sum(r["faults"] for r in s["replicas"]) \
+        == res.info["replicas_lost"]
+    assert s["requests_failed"] == res.info["requests_failed"]
+    dead = [r for r in s["replicas"] if r["faults"]]
+    assert dead and all(r["downtime_s"] > 0 for r in dead)
+    injected = [c for c in s["faults"] if c["name"].startswith("fault-")]
+    assert len(injected) == res.info["faults_injected"]

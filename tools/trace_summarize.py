@@ -5,11 +5,14 @@ Reads a trace written by ``ServingRuntime.export_trace(path)`` /
 ``Session.export_trace(path)`` and prints, per replica track: busy
 fraction, prefill vs decode time split, event counts, preemptions, and —
 when the run used a host KV tier — swap-in counts with per-replica
-swap-out/swap-in bytes; plus the control-plane timeline (route drops,
-replans, autoscale decisions).  The busy seconds printed here are recomputed purely from
-the trace's ``X`` spans, so they cross-check the runtime's own
-``result.info["per_replica"]["busy_s"]`` accounting (asserted in
-``tests/test_observability.py``).
+swap-out/swap-in bytes; when faults were injected — per-replica fault
+kills and downtime (from each replica's ``dead`` instant to trace end);
+plus the control-plane timeline (route drops, replans, autoscale
+decisions, fault injections, worker failures, dropped requests).  The
+busy seconds and fault/downtime figures printed here are recomputed
+purely from the trace's spans and instants, so they cross-check the
+runtime's own ``result.info`` accounting (asserted in
+``tests/test_observability.py`` and ``tests/test_faults.py``).
 
     python tools/trace_summarize.py trace.json
 
@@ -59,7 +62,8 @@ def summarize(doc: dict) -> dict:
             "prefill_events": 0, "decode_chunks": 0,
             "preemptions": 0, "completed": 0,
             "swap_ins": 0, "swap_in_s": 0.0,
-            "swap_in_bytes": 0.0, "swap_out_bytes": 0.0})
+            "swap_in_bytes": 0.0, "swap_out_bytes": 0.0,
+            "faults": 0, "dead_at_s": None, "downtime_s": 0.0})
 
     control: List[dict] = []
     for e in events:
@@ -93,6 +97,12 @@ def summarize(doc: dict) -> dict:
                     e.get("args", {}).get("bytes", 0.0))
             elif name == "done":
                 rep(tid)["completed"] += 1
+            elif name == "dead":
+                r = rep(tid)
+                r["faults"] += 1
+                # Replicas die at most once per run; keep the first stamp.
+                if r["dead_at_s"] is None:
+                    r["dead_at_s"] = ts
             t_end = max(t_end, ts)
         elif tid == CONTROL_TRACK and ph == "i":
             control.append({"t": ts, "name": e.get("name", ""),
@@ -103,8 +113,15 @@ def summarize(doc: dict) -> dict:
     span = t_end if t_end > 0 else 1.0
     for r in replicas.values():
         r["busy_frac"] = r["busy_s"] / span
+        # A reclaimed/crashed replica serves nothing after its "dead"
+        # instant: its downtime is the tail of the trace (spot replicas
+        # never resurrect under the same index — recovery adds capacity
+        # through a replan instead).
+        if r["dead_at_s"] is not None:
+            r["downtime_s"] = max(0.0, t_end - r["dead_at_s"])
     routes = sum(1 for c in control if c["name"] == "route")
     drops = sum(1 for c in control if c["name"] == "drop")
+    faults = [c for c in control if c["cat"] == "fault"]
     return {
         "t_end_s": t_end,
         "replicas": [replicas[tid] for tid in sorted(replicas)],
@@ -112,18 +129,31 @@ def summarize(doc: dict) -> dict:
         "drops": drops,
         "replans": [c for c in control if c["cat"] == "replan"],
         "autoscale": [c for c in control if c["cat"] == "autoscale"],
+        "faults": faults,
+        "worker_failures": sum(1 for c in faults
+                               if c["name"] == "worker-failure"),
+        "requests_failed": sum(1 for c in faults
+                               if c["name"] == "request-failed"),
     }
 
 
 def format_summary(s: dict) -> str:
-    lines = [f"trace span: {s['t_end_s']:.4f}s   "
-             f"routed: {s['routes']}   dropped: {s['drops']}"]
+    header = (f"trace span: {s['t_end_s']:.4f}s   "
+              f"routed: {s['routes']}   dropped: {s['drops']}")
+    if s.get("faults"):
+        injected = sum(1 for c in s["faults"]
+                       if c["name"].startswith("fault-"))
+        header += (f"   faults: {injected}   "
+                   f"requests failed: {s['requests_failed']}")
+    lines = [header]
     swapping = any(r["swap_ins"] or r["swap_out_bytes"]
                    for r in s["replicas"])
+    faulty = any(r["faults"] for r in s["replicas"])
     lines.append(f"{'replica':<28}{'busy':>7}{'prefill':>10}{'decode':>10}"
                  f"{'chunks':>8}{'preempt':>9}{'done':>6}"
                  + (f"{'swapin':>8}{'out-MB':>9}{'in-MB':>8}"
-                    if swapping else ""))
+                    if swapping else "")
+                 + (f"{'faults':>8}{'down-s':>9}" if faulty else ""))
     for r in s["replicas"]:
         line = (
             f"{r['track']:<28}{r['busy_frac']:>6.1%}"
@@ -134,8 +164,10 @@ def format_summary(s: dict) -> str:
             line += (f"{r['swap_ins']:>8}"
                      f"{r['swap_out_bytes'] / 1e6:>9.2f}"
                      f"{r['swap_in_bytes'] / 1e6:>8.2f}")
+        if faulty:
+            line += f"{r['faults']:>8}{r['downtime_s']:>9.4f}"
         lines.append(line)
-    timeline = s["replans"] + s["autoscale"]
+    timeline = s["replans"] + s["autoscale"] + s.get("faults", [])
     if timeline:
         lines.append("control-plane timeline:")
         for c in sorted(timeline, key=lambda c: c["t"]):
@@ -144,6 +176,16 @@ def format_summary(s: dict) -> str:
                 detail = (f"{args.get('action')} {args.get('config')} "
                           f"({args.get('reason')}): "
                           f"{args.get('before')} -> {args.get('after')}")
+            elif c["cat"] == "fault":
+                if c["name"] == "worker-failure":
+                    detail = (f"replica {args.get('replica')}: "
+                              f"{args.get('error')}")
+                elif c["name"] == "request-failed":
+                    detail = (f"req {args.get('req_id')} after "
+                              f"{args.get('retries')} retries")
+                else:   # fault-reclaim / fault-crash / fault-recover
+                    detail = (f"{args.get('gpu_type')} "
+                              f"victims={args.get('victims')}")
             else:
                 detail = (f"{args.get('before')} -> {args.get('after')} "
                           f"(migrated {args.get('migrated')})")
