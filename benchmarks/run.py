@@ -21,6 +21,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_observability   enabled-tracing overhead (<2% budget) + on/off purity
   bench_kv_swap         swap vs recompute preemption + host-tier prefix retention
   bench_fault_tolerance goodput under spot churn: recovery vs no-recovery
+  bench_disaggregation  prefill/decode disaggregation vs colocated plans
 """
 from __future__ import annotations
 
@@ -52,6 +53,7 @@ MODULES = [
     "bench_observability",
     "bench_kv_swap",
     "bench_fault_tolerance",
+    "bench_disaggregation",
 ]
 
 

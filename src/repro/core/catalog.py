@@ -49,12 +49,28 @@ class DeviceType:
     # effective; PCIe 5.0 (H100) ~50 GB/s.  0.0 → defaulted in
     # ``__post_init__`` so older call sites need not name it.
     host_bw: float = 0.0
+    # Cross-*replica* KV transfer bandwidth (bytes/s per device): what a
+    # prefill→decode handoff of paged KV blocks rides on.  Replicas on a
+    # heterogeneous marketplace generally sit on different machines, so
+    # this defaults to the inter-machine network (``inter_bw``); set it
+    # explicitly for pools with RDMA/NVLink between hosts.
+    interconnect_bw: float = 0.0
+    # Host RAM budget per device (bytes) the two-tier KV cache may spill
+    # into.  0.0 → defaulted to 4x HBM in ``__post_init__`` (typical
+    # cloud hosts pair each accelerator with several times its HBM in
+    # DRAM); catalog entries may override with marketplace-typical values.
+    host_ram_bytes: float = 0.0
 
     def __post_init__(self):
         if self.dense_peak_flops == 0.0:
             object.__setattr__(self, "dense_peak_flops", self.peak_flops)
         if self.host_bw == 0.0:
             object.__setattr__(self, "host_bw", 25 * 1e9)
+        if self.interconnect_bw == 0.0:
+            object.__setattr__(self, "interconnect_bw", self.inter_bw)
+        if self.host_ram_bytes == 0.0:
+            object.__setattr__(self, "host_ram_bytes",
+                               4.0 * self.memory_bytes)
 
     @property
     def flops_per_dollar(self) -> float:
@@ -84,13 +100,15 @@ GPU_CATALOG: Dict[str, DeviceType] = {
     "L40":   DeviceType("L40", 181 * _T, 864 * _G, 48 * _GB, 0.83, 8, 60 * _G, _ETH, "workstation"),
     "A100":  DeviceType("A100", 312 * _T, 1555 * _G, 80 * _GB, 1.75, 8, 300 * _G, _ETH, "datacenter"),
     "H100":  DeviceType("H100", 1979 * _T, 3350 * _G, 80 * _GB, 2.99, 8, 300 * _G, _ETH, "datacenter",
-                        dense_peak_flops=989.5 * _T, host_bw=50 * _G),
+                        dense_peak_flops=989.5 * _T, host_bw=50 * _G,
+                        host_ram_bytes=256 * _GB),  # DGX-class: 2 TB / 8
     # RTX 4090s have no NVLink and no PCIe P2P: multi-GPU traffic stages
     # through host memory, ~12 GB/s effective (the paper's 60 GB/s PCIe
     # figure applies to the workstation cards, which do support P2P).
-    # The same staging limit applies to host<->device KV swaps.
+    # The same staging limit applies to host<->device KV swaps.  Consumer
+    # hosts also carry less DRAM than the 4x-HBM datacenter default.
     "4090":  DeviceType("4090", 83 * _T, 1008 * _G, 24 * _GB, 0.53, 4, 12 * _G, _ETH, "consumer",
-                        host_bw=12 * _G),
+                        host_bw=12 * _G, host_ram_bytes=64 * _GB),
 }
 
 # Hardware adaptation: heterogeneous TPU slice types.  A "device" here is one

@@ -182,6 +182,44 @@ def swap_time_s(stages: Sequence[Stage], n_bytes: float) -> float:
     return n_bytes / bw
 
 
+def phase_affinity(device: DeviceType) -> float:
+    """Compute-vs-bandwidth affinity of one GPU type: achievable prefill
+    FLOP/s per achievable decode byte/s.  Prefill is compute-bound and
+    decode is memory-bound (§3), so a high ratio marks a GPU whose
+    silicon is better spent on prefill and a low one a GPU whose HBM
+    bandwidth (and capacity per dollar) favors decode — the partition
+    axis the ``"disagg"`` planner splits the catalog along."""
+    bw = device.hbm_bandwidth * DECODE_BW_UTIL
+    if bw <= 0:
+        return float("inf")
+    return device.dense_peak_flops * PREFILL_MFU / bw
+
+
+def interconnect_bandwidth(src_stages: Sequence[Stage],
+                           dst_stages: Sequence[Stage]) -> float:
+    """Cross-replica KV transfer bandwidth between two replicas (bytes/s).
+
+    Within each replica, every pipeline stage holds a disjoint layer
+    shard of each KV block and its ``tp`` devices move their slices in
+    parallel, so a replica's aggregate rate is gated by its slowest
+    stage; the end-to-end handoff is gated by the slower endpoint."""
+    def replica_bw(stages: Sequence[Stage]) -> float:
+        return min(st.tp * st.device.interconnect_bw for st in stages)
+    return min(replica_bw(src_stages), replica_bw(dst_stages))
+
+
+def handoff_time_s(src_stages: Sequence[Stage],
+                   dst_stages: Sequence[Stage], n_bytes: float) -> float:
+    """Modeled wall time to migrate ``n_bytes`` of paged KV from a
+    prefill replica to a decode replica over the interconnect."""
+    bw = interconnect_bandwidth(src_stages, dst_stages) * HOST_LINK_UTIL
+    if n_bytes <= 0:
+        return 0.0
+    if bw <= 0:
+        return float("inf")
+    return n_bytes / bw
+
+
 def preempt_costs(stages: Sequence[Stage], model: ModelProfile, *,
                   swap_bytes: float, prompt_tokens: int) -> Tuple[float, float]:
     """(modeled swap time, modeled recompute time) for one preemption victim.
@@ -221,9 +259,13 @@ def max_batch_size(stages: Sequence[Stage], model: ModelProfile,
     return float(min(MAX_BATCH, max(1.0, free / per_seq)))
 
 
+PHASES = ("both", "prefill", "decode")
+
+
 def config_throughput(stages: Sequence[Stage], model: ModelProfile,
                       workload: WorkloadType, *,
-                      prefix_hit_rate: float = 0.0) -> float:
+                      prefix_hit_rate: float = 0.0,
+                      phase: str = "both") -> float:
     """h_{c,w}: steady-state requests/second of one replica.
 
     A request costs one prefill plus ``output_len`` amortized decode-step
@@ -236,10 +278,18 @@ def config_throughput(stages: Sequence[Stage], model: ModelProfile,
     to the PP boundary activation traffic).  At least one token always
     prefills — the first logits require it.  Decode cost is unchanged:
     cached prefixes shorten *compute*, not context length.
+
+    ``phase`` restricts the request cost to one phase of a disaggregated
+    deployment: a ``"prefill"`` replica is charged only the prefill
+    bottleneck (its requests hand their KV off before decoding), a
+    ``"decode"`` replica only the amortized decode steps (its requests
+    arrive with KV already built).  ``"both"`` is the colocated default.
     """
     if not 0.0 <= prefix_hit_rate <= 1.0:
         raise ValueError(f"prefix_hit_rate must be in [0, 1], "
                          f"got {prefix_hit_rate}")
+    if phase not in PHASES:
+        raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
     batch = max_batch_size(stages, model, workload)
     if batch < 1.0:
         return 0.0
@@ -262,7 +312,13 @@ def config_throughput(stages: Sequence[Stage], model: ModelProfile,
             batch * model.d_model * BYTES_PER_PARAM / inter_bw
             + PP_BOUNDARY_LATENCY_S)
 
-    time_per_request = prefill_bottleneck + workload.output_len * decode_bottleneck / batch
+    time_per_request = 0.0
+    if phase != "decode":
+        time_per_request += prefill_bottleneck
+    if phase != "prefill":
+        time_per_request += workload.output_len * decode_bottleneck / batch
+    if time_per_request <= 0.0:
+        return 0.0
     return 1.0 / time_per_request
 
 

@@ -22,11 +22,23 @@ class Config:
     stages: Tuple[Stage, ...]
     model_index: int
     model: ModelProfile
+    # Which serving phase this replica runs: "both" (colocated, the
+    # default), or one side of a disaggregated deployment — "prefill"
+    # replicas run admission + prefill then hand KV off; "decode"
+    # replicas receive handoffs and run decode only.
+    role: str = "both"
+
+    def __post_init__(self):
+        if self.role not in ("both", "prefill", "decode"):
+            raise ValueError(
+                f'role must be "both", "prefill", or "decode", '
+                f"got {self.role!r}")
 
     @property
     def key(self) -> str:
         s = "+".join(f"{st.device.name}x{st.tp}" for st in self.stages)
-        return f"{self.model.name}:{s}"
+        base = f"{self.model.name}:{s}"
+        return base if self.role == "both" else f"{base}|{self.role}"
 
     @property
     def strategy(self) -> Tuple[int, ...]:

@@ -34,7 +34,7 @@ import numpy as np
 from repro.core import configspace
 from repro.core.binsearch import solve_binary_search
 from repro.core.catalog import DeviceType
-from repro.core.costmodel import ModelProfile, config_throughput
+from repro.core.costmodel import ModelProfile, config_throughput, phase_affinity
 from repro.core.milp import SchedulingProblem, solve_milp, _plan_from_solution
 from repro.core.plan import Config, ServingPlan
 from repro.core.spec import DeploymentSpec, register_planner
@@ -223,6 +223,145 @@ def _plan_fixed(spec: DeploymentSpec, *,
                                           spec.budget)
     return _solve(spec.models, spec.workload, spec.catalog, composition,
                   spec.budget, **options)
+
+
+def _phase_throughput_fn(phase: str, rates: Optional[Mapping[int, float]]
+                         ) -> Callable[[Config, WorkloadType], float]:
+    """Per-phase ``throughput_fn``: the analytical model restricted to one
+    serving phase (see ``costmodel.config_throughput``), with the spec's
+    expected prefix hit rates folded into prefill-side compute."""
+    rates = rates or {}
+
+    def fn(cfg: Config, w: WorkloadType) -> float:
+        try:
+            rate = rates.get(WORKLOAD_TYPES.index(w), 0.0)
+        except ValueError:
+            rate = 0.0
+        return config_throughput(cfg.stages, cfg.model, w,
+                                 prefix_hit_rate=rate, phase=phase)
+    return fn
+
+
+def partition_by_affinity(catalog: Mapping[str, DeviceType],
+                          availability: Mapping[str, int]
+                          ) -> Tuple[List[str], List[str]]:
+    """Split the available GPU types into (prefill-leaning, decode-leaning)
+    pools by ``costmodel.phase_affinity``: sort by achievable prefill
+    FLOP/s per decode byte/s and cut at the midpoint, so the compute-rich
+    half runs prefill and the bandwidth-rich half runs decode.  Both pools
+    are non-empty whenever at least two types are available."""
+    types = sorted(t for t, n in availability.items()
+                   if n > 0 and t in catalog)
+    if len(types) < 2:
+        return types, list(types)
+    ranked = sorted(types, key=lambda t: (-phase_affinity(catalog[t]), t))
+    cut = max(1, len(ranked) // 2)
+    return ranked[:cut], ranked[cut:]
+
+
+@register_planner("disagg")
+def _plan_disagg(spec: DeploymentSpec, *,
+                 prefill_types: Optional[Sequence[str]] = None,
+                 decode_types: Optional[Sequence[str]] = None,
+                 budget_splits: Sequence[float] = (0.2, 0.35, 0.5, 0.65, 0.8),
+                 **options) -> ServingPlan:
+    """Prefill/decode disaggregation over heterogeneous GPU types.
+
+    Partitions the available catalog by ``costmodel.phase_affinity``
+    (compute-rich types → prefill pool, bandwidth-rich types → decode
+    pool; override with ``prefill_types``/``decode_types``), then solves
+    the existing MILP once per phase with phase-restricted throughput
+    tables, scanning ``budget_splits`` fractions of the shared budget
+    given to the prefill side.  The merged plan carries role-tagged
+    replicas (``Config.role``): arrivals are assigned to prefill replicas
+    only (decode replicas get zero assignment mass — they receive work
+    by KV handoff, not routing), and the modeled makespan is the slower
+    phase's, since the phases pipeline against each other at runtime.
+
+    Falls back to the colocated ``"milp"`` strategy when fewer than two
+    GPU types are available or no budget split yields a feasible plan for
+    both phases (``solver_info["disagg_fallback"] = 1.0``).
+    """
+    if spec.objective != "makespan":
+        raise ValueError('strategy="disagg" currently plans the "makespan" '
+                         'objective only')
+
+    def fallback() -> ServingPlan:
+        p = _plan_milp(spec, **options)
+        p.solver_info["disagg_fallback"] = 1.0
+        return p
+
+    if prefill_types is None or decode_types is None:
+        auto_p, auto_d = partition_by_affinity(spec.catalog,
+                                               spec.availability)
+        if prefill_types is None:
+            prefill_types = auto_p
+        if decode_types is None:
+            decode_types = auto_d
+    prefill_types = [t for t in prefill_types if t in spec.catalog]
+    decode_types = [t for t in decode_types if t in spec.catalog]
+    if (not prefill_types or not decode_types
+            or set(prefill_types) == set(decode_types)):
+        return fallback()
+
+    def solve_phase(phase: str, pool: Sequence[str], budget: float
+                    ) -> Optional[ServingPlan]:
+        sub_catalog = {t: spec.catalog[t] for t in pool}
+        sub_avail = {t: spec.availability.get(t, 0) for t in pool}
+        if budget <= 0 or not any(sub_avail.values()):
+            return None
+        try:
+            p = _solve(spec.models, spec.workload, sub_catalog, sub_avail,
+                       budget,
+                       throughput_fn=_phase_throughput_fn(
+                           phase, spec.prefix_hit_rates),
+                       **options)
+        except (RuntimeError, ValueError):
+            # Infeasible split (e.g. the phase budget cannot afford a
+            # single replica of any type in the pool): try the next one.
+            return None
+        if not len(p.replicas) or not np.isfinite(p.makespan):
+            return None
+        return p
+
+    best: Optional[Tuple[float, float, float, ServingPlan, ServingPlan]] = None
+    for f in budget_splits:
+        pplan = solve_phase("prefill", prefill_types, f * spec.budget)
+        dplan = solve_phase("decode", decode_types, (1 - f) * spec.budget)
+        if pplan is None or dplan is None:
+            continue
+        makespan = max(pplan.makespan, dplan.makespan)
+        cost = pplan.cost + dplan.cost
+        if best is None or (makespan, cost) < (best[0], best[1]):
+            best = (makespan, cost, f, pplan, dplan)
+    if best is None:
+        return fallback()
+
+    makespan, cost, split, pplan, dplan = best
+    replicas = ([dataclasses.replace(c, role="prefill")
+                 for c in pplan.replicas]
+                + [dataclasses.replace(c, role="decode")
+                   for c in dplan.replicas])
+    # Arrival assignment covers prefill replicas only; decode replicas'
+    # rows stay zero (the runtime's handoff picker, not the router,
+    # chooses their work).  Both phase solves saw the same trace, so
+    # their demand lists are identical.
+    assignment = np.vstack([
+        pplan.assignment,
+        np.zeros((len(dplan.replicas), len(pplan.demands)))])
+    info: Dict[str, float] = {
+        "disagg": 1.0,
+        "budget_split": float(split),
+        "prefill_replicas": float(len(pplan.replicas)),
+        "decode_replicas": float(len(dplan.replicas)),
+        "prefill_makespan": float(pplan.makespan),
+        "decode_makespan": float(dplan.makespan),
+    }
+    for t in sorted(set(prefill_types) | set(decode_types)):
+        info[f"affinity_{t}"] = float(phase_affinity(spec.catalog[t]))
+    return ServingPlan(replicas=replicas, assignment=assignment,
+                       demands=pplan.demands, makespan=makespan,
+                       cost=cost, solver_info=info)
 
 
 # ------------------------------------------------- legacy entrypoints (deprecated)
@@ -436,7 +575,8 @@ class ScalePolicy:
                  queue_high: float = 3.0, queue_low: float = 0.25,
                  kv_high: float = 0.85, kv_low: float = 0.25,
                  cooldown: int = 2, min_replicas: int = 1,
-                 throughput_fn: Optional[Callable] = None):
+                 throughput_fn: Optional[Callable] = None,
+                 hit_rate_feedback: bool = False):
         if interval <= 0:
             raise ValueError(f"interval must be > 0, got {interval}")
         if window < 1:
@@ -452,6 +592,11 @@ class ScalePolicy:
         self.cooldown = int(cooldown)
         self.min_replicas = int(min_replicas)
         self.throughput_fn = throughput_fn
+        # When True, the runtime refreshes ``throughput_fn`` each tick
+        # from the *measured* prefix hit rates of its KV managers
+        # (``_hit_rate_throughput_fn``), so candidate valuation credits
+        # the cache savings actually observed.
+        self.hit_rate_feedback = bool(hit_rate_feedback)
         self.reset()
 
     @classmethod

@@ -68,6 +68,11 @@ class DeploymentSpec:
     # the "milp" planner folds it into each config's modeled throughput,
     # so cache-heavy workloads plan onto fewer/cheaper GPUs.
     prefix_hit_rates: Optional[Mapping[int, float]] = None
+    # Host-RAM budget the serving session sizes each replica's two-tier
+    # KV host pool from: bytes per replica, or "auto" (sum the catalog's
+    # per-device ``host_ram_bytes`` over the replica's stages).  None
+    # keeps host-tier sizing to the executor's explicit ``host_blocks``.
+    host_ram_bytes: Optional[object] = None
 
     def __post_init__(self):
         object.__setattr__(self, "models", tuple(self.models))
@@ -109,6 +114,16 @@ class DeploymentSpec:
                     raise ValueError(
                         f"prefix_hit_rates[{k}] must be in [0, 1], got {v}")
             object.__setattr__(self, "prefix_hit_rates", rates)
+        if self.host_ram_bytes is not None and self.host_ram_bytes != "auto":
+            try:
+                ram = float(self.host_ram_bytes)
+            except (TypeError, ValueError):
+                ram = -1.0
+            if ram < 0:
+                raise ValueError(
+                    f'host_ram_bytes must be None, "auto", or bytes >= 0, '
+                    f"got {self.host_ram_bytes!r}")
+            object.__setattr__(self, "host_ram_bytes", ram)
 
     # ------------------------------------------------------------- variants
 
@@ -145,6 +160,12 @@ class DeploymentSpec:
         rates (e.g. fed back from a served run's measured hit rate)."""
         return dataclasses.replace(
             self, prefix_hit_rates=None if rates is None else dict(rates))
+
+    def with_host_ram(self, host_ram_bytes) -> "DeploymentSpec":
+        """The same deployment with a new host-RAM budget for the two-tier
+        KV cache (bytes per replica, ``"auto"`` for catalog-derived, or
+        None to disable RAM-derived sizing)."""
+        return dataclasses.replace(self, host_ram_bytes=host_ram_bytes)
 
 
 # ------------------------------------------------------------ the registry

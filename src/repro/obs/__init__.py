@@ -68,7 +68,7 @@ class _ReplicaHandles:
                  "step_ema", "kv_used", "kv_frac", "kv_watermark",
                  "prefix_hit", "gen_tokens", "tok_rate",
                  "swap_outs", "swap_ins", "swap_out_bytes", "swap_in_bytes",
-                 "kv_host_used")
+                 "kv_host_used", "handoffs", "handoff_bytes")
 
     def __init__(self, m: MetricsRegistry, index: int):
         lbl = self.label = str(index)
@@ -99,6 +99,8 @@ class _ReplicaHandles:
         self.swap_out_bytes: Optional[Counter] = None
         self.swap_in_bytes: Optional[Counter] = None
         self.kv_host_used: Optional[Gauge] = None
+        self.handoffs: Optional[Counter] = None
+        self.handoff_bytes: Optional[Counter] = None
 
     def swap_handles(self, m: MetricsRegistry
                      ) -> Tuple[Counter, Counter, Counter, Counter]:
@@ -111,6 +113,13 @@ class _ReplicaHandles:
                                            replica=self.label)
         return (self.swap_outs, self.swap_ins,
                 self.swap_out_bytes, self.swap_in_bytes)
+
+    def handoff_handles(self, m: MetricsRegistry) -> Tuple[Counter, Counter]:
+        if self.handoffs is None:
+            self.handoffs = m.counter("handoffs_total", replica=self.label)
+            self.handoff_bytes = m.counter("handoff_bytes_total",
+                                           replica=self.label)
+        return self.handoffs, self.handoff_bytes
 
 
 class Observability:
@@ -242,6 +251,21 @@ class Observability:
         _, ins, _, in_bytes = h.swap_handles(self.metrics)
         ins.inc(len(group))
         in_bytes.inc(float(swap_bytes))
+        self.sample_replica(rep, t1)
+
+    def on_handoff(self, rep, group: Sequence, t0: float, t1: float, *,
+                   blocks: int = 0, n_bytes: float = 0.0) -> None:
+        """One group of prefill-finished requests exported its KV blocks
+        toward decode-role replicas (prefill/decode disaggregation)."""
+        rids = [s.req.req_id for s in group]
+        self.tracer.span(rep.index, f"handoff[B={len(group)}]", t0, t1,
+                         cat="handoff",
+                         args={"req_ids": rids, "blocks": int(blocks),
+                               "bytes": float(n_bytes)})
+        h = self._handles(rep.index)
+        count, out_bytes = h.handoff_handles(self.metrics)
+        count.inc(len(group))
+        out_bytes.inc(float(n_bytes))
         self.sample_replica(rep, t1)
 
     def on_finish(self, rep, state, t: float) -> None:

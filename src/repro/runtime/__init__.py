@@ -18,6 +18,7 @@ live metrics (``export_trace(path)`` writes Perfetto-loadable Chrome
 trace JSON).
 """
 from repro.runtime.actor import ReplicaWorker, WorkerTimeout
+from repro.runtime.disagg import HandoffManager, TransferQueue
 from repro.runtime.executor import (CostModelExecutor, EngineExecutor,
                                     Executor)
 from repro.runtime.faults import (AvailabilityWatcher, FaultEvent,
@@ -35,9 +36,10 @@ from repro.runtime.router import AssignmentRouter
 __all__ = [
     "ArrivalSource", "AssignmentRouter", "AvailabilityWatcher",
     "BlockAllocator", "CostModelExecutor", "EngineExecutor", "Executor",
-    "FaultEvent", "FaultInjector", "FaultPlan", "KVCacheManager",
-    "LiveSource", "PagedEngineCache", "PendingEvent", "Phase",
-    "ReplanEvent", "ReplicaRuntime", "ReplicaWorker", "RequestState",
-    "RuntimeResult", "SLO", "ServingRuntime", "TraceSource",
-    "WorkerTimeout", "make_kv_manager", "num_kv_blocks", "spot_schedule",
+    "FaultEvent", "FaultInjector", "FaultPlan", "HandoffManager",
+    "KVCacheManager", "LiveSource", "PagedEngineCache", "PendingEvent",
+    "Phase", "ReplanEvent", "ReplicaRuntime", "ReplicaWorker",
+    "RequestState", "RuntimeResult", "SLO", "ServingRuntime",
+    "TraceSource", "TransferQueue", "WorkerTimeout", "make_kv_manager",
+    "num_kv_blocks", "spot_schedule",
 ]

@@ -1,0 +1,390 @@
+"""Prefill/decode disaggregation: KV handoff between replica roles.
+
+The ``"disagg"`` planner strategy (``repro.core.scheduler``) emits paired
+pools of :class:`~repro.core.plan.Config` replicas with ``role="prefill"``
+and ``role="decode"``.  At runtime a prefill-role replica runs admission +
+prefill only; when a request's first token lands, its paged KV blocks
+migrate to a decode-role replica over the cross-replica swap path
+(``export_swapped`` / ``import_swapped``) instead of decoding locally.
+This module owns the cluster-level half of that flow:
+
+* :class:`HandoffManager` — plans each prefill replica's handoff event
+  (target selection + symbolic host-tier reservation on the target),
+  commits the source-side export, and delivers payloads by enqueueing the
+  request on its decode target, where it readmits through the ordinary
+  swap-in admission path — so the resumed decode is byte-identical to a
+  colocated run (the same invariant the swap/migration subsystem keeps).
+* :class:`TransferQueue` — the bounded park for handoffs no decode
+  replica can currently accept.  While a prefill replica has parked
+  transfers, its admission throttles (backpressure): prefill capacity
+  stops outrunning decode capacity instead of piling staged KV without
+  bound.
+
+Target choice prefers warm-prefix then least-loaded decode replicas and
+breaks ties by replica index; capacity gating is the target manager's
+``import_swapped`` (symbolic host-tier blocks), so the cost-model and
+engine backends accept/refuse identically.  A payload that *no* live
+decode replica could ever hold (host tier too small, or no paged
+storage) degrades to recompute on the least-loaded target — the request
+still migrates, it just re-prefills there.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Sequence, Tuple
+
+from repro.core import costmodel
+
+from repro.runtime.kvcache.manager import logical_tokens
+from repro.runtime.lifecycle import Phase, RequestState
+
+
+class _Handoff:
+    """One in-flight KV migration (planned, then exported, then delivered)."""
+
+    __slots__ = ("state", "src", "blocks", "dst", "payload", "done_at")
+
+    def __init__(self, state: RequestState, src, blocks: int, dst):
+        self.state = state
+        self.src = src          # source ReplicaRuntime
+        self.blocks = blocks    # symbolic (trace-scale) block count
+        self.dst = dst          # reserved target ReplicaRuntime, or None
+        self.payload = None     # backend payload once exported
+        self.done_at = 0.0      # NIC completion time of the export
+
+
+class TransferQueue:
+    """Bounded FIFO of exported-but-undelivered handoffs."""
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._q: deque = deque()
+        self.peak = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    @property
+    def room(self) -> int:
+        return max(0, self.capacity - len(self._q))
+
+    def append(self, rec: _Handoff) -> None:
+        self._q.append(rec)
+        self.peak = max(self.peak, len(self._q))
+
+    def peek(self) -> _Handoff:
+        return self._q[0]
+
+    def popleft(self) -> _Handoff:
+        return self._q.popleft()
+
+    def parked_from(self, index: int) -> bool:
+        return any(rec.src.index == index for rec in self._q)
+
+    def drain(self) -> List[_Handoff]:
+        out, self._q = list(self._q), deque()
+        return out
+
+
+class HandoffManager:
+    """Cluster-level coordinator for prefill→decode KV handoffs.
+
+    The orchestrator wires one manager per run (when the plan carries
+    role-split replicas) and injects it into every
+    :class:`~repro.runtime.replica.ReplicaRuntime`; all methods run on
+    the orchestrator thread (planning and commit are replica bookkeeping,
+    never executor calls).  :attr:`touched` accumulates replica indices
+    whose runnable state changed (a delivery landed, a source
+    unthrottled) so the event loop can re-push them onto its heap; the
+    orchestrator drains it after every pump.
+    """
+
+    def __init__(self, executor, replicas: Callable[[], Sequence], *,
+                 queue_capacity: int = 8, obs=None):
+        self.executor = executor
+        self._replicas = replicas       # () -> live ReplicaRuntime list
+        self.queue = TransferQueue(queue_capacity)
+        self.obs = obs
+        # rid -> _Handoff for planned-but-uncommitted handoff events
+        self._planned: Dict[int, _Handoff] = {}
+        # dst index -> reserved-but-undelivered handoffs: the load the
+        # target picker must see *now* (its active/queue lengths only
+        # update at delivery, so without this every request planned in
+        # one event would pile onto the same least-loaded target).
+        self._inflight: Dict[int, int] = {}
+        self.touched: set = set()
+        self.delivered = 0              # payload adopted by the target
+        self.degraded = 0               # migrated by recompute instead
+        self.parked_total = 0           # times a handoff entered the queue
+
+    # --------------------------------------------------------- target choice
+
+    def _warmth(self, rep, state: RequestState) -> int:
+        if (not getattr(self.executor, "prefix_cache", False)
+                or state.req.prompt is None):
+            return 0
+        mgr = self.executor.kv_manager(rep.index)
+        if mgr is None:
+            return 0
+        return mgr.cached_prefix_tokens(state.req.prompt,
+                                        state.req.input_len + 1)
+
+    def _candidates(self, src, state: RequestState) -> List:
+        """Live decode-capable targets for ``state``, preferred order:
+        warm-prefix desc, then least loaded, then lowest index (the
+        deterministic tie-break both backends share).  Load counts
+        reserved-but-undelivered handoffs (``_inflight``) on top of the
+        target's admitted + queued requests — without that term every
+        request planned in one event would pile onto the same
+        instantaneously-least-loaded target."""
+        reps = [r for r in self._replicas()
+                if r.index != src.index and not r.dead and not r.draining
+                and r.config.role != "prefill"
+                and r.config.model_index == src.config.model_index]
+        reps.sort(key=lambda r: (-self._warmth(r, state),
+                                 len(r.active) + len(r.queue)
+                                 + self._inflight.get(r.index, 0),
+                                 r.index))
+        return reps
+
+    def _reserve(self, src, state: RequestState, blocks: int):
+        """Pick a target and reserve its symbolic host-tier blocks; None
+        when no candidate can accept right now."""
+        rid = state.req.req_id
+        for r in self._candidates(src, state):
+            mgr = self.executor.kv_manager(r.index)
+            if mgr is None or blocks > mgr.host_blocks:
+                continue
+            if mgr.import_swapped(rid, blocks):
+                self._inflight[r.index] = self._inflight.get(r.index, 0) + 1
+                return r
+        return None
+
+    def _release(self, index: int) -> None:
+        """One reservation on ``index`` resolved (delivered or returned)."""
+        left = self._inflight.get(index, 0) - 1
+        if left > 0:
+            self._inflight[index] = left
+        else:
+            self._inflight.pop(index, None)
+
+    def _fits_somewhere(self, src, state: RequestState, blocks: int) -> bool:
+        """Could any live candidate *ever* hold this payload?  Static in
+        the host-tier sizes, so both backends answer identically."""
+        for r in self._candidates(src, state):
+            mgr = self.executor.kv_manager(r.index)
+            if mgr is not None and blocks <= mgr.host_blocks:
+                return True
+        return False
+
+    # -------------------------------------------------------------- planning
+
+    def plan(self, rep) -> Tuple[List[RequestState], float]:
+        """Plan replica ``rep``'s next handoff event: reserve a target (or
+        transfer-queue room) for each ready request, in admission order.
+        Requests that fit neither stay in ``rep.handoff_ready`` — the
+        hard-stall backpressure tier.  Requests no target could ever hold
+        migrate by recompute immediately (no transfer to pay).  Returns
+        ``(event batch, modeled transfer seconds)``."""
+        mgr = self.executor.kv_manager(rep.index)
+        bb = self.executor.kv_block_bytes(rep.index)
+        group: List[RequestState] = []
+        t_model = 0.0
+        room = self.queue.room
+        for s in list(rep.handoff_ready):
+            rid = s.req.req_id
+            blocks = (mgr.blocks_for(logical_tokens(
+                s.req.input_len, s.quota, s.remaining))
+                if mgr is not None else 0)
+            dst = self._reserve(rep, s, blocks)
+            if dst is None:
+                if not self._fits_somewhere(rep, s, blocks):
+                    tgt = self._pick_degrade(rep, s)
+                    if tgt is None:
+                        continue    # no decode pool at all: wait for one
+                    rep.handoff_ready.remove(s)
+                    self._drop_source(rep, s, mgr)
+                    self._finish_degrade(rep, s, tgt, planned=True)
+                    continue
+                if room <= 0:
+                    continue        # queue full: hard backpressure stall
+                room -= 1
+            rep.handoff_ready.remove(s)
+            self._planned[rid] = _Handoff(s, rep, blocks, dst)
+            group.append(s)
+            dst_stages = (dst.config.stages if dst is not None
+                          else rep.config.stages)
+            t_model += costmodel.handoff_time_s(rep.config.stages,
+                                                dst_stages, blocks * bb)
+        return group, t_model
+
+    def _pick_degrade(self, src, state: RequestState):
+        cands = self._candidates(src, state)
+        return cands[0] if cands else None
+
+    def _drop_source(self, rep, state: RequestState, mgr) -> None:
+        """Release the source's device blocks + backend state without a
+        transfer (the degrade path: nothing can adopt the payload)."""
+        if mgr is not None:
+            mgr.free(state.req.req_id)
+        self.executor.preempt(rep.index, state)
+
+    def _finish_degrade(self, rep, state: RequestState, tgt, *,
+                        planned: bool) -> None:
+        """Deliver a handoff as recompute migration: the request moves to
+        the decode target with no KV and re-prefills there.  ``planned``
+        marks the no-transfer path (counted as a zero-block handoff on
+        the source's log; pump-side degrades were already logged at
+        export time)."""
+        state.swapped = False
+        state.remaining = 0
+        state.phase = Phase.QUEUED
+        # The request leaves the source at its current clock; the target
+        # must not re-prefill it earlier (its own clock may lag).
+        state.visible_at = max(state.visible_at, rep.now)
+        self.degraded += 1
+        if planned:
+            state.handoffs += 1
+            rep.handoffs += 1
+            rep.handoff_log.append((state.req.req_id, tgt.index, 0))
+        tgt.enqueue(state)
+        self.touched.add(tgt.index)
+        self.touched.add(rep.index)
+
+    # ---------------------------------------------------------------- commit
+
+    def commit(self, rep, states: Sequence[RequestState],
+               payloads: Dict[int, object], *, done_at: float = 0.0) -> int:
+        """Commit an executed handoff event on its source replica: free
+        the source's symbolic blocks (``handoff_out`` — the payload left
+        the machine, nothing lands in the local host tier), mark each
+        request in-transit, and deliver (or park) its payload.
+        ``done_at`` is the NIC completion time of the export (the
+        earliest instant the payload exists on a target).  Returns the
+        total blocks handed off (for the observability hook)."""
+        mgr = self.executor.kv_manager(rep.index)
+        total = 0
+        for s in states:
+            rid = s.req.req_id
+            rec = self._planned.pop(rid)
+            rec.payload = payloads.get(rid)
+            rec.done_at = max(done_at, rep.now)
+            blocks = mgr.handoff_out(rid) if mgr is not None else rec.blocks
+            total += blocks
+            s.swapped = True
+            s.phase = Phase.QUEUED
+            s.handoffs += 1
+            rep.handoffs += 1
+            rep.handoff_blocks += blocks
+            rep.handoff_log.append(
+                (rid, rec.dst.index if rec.dst is not None else -1, blocks))
+            if rec.dst is not None:
+                self._deliver(rec)
+            else:
+                self.queue.append(rec)
+                self.parked_total += 1
+        return total
+
+    def _deliver(self, rec: _Handoff) -> None:
+        """Land one exported payload on its reserved target: physical
+        import (a no-op sentinel on the cost backend), then enqueue — the
+        request readmits through the target's ordinary swap-in path.  A
+        refused import (shape mismatch, no paged storage) degrades to
+        recompute on the same target."""
+        s, dst = rec.state, rec.dst
+        rid = s.req.req_id
+        dmgr = self.executor.kv_manager(dst.index)
+        self._release(dst.index)
+        if dst.dead or dst.draining:
+            # The target died between reservation and delivery: return the
+            # reservation and re-queue the payload (bound softened — this
+            # only happens under faults).
+            if dmgr is not None:
+                dmgr.drop_swapped(rid)
+            rec.dst = None
+            self.queue.append(rec)
+            self.parked_total += 1
+            return
+        if self.executor.import_swapped(dst.index, s, rec.payload):
+            self.delivered += 1
+        else:
+            if dmgr is not None:
+                dmgr.drop_swapped(rid)
+            s.swapped = False
+            s.remaining = 0
+            self.degraded += 1
+        s.phase = Phase.QUEUED
+        # Causality: the payload exists on the target only once its NIC
+        # transfer finished — a lagging target clock must not admit it
+        # earlier.
+        s.visible_at = max(s.visible_at, rec.done_at)
+        dst.enqueue(s)
+        self.touched.add(dst.index)
+
+    # ------------------------------------------------------------------ pump
+
+    def pump(self) -> bool:
+        """Retry parked transfers (FIFO — head-of-line keeps ordering
+        deterministic) and wake stalled sources.  Called by the
+        orchestrator after every committed event, when target capacity
+        may have freed.  Returns True when anything was delivered."""
+        progressed = False
+        while self.queue:
+            rec = self.queue.peek()
+            dst = self._reserve(rec.src, rec.state, rec.blocks)
+            if dst is None:
+                if self._fits_somewhere(rec.src, rec.state, rec.blocks):
+                    break           # head waits for capacity, FIFO
+                tgt = self._pick_degrade(rec.src, rec.state)
+                if tgt is None:
+                    break           # no decode pool: keep waiting
+                self.queue.popleft()
+                self._finish_degrade(rec.src, rec.state, tgt, planned=False)
+                progressed = True
+                continue
+            self.queue.popleft()
+            rec.dst = dst
+            self._deliver(rec)
+            self.touched.add(rec.src.index)   # source may unthrottle
+            progressed = True
+        for r in self._replicas():
+            if r.handoff_ready and not r.dead:
+                self.touched.add(r.index)     # stalled source: re-plan
+        return progressed
+
+    def drain_touched(self) -> List[int]:
+        out, self.touched = sorted(self.touched), set()
+        return out
+
+    # ---------------------------------------------------------------- faults
+
+    def abort_source(self, index: int) -> None:
+        """A replica died with planned-but-uncommitted handoffs: return
+        every reserved target block (the export never happened; the
+        source's own device blocks are handled by its force-drain)."""
+        for rid in [rid for rid, rec in self._planned.items()
+                    if rec.src.index == index]:
+            rec = self._planned.pop(rid)
+            if rec.dst is not None:
+                self._release(rec.dst.index)
+                dmgr = self.executor.kv_manager(rec.dst.index)
+                if dmgr is not None:
+                    dmgr.drop_swapped(rid)
+
+    # ------------------------------------------------------------- accounting
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "handoff_delivered": float(self.delivered),
+            "handoff_degraded": float(self.degraded),
+            "handoff_parked_total": float(self.parked_total),
+            "handoff_queue_peak": float(self.queue.peak),
+        }

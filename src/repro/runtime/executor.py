@@ -36,7 +36,7 @@ from repro.core.plan import Config, ServingPlan
 from repro.core.workloads import Request
 
 from repro.runtime.kvcache.budget import (DEFAULT_BLOCK_SIZE, block_bytes,
-                                          make_kv_manager)
+                                          host_blocks_for, make_kv_manager)
 from repro.runtime.kvcache.manager import KVCacheManager
 from repro.runtime.kvcache.paged import (DEFAULT_ENGINE_BLOCK_SIZE,
                                          PagedEngineCache)
@@ -207,6 +207,26 @@ class Executor(abc.ABC):
         heterogeneous replicas, no paged storage, ...)."""
         return False
 
+    # --------------------------------------------- prefill/decode handoff
+
+    def handoff_out(self, rep: int, states: Sequence[RequestState],
+                    t_model: float):
+        """Export every state's KV off replica ``rep`` for migration to a
+        decode-role replica (the source side of a disaggregated
+        prefill→decode handoff): physical copy-out, then detach the
+        payload — the same two moves as a cross-replica swap migration,
+        minus the local host-tier charge (the symbolic side is
+        ``KVCacheManager.handoff_out``, the caller's job at commit).
+        Returns ``(payloads by req_id, duration)`` — ``t_model`` (the
+        modeled transfer seconds) on analytical backends, measured wall
+        seconds on real ones."""
+        payloads = {}
+        for s in states:
+            self.swap_out(rep, s)
+            payloads[s.req.req_id] = self.export_swapped(rep, s)
+        self._observe(rep, "handoff", t_model)
+        return payloads, t_model
+
     def teardown(self, rep: int) -> None:
         """Replica ``rep`` was torn down by a fault (spot reclaim /
         crash): drop whatever backend state only that replica's hardware
@@ -229,12 +249,18 @@ class CostModelExecutor(Executor):
                  models: Optional[Sequence[ModelProfile]] = None, *,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  prefix_cache: bool = False,
-                 host_blocks: int = 0):
+                 host_blocks: int = 0,
+                 host_ram_bytes=None):
         if isinstance(replicas, ServingPlan):
             replicas = replicas.replicas
         self.block_size = block_size
         self.prefix_cache = prefix_cache
         self.host_blocks = max(0, int(host_blocks))
+        # Host-RAM-derived two-tier sizing: a number (bytes per replica)
+        # or "auto" (sum the catalog's per-device host_ram_bytes over the
+        # replica's stages).  When set it supersedes the flat
+        # ``host_blocks`` count; None keeps the legacy behavior.
+        self.host_ram_bytes = host_ram_bytes
         self.configs: List[Config] = []
         self.models: List[ModelProfile] = []
         self.kv_managers: List[Optional[KVCacheManager]] = []
@@ -242,6 +268,10 @@ class CostModelExecutor(Executor):
         for cfg in replicas:
             self.add_replica(cfg)
         self._base_replicas = len(self.configs)
+
+    def _host_blocks_for(self, config: Config, model: ModelProfile) -> int:
+        return host_blocks_for(config, model, self.host_ram_bytes,
+                               self.block_size, default=self.host_blocks)
 
     def configure(self) -> None:
         """Reset to the base plan before a reuse run (the session/server
@@ -255,7 +285,7 @@ class CostModelExecutor(Executor):
             self.kv_managers[i] = make_kv_manager(
                 cfg, self.models[i], self.block_size,
                 prefix_cache=self.prefix_cache,
-                host_blocks=self.host_blocks)
+                host_blocks=self._host_blocks_for(cfg, self.models[i]))
 
     def add_replica(self, config: Config) -> None:
         self.configs.append(config)
@@ -266,7 +296,7 @@ class CostModelExecutor(Executor):
         self.kv_managers.append(make_kv_manager(
             config, self.models[-1], self.block_size,
             prefix_cache=self.prefix_cache,
-            host_blocks=self.host_blocks))
+            host_blocks=self._host_blocks_for(config, self.models[-1])))
 
     def decode_quota(self, req: Request) -> int:
         return max(1, req.output_len)
@@ -425,6 +455,7 @@ class EngineExecutor(Executor):
                  fused_steps: Optional[int] = None,
                  prefix_cache: bool = False,
                  host_blocks: int = 0,
+                 host_ram_bytes=None,
                  seed: int = 0,
                  clock: Optional[Callable[[], float]] = None):
         replicas = plan.replicas if isinstance(plan, ServingPlan) else plan
@@ -438,6 +469,9 @@ class EngineExecutor(Executor):
         self._model_table = models
         self.prefix_cache = prefix_cache
         self.host_blocks = max(0, int(host_blocks))
+        # Same host-RAM sizing policy as CostModelExecutor (None / bytes /
+        # "auto"): both backends derive identical trace-scale host tiers.
+        self.host_ram_bytes = host_ram_bytes
         self.max_batch_cap = max_batch
         self.input_len = input_len
         self.max_new = max_new
@@ -495,7 +529,9 @@ class EngineExecutor(Executor):
             self.kv_managers[i] = make_kv_manager(
                 cfg, self._model_of(cfg), self.block_size,
                 prefix_cache=self.prefix_cache,
-                host_blocks=self.host_blocks)
+                host_blocks=host_blocks_for(
+                    cfg, self._model_of(cfg), self.host_ram_bytes,
+                    self.block_size, default=self.host_blocks))
 
     # Counters are kept per replica (each replica's executor calls are
     # serialized on its own worker thread, so no locks are needed) and
@@ -539,7 +575,9 @@ class EngineExecutor(Executor):
         self.kv_managers.append(make_kv_manager(
             config, self._model_of(config), self.block_size,
             prefix_cache=self.prefix_cache,
-            host_blocks=self.host_blocks))
+            host_blocks=host_blocks_for(
+                config, self._model_of(config), self.host_ram_bytes,
+                self.block_size, default=self.host_blocks)))
         self._groups.append([])
         self._paged.append(None)
         self._gen_tokens.append(0)
@@ -894,6 +932,29 @@ class EngineExecutor(Executor):
         if paged is None or payload is None:
             return False
         return paged.import_swapped(state.req.req_id, payload)
+
+    # --------------------------------------------- prefill/decode handoff
+
+    def handoff_out(self, rep: int, states: Sequence[RequestState],
+                    t_model: float):
+        # Physical copy-out of each finished prefill's KV into detached
+        # NumPy payloads.  Dense replicas (no paged storage) have nothing
+        # exportable: None payloads make the delivery side degrade to
+        # recompute on the decode replica — the same branch the cost
+        # backend only takes when the symbolic import fails.
+        del t_model       # scheduling already advanced by the modeled time
+        paged = self._paged[rep]
+        if paged is None:
+            return {s.req.req_id: None for s in states}, 0.0
+        t0 = self.clock()
+        payloads = {}
+        for s in states:
+            paged.swap_out_request(s.req.req_id)
+            payloads[s.req.req_id] = paged.export_swapped(s.req.req_id)
+        elapsed = self.clock() - t0
+        self._compute_s[rep] += elapsed
+        self._observe(rep, "handoff", elapsed)
+        return payloads, elapsed
 
     def teardown(self, rep: int) -> None:
         # The dead replica's paged KV pools (device arrays) and host-tier

@@ -161,11 +161,17 @@ class AvailabilityWatcher:
     def __init__(self, spec: DeploymentSpec, *, strategy: str = "milp",
                  planner: Optional[Callable[[DeploymentSpec],
                                             ServingPlan]] = None,
-                 plan_options: Optional[Mapping[str, object]] = None):
+                 plan_options: Optional[Mapping[str, object]] = None,
+                 hit_rate_feedback: bool = False):
         self.spec = spec
         self.strategy = strategy
         self.planner = planner
         self.plan_options = dict(plan_options or {})
+        # When True, the runtime passes its *measured* prefix hit rates to
+        # :meth:`replan`, which folds them into the spec
+        # (``with_prefix_hit_rates``) so the re-solve credits the cache
+        # savings actually observed instead of the spec's declared guess.
+        self.hit_rate_feedback = bool(hit_rate_feedback)
         self.reset()
 
     def reset(self) -> None:
@@ -184,9 +190,17 @@ class AvailabilityWatcher:
         self.availability[event.gpu_type] = cur
         return dict(self.availability)
 
-    def replan(self, old_plan: ServingPlan) -> ServingPlan:
-        """Re-solve under the current snapshot (``spec.with_availability``)."""
+    def replan(self, old_plan: ServingPlan,
+               hit_rates: Optional[Mapping[int, float]] = None
+               ) -> ServingPlan:
+        """Re-solve under the current snapshot (``spec.with_availability``).
+        ``hit_rates`` (per-workload measured prefix hit rates, from the
+        runtime) refine the spec's throughput model when
+        ``hit_rate_feedback`` is on; ignored otherwise, so existing
+        schedules replay unchanged."""
         spec = self.spec.with_availability(self.availability)
+        if self.hit_rate_feedback and hit_rates:
+            spec = spec.with_prefix_hit_rates(hit_rates)
         if self.planner is not None:
             new_plan = self.planner(spec)
         else:

@@ -41,6 +41,36 @@ def num_kv_blocks(config: Config, model: ModelProfile,
     return max(0, int(free // bb))
 
 
+def host_ram_blocks(ram_bytes: float, model: ModelProfile,
+                    block_size: int = DEFAULT_BLOCK_SIZE) -> int:
+    """How many trace-scale KV blocks a host-RAM budget of ``ram_bytes``
+    holds for ``model`` — the two-tier cache's host side, sized from the
+    catalog's per-device ``host_ram_bytes`` instead of a hand-picked block
+    count."""
+    bb = block_bytes(model, block_size)
+    if bb <= 0 or ram_bytes <= 0:
+        return 0
+    return max(0, int(ram_bytes // bb))
+
+
+def host_blocks_for(config: Config, model: ModelProfile,
+                    host_ram_bytes, block_size: int = DEFAULT_BLOCK_SIZE,
+                    *, default: int = 0) -> int:
+    """Resolve an executor's host-tier sizing policy to a block count.
+
+    ``host_ram_bytes`` is None (keep the flat ``default`` count), a number
+    (bytes per replica), or ``"auto"`` (sum the catalog's per-device
+    ``host_ram_bytes`` over the replica's stages — each GPU contributes its
+    host's RAM share)."""
+    if host_ram_bytes is None:
+        return default
+    if host_ram_bytes == "auto":
+        ram = sum(st.tp * st.device.host_ram_bytes for st in config.stages)
+    else:
+        ram = float(host_ram_bytes)
+    return host_ram_blocks(ram, model, block_size)
+
+
 def state_overhead_blocks(model: ModelProfile, block_size: int) -> int:
     """Constant per-sequence recurrent-state cost (SSM/xLSTM), expressed in
     blocks so the manager can charge it at admission."""

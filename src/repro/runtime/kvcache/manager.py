@@ -148,6 +148,8 @@ class KVCacheManager:
         self.swap_drops = 0                 # swapped state discarded (migration)
         self.swap_exports = 0               # swapped state migrated out (faults)
         self.swap_imports = 0               # swapped state adopted from a peer
+        self.handoff_outs = 0               # prefill->decode migrations out
+        self.handoff_out_blocks = 0
 
     # ------------------------------------------------------------ queries
 
@@ -201,6 +203,8 @@ class KVCacheManager:
             "swap_ins": self.swap_ins,
             "swapped_out_blocks": self.swapped_out_blocks,
             "swapped_in_blocks": self.swapped_in_blocks,
+            "handoff_outs": self.handoff_outs,
+            "handoff_out_blocks": self.handoff_out_blocks,
         }
 
     def holds(self, req_id: int) -> bool:
@@ -467,6 +471,25 @@ class KVCacheManager:
         self.swapped_in_blocks += restored
         return True
 
+    def handoff_out(self, req_id: int) -> int:
+        """Release a prefill-finished request's device blocks for
+        migration to a decode replica (prefill/decode disaggregation).
+
+        Device-side bookkeeping is exactly a :meth:`free`, but — unlike
+        :meth:`swap_out` — nothing is charged to the *local* host tier:
+        the KV copy leaves this machine with the request, landing in the
+        target's tier via its :meth:`import_swapped`.  Returns the block
+        count to offer the target."""
+        held = self._held.get(req_id, 0)
+        assert held > 0, f"handoff_out of request {req_id} holding no blocks"
+        assert req_id not in self._swapped, \
+            f"request {req_id} is swapped, not handoff-ready"
+        self.free(req_id)
+        self.freed -= 1                    # it migrated, it did not finish
+        self.handoff_outs += 1
+        self.handoff_out_blocks += held
+        return held
+
     def drop_swapped(self, req_id: int) -> None:
         """Discard a swapped-out request's host copy (e.g. it migrated to
         another replica and must recompute there)."""
@@ -529,6 +552,8 @@ class KVCacheManager:
         self.swap_drops = 0
         self.swap_exports = 0
         self.swap_imports = 0
+        self.handoff_outs = 0
+        self.handoff_out_blocks = 0
 
 
 def logical_tokens(input_len: int, quota: int, remaining: int) -> int:

@@ -52,8 +52,19 @@ class RequestState:
     admission_index: int = -1      # replica-local admission sequence number
     swapped: bool = False          # queued with KV parked in the host tier
     swap_ins: int = 0              # times readmitted by swap-in (not prefill)
+    handoffs: int = 0              # prefill->decode replica KV migrations
+    # A migrated request's KV lands on its decode target only when the
+    # source finishes the export: the target must not admit it earlier,
+    # whatever its own (possibly lagging) local clock says.
+    visible_at: float = 0.0
     retries: int = 0               # re-serves forced by replica faults
     failed: bool = False           # dropped: retry budget exhausted / orphaned
+
+    @property
+    def ready_at(self) -> float:
+        """Earliest time a replica may admit this request: its arrival,
+        or — after a KV handoff — the moment the migrated blocks landed."""
+        return max(self.req.arrival, self.visible_at)
 
     @property
     def ttft(self) -> float:

@@ -63,6 +63,7 @@ from repro.core.plan import ServingPlan
 from repro.core.workloads import Trace
 
 from repro.runtime.actor import ReplicaWorker
+from repro.runtime.disagg import HandoffManager
 from repro.runtime.executor import Executor
 from repro.runtime.faults import FaultEvent, FaultInjector, as_injector
 from repro.runtime.lifecycle import RequestState, RuntimeResult
@@ -258,7 +259,8 @@ class ServingRuntime:
                  on_done: Optional[Callable[[RequestState], None]] = None,
                  obs=None, clock: Optional[Callable[[], float]] = None,
                  retry_budget: int = 2,
-                 worker_timeout: Optional[float] = None):
+                 worker_timeout: Optional[float] = None,
+                 handoff_queue: int = 8):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         if retry_budget < 0:
@@ -275,6 +277,9 @@ class ServingRuntime:
         # see repro.runtime.actor.WorkerTimeout).
         self.retry_budget = int(retry_budget)
         self.worker_timeout = worker_timeout
+        # Disaggregation: bound on exported-but-undelivered KV handoffs
+        # (the TransferQueue capacity; see repro.runtime.disagg).
+        self.handoff_queue = int(handoff_queue)
         self.on_done = on_done    # fired (orchestrator thread) per finished
         # Optional repro.obs.Observability — a pure observer: every hook
         # below is behind `is not None` (the disabled fast path) and only
@@ -305,6 +310,12 @@ class ServingRuntime:
         if self.obs is not None:
             for r in self.replicas:
                 self.obs.register_replica(r.index, r.config)
+        # Disaggregation: one cluster-level HandoffManager when the plan
+        # carries role-split replicas (a pure-"both" plan keeps the
+        # colocated fast path: no manager, no pump, byte-identical
+        # schedules to pre-disaggregation runs).
+        self._handoffs: Optional[HandoffManager] = None
+        self._wire_handoffs()
         # router's plan-local replica j -> global ReplicaRuntime
         self._route_map: List[ReplicaRuntime] = list(self.replicas)
         self.router = self._make_router(self.plan, self._route_map)
@@ -316,6 +327,49 @@ class ServingRuntime:
         # ride along keyed by req_id until their request lands somewhere.
         self._orphans: List[RequestState] = []
         self._swap_payloads: Dict[int, tuple] = {}
+
+    def _wire_handoffs(self) -> None:
+        """Create the :class:`HandoffManager` the first time a role-split
+        replica appears (reset, or a replan that introduces roles) and
+        inject it into every replica — a prefill-role replica only hands
+        off when ``handoff_mgr`` is wired."""
+        if self._handoffs is None and any(
+                getattr(r.config, "role", "both") != "both"
+                for r in self.replicas):
+            self._handoffs = HandoffManager(
+                self.executor, lambda: self.replicas,
+                queue_capacity=self.handoff_queue, obs=self.obs)
+        if self._handoffs is not None:
+            for r in self.replicas:
+                r.handoff_mgr = self._handoffs
+
+    def _pump_handoffs(self, heap: Optional[List], until: float) -> None:
+        """Retry parked/stalled handoffs after a committed event (target
+        capacity may have freed) and re-push every replica whose runnable
+        state changed onto the event heap (None in sequential/live mode,
+        where the caller's own loop re-polls)."""
+        hm = self._handoffs
+        if hm is None:
+            return
+        hm.pump()
+        touched = hm.drain_touched()
+        if heap is None:
+            return
+        for i in touched:
+            rep = self.replicas[i]
+            t = rep.next_event_time()
+            if t < until:
+                heapq.heappush(heap, (t, i))
+
+    def _handoff_stalled(self, rep: ReplicaRuntime) -> bool:
+        """True when ``rep`` reports a startable event time but is really
+        blocked on handoff backpressure (exports that fit nowhere, or
+        parked transfers throttling its admission) — only a pump after
+        someone else's progress can unblock it, so idleness checks must
+        not treat it as runnable."""
+        hm = self._handoffs
+        return hm is not None and bool(
+            rep.handoff_ready or hm.queue.parked_from(rep.index))
 
     def _make_router(self, plan: ServingPlan,
                      route_map: List[ReplicaRuntime]) -> AssignmentRouter:
@@ -416,6 +470,7 @@ class ServingRuntime:
         if rebalance:
             for r in new_map:
                 migrated.extend(r.strip_queue())
+        self._wire_handoffs()   # replan-added replicas join the handoff flow
         self.router = self._make_router(new_plan, new_map)
         self._route_map = new_map
         for state in sorted(migrated, key=lambda s: s.req.arrival):
@@ -431,6 +486,29 @@ class ServingRuntime:
 
     def _bump(self, key: str, n: float) -> None:
         self.info[key] = float(self.info.get(key, 0)) + n
+
+    # ------------------------------------------------- measured hit rates
+
+    def _measured_hit_rates(self) -> Optional[Dict[int, float]]:
+        """The prefix hit rate actually observed so far, summed over every
+        replica's KV manager and broadcast to all workload classes (the
+        managers don't track hits per workload) — the feedback signal
+        replan/autoscale fold back into the analytical throughput model.
+        None when the executor runs no prefix cache or no prompt token has
+        been admitted yet."""
+        if not getattr(self.executor, "prefix_cache", False):
+            return None
+        hit = prompt = 0
+        for r in self.replicas:
+            mgr = self.executor.kv_manager(r.index)
+            if mgr is not None:
+                hit += mgr.prefix_hit_tokens_total
+                prompt += mgr.prefix_prompt_tokens_total
+        if prompt <= 0:
+            return None
+        from repro.core.workloads import WORKLOAD_TYPES
+        rate = hit / prompt
+        return {w: rate for w in range(len(WORKLOAD_TYPES))}
 
     # --------------------------------------------------------------- faults
 
@@ -474,6 +552,11 @@ class ServingRuntime:
         still needs a new home."""
         displaced, lost, payloads = rep.force_drain(t, grace=grace,
                                                     extra=extra)
+        if self._handoffs is not None:
+            # Planned-but-unexported handoffs die with the replica: return
+            # their reserved target blocks (the states themselves came
+            # back through force_drain's ``extra``).
+            self._handoffs.abort_source(rep.index)
         self._swap_payloads.update(payloads)
         self._bump("replicas_lost", 1)
         if self.obs is not None:
@@ -553,7 +636,8 @@ class ServingRuntime:
         if watcher is not None:
             watcher.observe(event)
             try:
-                new_plan = watcher.replan(self.router.plan)
+                new_plan = watcher.replan(
+                    self.router.plan, hit_rates=self._measured_hit_rates())
             except Exception:
                 # Infeasible under the new snapshot (e.g. the pool went
                 # to zero): keep serving on what's left; orphans wait.
@@ -601,6 +685,11 @@ class ServingRuntime:
 
     def _autoscale_tick(self, t: float, policy) -> None:
         before_keys = [c.key for c in self.router.plan.replicas]
+        if getattr(policy, "hit_rate_feedback", False):
+            rates = self._measured_hit_rates()
+            if rates:
+                from repro.core.scheduler import _hit_rate_throughput_fn
+                policy.throughput_fn = _hit_rate_throughput_fn(rates)
         decision = policy.update(t, self._snapshot(), self.router.plan)
         if decision is None:
             return
@@ -684,10 +773,34 @@ class ServingRuntime:
                     if (source.exhausted() and ei >= len(events)
                             and (injector is None or injector.exhausted)
                             and all(r.next_event_time() == math.inf
+                                    or self._handoff_stalled(r)
                                     for r in self.replicas)):
                         break     # fully served and closed: stop ticking
         finally:
             self._close_workers()
+        if self._handoffs is not None:
+            # Handoffs the run ended around: parked transfers nothing ever
+            # absorbed and exports that never got to start — terminal,
+            # like orphans (their device/host KV is released so the leak
+            # accounting stays clean).
+            t_end = max([r.now for r in self.replicas] or [0.0])
+            for rec in self._handoffs.queue.drain():
+                rec.state.swapped = False
+                rec.state.remaining = 0
+                self._fail_request(rec.state, t_end)
+                self._bump("handoffs_stranded", 1)
+            for rep in self.replicas:
+                if not rep.handoff_ready:
+                    continue
+                mgr = self.executor.kv_manager(rep.index)
+                for s in rep.handoff_ready:
+                    if mgr is not None:
+                        mgr.free(s.req.req_id)
+                    self.executor.preempt(rep.index, s)
+                    s.remaining = 0
+                    self._fail_request(s, t_end)
+                    self._bump("handoffs_stranded", 1)
+                rep.handoff_ready = []
         if self._orphans:
             # the schedule never brought capacity back for these
             parked, self._orphans = self._orphans, []
@@ -708,6 +821,7 @@ class ServingRuntime:
             entry = {
                 "replica": r.index,
                 "config": r.config.key,
+                "role": getattr(r.config, "role", "both"),
                 "busy_s": float(r.busy),
                 "completed": r.completed,
                 "preemptions": r.preempted,
@@ -736,8 +850,24 @@ class ServingRuntime:
                     swap_out_bytes += mgr.swapped_out_blocks * bb
                     swap_in_bytes += mgr.swapped_in_blocks * bb
                     spilled += mgr.spilled_blocks
+            if self._handoffs is not None:
+                bb = self.executor.kv_block_bytes(r.index)
+                entry["handoffs"] = r.handoffs
+                entry["handoff_blocks"] = r.handoff_blocks
+                entry["handoff_bytes"] = r.handoff_blocks * bb
             per_replica.append(entry)
         info["per_replica"] = per_replica
+        if self._handoffs is not None:
+            info["handoffs"] = float(sum(r.handoffs for r in self.replicas))
+            info["handoff_bytes"] = float(sum(
+                r.handoff_blocks * self.executor.kv_block_bytes(r.index)
+                for r in self.replicas))
+            # (req_id, target replica, blocks) per committed handoff, in
+            # source commit order per replica — backend-independent for
+            # deterministic target topologies (asserted in tests).
+            info["handoff_log"] = [list(r.handoff_log)
+                                   for r in self.replicas]
+            info.update(self._handoffs.stats())
         if kv_peaks:
             info["kv_peak_blocks"] = float(max(kv_peaks))
         if swap_outs or swap_ins or spilled:
@@ -767,9 +897,21 @@ class ServingRuntime:
         """Advance every replica until no event can start before ``until``
         (atomic events may complete past it)."""
         if self.mode == "sequential":
-            for rep in self.replicas:
-                while rep.step(until=until):
-                    pass
+            while True:
+                progressed = False
+                for rep in self.replicas:
+                    while rep.step(until=until):
+                        progressed = True
+                if self._handoffs is None:
+                    break
+                # Cross-replica deliveries (handoff payloads landing on
+                # decode replicas) can unblock replicas already passed
+                # this sweep: pump, then fixpoint until nothing moves.
+                if self._handoffs.pump():
+                    progressed = True
+                self._handoffs.drain_touched()
+                if not progressed:
+                    break
         elif getattr(self.executor, "concurrent", False) \
                 and len(self.replicas) > 1:
             self._advance_concurrent(until)
@@ -789,6 +931,9 @@ class ServingRuntime:
             rep = self.replicas[i]
             pending = rep.begin_step(until)
             if pending is None:
+                # Planning itself can move work (a handoff degrading to
+                # recompute enqueues on another replica): wake targets.
+                self._pump_handoffs(heap, until)
                 continue
             try:
                 result = pending.execute(self.executor, i)
@@ -797,6 +942,7 @@ class ServingRuntime:
                 self._repush(heap, until, busy=())
                 continue
             rep.complete_step(pending, result)
+            self._pump_handoffs(heap, until)
             t2 = rep.next_event_time()
             if t2 < until:
                 heapq.heappush(heap, (t2, i))
@@ -832,6 +978,7 @@ class ServingRuntime:
                 rep = self.replicas[i]
                 pending = rep.begin_step(until)
                 if pending is None:
+                    self._pump_handoffs(heap, until)
                     continue
                 fut = self._worker(i).submit(
                     lambda p=pending, i=i: p.execute(self.executor, i))
@@ -851,6 +998,7 @@ class ServingRuntime:
                                        for r, _ in inflight.values()})
                     continue
                 rep.complete_step(pending, result)
+                self._pump_handoffs(heap, until)
                 t2 = rep.next_event_time()
                 if t2 < until:
                     heapq.heappush(heap, (t2, rep.index))
@@ -889,6 +1037,7 @@ class ServingRuntime:
                     self._worker_failure(rep, pending, exc)
                     continue
                 rep.complete_step(pending, result)
+                self._pump_handoffs(None, until)
             for state in source.take_until(until):
                 self._dispatch(state)
             launched = False
@@ -899,6 +1048,9 @@ class ServingRuntime:
                     continue
                 pending = rep.begin_step(until)
                 if pending is None:
+                    # A degrade-at-plan-time handoff may have enqueued
+                    # work on another replica without an event to commit.
+                    self._pump_handoffs(None, until)
                     continue
                 launched = True
                 if conc:
@@ -915,10 +1067,16 @@ class ServingRuntime:
                         self._worker_failure(rep, pending, exc)
                         continue
                     rep.complete_step(pending, result)
+                    self._pump_handoffs(None, until)
             if launched or done:
                 continue
             if not inflight:
+                # A handoff-stalled replica reports a startable time but
+                # begin_step keeps returning None — count it idle here,
+                # or an exhausted source could never end the run (the
+                # stranded requests fail at run end, like orphans).
                 idle = all(r.next_event_time() >= until
+                           or self._handoff_stalled(r)
                            for r in self.replicas)
                 if until == math.inf:
                     if source.exhausted() and idle:

@@ -81,17 +81,36 @@ from repro.runtime.lifecycle import Phase, RequestState
 PREEMPT_POLICIES = ("latest", "fewest-blocks")
 PREEMPT_MODES = ("recompute", "swap", "auto")
 
+# Admission-group cap for prefill-role replicas under disaggregation.
+# Prefill is compute-bound — batching prompts into one admission event is
+# time-linear (no throughput gain on either backend) but delays every
+# prompt's KV handoff until the whole group finishes, stalling the decode
+# pool.  Small groups keep the prefill->handoff->decode pipeline full.
+PREFILL_HANDOFF_GROUP_CAP = 4
+
+# Fused-decode horizon for decode-role replicas under disaggregation.
+# A colocated replica may fuse a whole quota when its queue is empty —
+# nothing else will feed it.  A decode-role replica is different: handoffs
+# stream in continuously, and an unbounded fused chunk planned against a
+# momentarily-empty queue locks the batch for seconds, parks every later
+# delivery behind it, and re-forms aligned admission waves (batch
+# collapses to the dribble admitted between waves).  Bounding the chunk
+# forces a re-plan at a cadence where fresh deliveries join the batch.
+DECODE_HANDOFF_CHUNK_STEPS = 32
+
 
 class PendingEvent:
     """One planned-but-not-yet-executed replica event.
 
     ``kind`` is ``"prefill"`` (``batch`` is the admission group),
     ``"swapin"`` (``batch`` is a group of host-swapped requests being
-    readmitted by block restore instead of prefill) or ``"decode"``
-    (``batch``/``k``/``t_step`` are the lockstep chunk).  ``until``
-    records the barrier the event was planned under so completion can
-    reproduce the sequential scheduler's post-event admission gating
-    exactly.
+    readmitted by block restore instead of prefill), ``"handoff"``
+    (``batch`` is a group of prefill-finished requests whose KV is being
+    exported to decode-role replicas; ``t_step`` carries the modeled
+    transfer seconds) or ``"decode"`` (``batch``/``k``/``t_step`` are the
+    lockstep chunk).  ``until`` records the barrier the event was planned
+    under so completion can reproduce the sequential scheduler's
+    post-event admission gating exactly.
     """
 
     __slots__ = ("kind", "batch", "k", "t_step", "until")
@@ -112,6 +131,8 @@ class PendingEvent:
             return executor.prefill(rep, self.batch)
         if self.kind == "swapin":
             return executor.swap_in(rep, self.batch)
+        if self.kind == "handoff":
+            return executor.handoff_out(rep, self.batch, self.t_step)
         return executor.decode(rep, self.batch, self.k, self.t_step)
 
 
@@ -132,6 +153,25 @@ class ReplicaRuntime:
         self.executor = executor
         self.preempt_policy = preempt_policy
         self.preempt_mode = preempt_mode
+        # Disaggregation: "both" (colocated, the default), "prefill"
+        # (admission + prefill, then KV handoff) or "decode" (receives
+        # handoffs).  Prefill behavior only activates when the
+        # orchestrator wires a HandoffManager into ``handoff_mgr``; a
+        # bare ReplicaRuntime with a prefill-role config serves colocated.
+        self.role = getattr(config, "role", "both")
+        self.handoff_mgr = None
+        # Prefill-finished requests awaiting a handoff event, in
+        # admission order; they hold device blocks until the export.
+        self.handoff_ready: List[RequestState] = []
+        self.handoffs = 0
+        self.handoff_blocks = 0
+        # (req_id, target index, blocks) per completed handoff, in source
+        # commit order — backend-independent for a deterministic target
+        # topology, asserted in tests/test_disagg.
+        self.handoff_log: List[Tuple[int, int, int]] = []
+        # NIC timeline for KV exports: transfers overlap compute but
+        # serialize among themselves on the replica's interconnect.
+        self.nic_free = 0.0
         # Optional repro.obs.Observability; hooks fire at commit points
         # only and never read the clock (pure observer — see repro.obs).
         self.obs = obs
@@ -160,7 +200,7 @@ class ReplicaRuntime:
 
     def enqueue(self, state: RequestState) -> None:
         state.replica = self.index
-        bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
+        bisect.insort(self.queue, state, key=lambda s: s.ready_at)
 
     def strip_queue(self) -> List[RequestState]:
         """Remove and return all not-yet-admitted requests (for migration).
@@ -211,10 +251,13 @@ class ReplicaRuntime:
         lost: List[RequestState] = []
         seen = set()
         affected: List[RequestState] = []
-        for s in list(self.active) + list(extra):
+        # handoff_ready requests hold device blocks exactly like active
+        # ones (their export never ran): same swap-or-lose treatment.
+        for s in list(self.active) + list(self.handoff_ready) + list(extra):
             if id(s) not in seen:
                 seen.add(id(s))
                 affected.append(s)
+        self.handoff_ready = []
         affected.sort(key=lambda s: s.admission_index)
         budget = float(grace)
         for s in affected:
@@ -319,7 +362,7 @@ class ReplicaRuntime:
         state.phase = Phase.QUEUED
         state.preemptions += 1
         self.preempted += 1
-        bisect.insort(self.queue, state, key=lambda s: s.req.arrival)
+        bisect.insort(self.queue, state, key=lambda s: s.ready_at)
         if self.obs is not None:
             self.obs.on_preempt(self, state, self.now, swapped=use_swap,
                                 swap_bytes=swap_bytes)
@@ -339,23 +382,33 @@ class ReplicaRuntime:
         consistent queue)."""
         if self.draining or not self.queue or self.now >= until:
             return None
+        if self.handoff_ready or (
+                self.handoff_mgr is not None
+                and self.handoff_mgr.queue.parked_from(self.index)):
+            # Handoff backpressure: while this replica has exported-but-
+            # undelivered (or not-yet-exported) KV outstanding, admission
+            # throttles — prefill capacity must not outrun the decode
+            # pool's ability to absorb it.
+            return None
         mgr = self.executor.kv_manager(self.index)
         group: List[RequestState] = []
         kind = "prefill"
         cap = math.inf
+        if self.role == "prefill" and self.handoff_mgr is not None:
+            cap = PREFILL_HANDOFF_GROUP_CAP
         for s in self.active:
             cap = min(cap, self.executor.max_batch(self.index,
                                                    s.req.workload))
         while self.queue:
             nxt = self.queue[0]
-            if nxt.req.arrival > self.now:
+            if nxt.ready_at > self.now:
                 if self.active or group:
                     break
-                if nxt.req.arrival >= until:
+                if nxt.ready_at >= until:
                     break   # the jump would start admission at/after the
                             # barrier (e.g. arrival == replan time): defer,
                             # exactly like the event heap does
-                self.now = nxt.req.arrival   # idle: jump to next arrival
+                self.now = nxt.ready_at   # idle: jump to next arrival
             if group and nxt.swapped != (kind == "swapin"):
                 break       # homogeneous group: next kind waits its turn
             c = min(cap, self.executor.max_batch(self.index,
@@ -396,8 +449,10 @@ class ReplicaRuntime:
             t_step = self.executor.step_time(self.index, batch)
             k = min(s.remaining for s in batch)
             k = min(k, self.executor.max_steps_per_event)
+            if self.handoff_mgr is not None and self.role != "prefill":
+                k = min(k, DECODE_HANDOFF_CHUNK_STEPS)
             if self.queue and t_step > 0:
-                next_arrival = self.queue[0].req.arrival
+                next_arrival = self.queue[0].ready_at
                 if next_arrival > self.now:
                     k = max(1, min(k, int((next_arrival - self.now)
                                           / max(t_step, 1e-12)) + 1))
@@ -407,7 +462,7 @@ class ReplicaRuntime:
             if k > 1 and t_step <= 0.0 and (
                     until < math.inf
                     or (self.queue
-                        and self.queue[0].req.arrival > self.now)):
+                        and self.queue[0].ready_at > self.now)):
                 # No step-time estimate yet (a real engine's first chunk):
                 # the arrival/barrier clamps above are inoperative, so a
                 # fused chunk would blast past a pending arrival or replan
@@ -431,6 +486,19 @@ class ReplicaRuntime:
                          allow_overflow=True)
         return PendingEvent("decode", batch, k=k, t_step=t_step, until=until)
 
+    def _plan_handoff(self, until: float = math.inf
+                      ) -> Optional[PendingEvent]:
+        """Plan the export of ready prefill-finished requests to decode
+        replicas: the :class:`~repro.runtime.disagg.HandoffManager`
+        reserves a target (or transfer-queue room) per request and prices
+        the modeled transfer; requests that fit neither stay in
+        ``handoff_ready`` (backpressure — the pump re-plans us when
+        capacity frees).  Returns None when nothing can move."""
+        group, t_model = self.handoff_mgr.plan(self)
+        if not group:
+            return None
+        return PendingEvent("handoff", group, t_step=t_model, until=until)
+
     # ---------------------------------------------------------- completion
 
     def _complete_prefill(self, group: Sequence[RequestState],
@@ -447,6 +515,12 @@ class ReplicaRuntime:
         for s in group:
             if s.remaining <= 0:    # quota exhausted by the first token
                 self._finish(s)
+            elif self.role == "prefill" and self.handoff_mgr is not None:
+                # Disaggregated: the first token is this replica's last
+                # work for the request — its KV hands off to a decode
+                # replica instead of decoding here.
+                s.phase = Phase.QUEUED
+                self.handoff_ready.append(s)
             else:
                 self.active.append(s)
         if self.obs is not None:
@@ -473,12 +547,36 @@ class ReplicaRuntime:
         for s in group:
             if s.remaining <= 0:   # defensive: quota exhausted pre-swap
                 self._finish(s)
+            elif self.role == "prefill" and self.handoff_mgr is not None:
+                # A swapped request landed on a prefill replica (fault
+                # migration): restore, then hand off — prefill replicas
+                # never decode.
+                s.phase = Phase.QUEUED
+                self.handoff_ready.append(s)
             else:
                 self.active.append(s)
         if self.obs is not None:
             self.obs.on_swap_in(
                 self, group, start, offsets,
                 swap_bytes=blocks * self.executor.kv_block_bytes(self.index))
+
+    def _complete_handoff(self, pending: PendingEvent, result) -> None:
+        """Commit an executed handoff export.  The transfer rides the
+        replica's interconnect *in parallel* with upcoming compute —
+        successive exports serialize on the NIC timeline (``nic_free``),
+        not on the compute clock — so the manager delivers each payload
+        at the NIC completion time while this replica immediately plans
+        its next prefill."""
+        payloads, duration = result
+        start = max(self.now, self.nic_free)
+        self.nic_free = start + duration
+        blocks = self.handoff_mgr.commit(self, pending.batch, payloads,
+                                         done_at=self.nic_free)
+        if self.obs is not None:
+            self.obs.on_handoff(
+                self, pending.batch, start, self.nic_free,
+                blocks=blocks,
+                n_bytes=blocks * self.executor.kv_block_bytes(self.index))
 
     def _complete_decode(self, pending: PendingEvent,
                          duration: float) -> None:
@@ -503,10 +601,10 @@ class ReplicaRuntime:
         """Earliest time this replica's next event can start (``inf`` when
         it has nothing to do).  The orchestrator's global heap is keyed on
         this."""
-        if self.active:
+        if self.active or self.handoff_ready:
             return self.now
         if self.queue and not self.draining:
-            return max(self.now, self.queue[0].req.arrival)
+            return max(self.now, self.queue[0].ready_at)
         return math.inf
 
     def begin_step(self, until: float = math.inf) -> Optional[PendingEvent]:
@@ -517,10 +615,17 @@ class ReplicaRuntime:
         event can start."""
         if self.now >= until:
             return None
+        if self.handoff_ready:
+            event = self._plan_handoff(until)
+            if event is not None:
+                return event
+            if self.handoff_ready:
+                return None   # stalled: the pump re-pushes us when a
+                              # decode replica frees capacity
         if not self.active:
             if not self.queue or self.draining:
                 return None
-            if self.queue[0].req.arrival >= until:
+            if self.queue[0].ready_at >= until:
                 return None
             event = self._plan_admission_event(until)
             if event is None:
@@ -541,6 +646,8 @@ class ReplicaRuntime:
             self._complete_prefill(pending.batch, result)
         elif pending.kind == "swapin":
             self._complete_swapin(pending.batch, result)
+        elif pending.kind == "handoff":
+            self._complete_handoff(pending, result)
         else:
             self._complete_decode(pending, result)
         # The sequential scheduler re-attempts admission right after every
@@ -561,14 +668,18 @@ class ReplicaRuntime:
 
     # --------------------------------------------- sequential-mode interface
 
-    def _admit(self, until: float = math.inf) -> None:
+    def _admit(self, until: float = math.inf) -> bool:
         """Admit arrived requests in batched groups, paying each group's
         prefill (or swap-in restore); loops so arrivals landing during a
-        prefill window are admitted before decode resumes."""
+        prefill window are admitted before decode resumes.  Returns True
+        when at least one group was admitted (throttled/blocked admission
+        makes no progress — the sequential driver must not spin on it)."""
+        admitted = False
         while True:
             event = self._plan_admission_event(until)
             if event is None:
-                return
+                return admitted
+            admitted = True
             result = event.execute(self.executor, self.index)
             if event.kind == "prefill":
                 self._complete_prefill(event.batch, result)
@@ -576,21 +687,31 @@ class ReplicaRuntime:
                 self._complete_swapin(event.batch, result)
 
     def step(self, until: float = math.inf) -> bool:
-        """Advance one compound event (admission and/or lockstep decode).
-        Returns False when no event can start strictly before ``until`` —
-        atomic events may still complete past it.  This is the sequential
-        drive mode; the event heap uses :meth:`begin_step` /
-        :meth:`complete_step` instead."""
+        """Advance one compound event (admission, handoff export, and/or
+        lockstep decode).  Returns False when no event can start strictly
+        before ``until`` — atomic events may still complete past it.
+        This is the sequential drive mode; the event heap uses
+        :meth:`begin_step` / :meth:`complete_step` instead."""
         if self.now >= until:
             return False
+        if self.handoff_ready:
+            event = self._plan_handoff(until)
+            if event is not None:
+                self._complete_handoff(
+                    event, event.execute(self.executor, self.index))
+                return True
+            # Everything either degraded (progress: handoff_ready
+            # drained without a transfer) or stalled on backpressure.
+            return not self.handoff_ready
         if not self.active:
             if not self.queue or self.draining:
                 return False
-            if self.queue[0].req.arrival >= until:
+            if self.queue[0].ready_at >= until:
                 return False
-            self._admit(until)
+            progressed = self._admit(until)
             if not self.active:
-                return True   # admitted requests completed at the first token
+                return progressed  # first-token completions / handoffs /
+                                   # throttled admission (no progress)
             if self.now >= until:
                 return True   # prefill crossed the barrier: decode may not
                               # *start* at/after until (event mode defers it

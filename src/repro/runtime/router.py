@@ -42,6 +42,13 @@ class AssignmentRouter:
         self._fallback: Dict[int, int] = {}
         self._by_model: Dict[int, List[int]] = {}
         for i, cfg in enumerate(plan.replicas):
+            # Phase-aware routing: arrivals never land on a decode-role
+            # replica directly — decode pools are fed by KV handoff (the
+            # planner's disagg strategy gives them zero assignment mass,
+            # which already keeps them off the demand path; this keeps
+            # them off the fallback path too).
+            if getattr(cfg, "role", "both") == "decode":
+                continue
             self._by_model.setdefault(cfg.model_index, []).append(i)
         # (prefix_warmth_of_choice | None, used_fallback) for the most
         # recent route() call — read by the runtime's observability hook

@@ -442,6 +442,13 @@ def serve(spec_or_plan: Union[DeploymentSpec, ServingPlan], *,
         the_plan = plan_spec(spec, strategy=strategy, **(plan_options or {}))
         models = list(spec.models) if models is None else list(models)
         slo = spec.slo if slo is None else slo
+        if (spec.host_ram_bytes is not None
+                and "host_ram_bytes" not in executor_options
+                and executor is None):
+            # The spec's host-RAM budget sizes each replica's two-tier KV
+            # host pool (see kvcache.budget.host_blocks_for); an explicit
+            # executor option still wins.
+            executor_options["host_ram_bytes"] = spec.host_ram_bytes
     elif isinstance(spec_or_plan, ServingPlan):
         the_plan = spec_or_plan
     else:

@@ -1,0 +1,475 @@
+"""Prefill/decode disaggregation tests: transfer-queue and handoff-manager
+units (capacity gating, backpressure, degrade-to-recompute), the "disagg"
+planner strategy (affinity partition, role-tagged merged plans, fallback),
+end-to-end disaggregated serving on the cost backend, backend-identical
+handoff + admission logs, disagg-vs-colocated byte-identical engine token
+streams, "both"-role degeneration to colocated behavior, host-RAM-derived
+host-tier sizing, measured-hit-rate replan feedback, and the trace-summary
+handoff columns cross-checked against ``result.info``."""
+import dataclasses
+import json
+import math
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.catalog import GPU_CATALOG, DeviceType
+from repro.core.costmodel import ModelProfile, Stage, phase_affinity
+from repro.core.plan import Config, ServingPlan
+from repro.core.scheduler import partition_by_affinity
+from repro.core.spec import DeploymentSpec
+from repro.core.workloads import WORKLOAD_TYPES, Request, Trace
+from repro.runtime import (CostModelExecutor, HandoffManager, ServingRuntime,
+                           TransferQueue)
+from repro.runtime.disagg import _Handoff
+from repro.runtime.kvcache.budget import host_blocks_for, host_ram_blocks
+
+BS = 16
+TINY = ModelProfile(name="tiny", n_layers=2, d_model=256, n_kv_heads=2,
+                    head_dim=64, params_total=2e6, params_active=2e6)
+BLOCK_BYTES = BS * TINY.kv_bytes_per_token
+
+
+def _replica(num_blocks: int = 12, role: str = "both", **dev_kw) -> Config:
+    free = (num_blocks + 0.5) * BLOCK_BYTES
+    mem = ((free + TINY.weight_bytes + costmodel.RUNTIME_OVERHEAD_BYTES)
+           / costmodel.MEMORY_UTIL)
+    dev = DeviceType("disagg-test", 1e12, 1e11, mem, 1.0, 8, 1e11, 1e9,
+                     "x", **dev_kw)
+    return Config(stages=(Stage(dev, 1, 1.0),), model_index=0, model=TINY,
+                  role=role)
+
+
+def _plan(cfgs, n_requests: int) -> ServingPlan:
+    """Manual plan: arrival mass on non-decode replicas only (what the
+    "disagg" strategy emits)."""
+    cfgs = list(cfgs)
+    takers = [i for i, c in enumerate(cfgs) if c.role != "decode"]
+    assignment = np.zeros((len(cfgs), 1))
+    for i in takers:
+        assignment[i, 0] = 1.0 / len(takers)
+    return ServingPlan(replicas=cfgs, assignment=assignment,
+                       demands=[(0, 0, float(n_requests))], makespan=1.0,
+                       cost=sum(c.cost for c in cfgs))
+
+
+def _trace(n=4, input_len=30, output_len=4) -> Trace:
+    return Trace("disagg", tuple(
+        Request(req_id=i, workload=0, input_len=input_len,
+                output_len=output_len, arrival=0.0) for i in range(n)))
+
+
+def _run_cost(cfgs, trace, *, host_blocks=16, **ex_kw):
+    executor = CostModelExecutor(list(cfgs), [TINY],
+                                 host_blocks=host_blocks, **ex_kw)
+    runtime = ServingRuntime(_plan(cfgs, trace.num_requests), executor)
+    res = runtime.run(trace)
+    return res, runtime, executor
+
+
+# ------------------------------------------------- unit: transfer queue
+
+class _Src:
+    def __init__(self, index):
+        self.index = index
+
+
+def test_transfer_queue_capacity_and_fifo():
+    q = TransferQueue(capacity=2)
+    assert q.room == 2 and not q and len(q) == 0
+    a = _Handoff(state=None, src=_Src(0), blocks=1, dst=None)
+    b = _Handoff(state=None, src=_Src(1), blocks=1, dst=None)
+    q.append(a)
+    q.append(b)
+    assert q.room == 0 and q.peak == 2
+    assert q.parked_from(0) and q.parked_from(1) and not q.parked_from(2)
+    assert q.peek() is a and q.popleft() is a       # FIFO
+    assert q.room == 1 and q.peak == 2              # peak is sticky
+    assert q.drain() == [b] and not q
+    with pytest.raises(ValueError):
+        TransferQueue(capacity=0)
+
+
+# ---------------------------------------------- unit: affinity partition
+
+def test_partition_by_affinity_splits_pool():
+    avail = {"H100": 2, "A100": 2, "A40": 4, "4090": 4}
+    pre, dec = partition_by_affinity(GPU_CATALOG, avail)
+    assert pre and dec and not set(pre) & set(dec)
+    assert sorted(pre + dec) == sorted(avail)
+    # every prefill-pool type is at least as prefill-leaning as every
+    # decode-pool type
+    assert (min(phase_affinity(GPU_CATALOG[t]) for t in pre)
+            >= max(phase_affinity(GPU_CATALOG[t]) for t in dec))
+    # degenerate pools: fewer than two types -> both sides identical
+    solo_p, solo_d = partition_by_affinity(GPU_CATALOG, {"H100": 4})
+    assert solo_p == solo_d == ["H100"]
+    # zero-count and unknown types are ignored
+    pre2, dec2 = partition_by_affinity(
+        GPU_CATALOG, {"H100": 2, "A100": 0, "not-a-gpu": 3, "A40": 1})
+    assert sorted(pre2 + dec2) == ["A40", "H100"]
+
+
+# -------------------------------------------------- planner: "disagg"
+
+def _catalog_spec(budget=20.0):
+    from repro.core import AVAILABILITY_SNAPSHOTS, LLAMA3_8B, make_trace
+    trace = make_trace("trace1", num_requests=120, seed=0)
+    return DeploymentSpec(models=[LLAMA3_8B], workload=trace,
+                          catalog=GPU_CATALOG,
+                          availability=AVAILABILITY_SNAPSHOTS["avail1"],
+                          budget=budget)
+
+
+def test_disagg_plan_roles_and_zero_decode_mass():
+    from repro.core import plan
+    spec = _catalog_spec()
+    p = plan(spec, strategy="disagg", budget_splits=(0.5,), tol=2.0)
+    roles = {c.role for c in p.replicas}
+    assert roles == {"prefill", "decode"}
+    assert p.solver_info["disagg"] == 1.0
+    assert p.solver_info["budget_split"] == 0.5
+    assert p.cost <= spec.budget + 1e-9
+    # arrivals route to prefill replicas only: decode rows carry no mass
+    for i, c in enumerate(p.replicas):
+        mass = float(np.abs(p.assignment[i]).sum())
+        if c.role == "decode":
+            assert mass == 0.0
+        else:
+            assert "|prefill" in c.key
+    # the merged makespan is the slower phase's
+    assert math.isclose(p.makespan,
+                        max(p.solver_info["prefill_makespan"],
+                            p.solver_info["decode_makespan"]))
+    # prefill and decode pools draw from disjoint GPU types
+    pre_types = {st.device.name for c in p.replicas
+                 if c.role == "prefill" for st in c.stages}
+    dec_types = {st.device.name for c in p.replicas
+                 if c.role == "decode" for st in c.stages}
+    assert pre_types and dec_types and not pre_types & dec_types
+
+
+def test_disagg_plan_falls_back_on_single_type():
+    from repro.core import plan
+    spec = _catalog_spec()
+    solo = spec.with_availability({"H100": 8})
+    p = plan(solo, strategy="disagg", tol=2.0)
+    assert p.solver_info.get("disagg_fallback") == 1.0
+    assert all(c.role == "both" for c in p.replicas)
+    with pytest.raises(ValueError):
+        plan(spec.with_objective("cost", slo_makespan=1e4),
+             strategy="disagg")
+
+
+# --------------------------------- integration: disaggregated cost serving
+
+def test_disagg_cost_end_to_end_handoff_accounting():
+    cfgs = [_replica(role="prefill"), _replica(role="decode")]
+    trace = _trace(n=4)
+    res, runtime, executor = _run_cost(cfgs, trace)
+    pre, dec = runtime.replicas
+    assert res.num_completed == 4 and res.num_failed == 0
+    # every request prefilled on the prefill replica, decoded on the
+    # decode replica after exactly one KV handoff
+    assert pre.handoffs == 4 and dec.handoffs == 0
+    assert all(r.handoffs == 1 for r in res.records)
+    assert [rid for rid, dst, _ in pre.handoff_log] == [0, 1, 2, 3]
+    assert all(dst == dec.index for _, dst, _ in pre.handoff_log)
+    assert all(blocks > 0 for _, _, blocks in pre.handoff_log)
+    # the payload landed in the target's host tier and readmitted through
+    # the ordinary swap-in path
+    assert res.info["handoff_delivered"] == 4.0
+    assert res.info["handoff_degraded"] == 0.0
+    assert res.info["handoffs"] == 4.0
+    assert res.info["handoff_bytes"] == pre.handoff_blocks * BLOCK_BYTES
+    assert res.info["handoff_log"][pre.index] == list(pre.handoff_log)
+    by_rep = {e["replica"]: e for e in res.info["per_replica"]}
+    assert by_rep[pre.index]["role"] == "prefill"
+    assert by_rep[dec.index]["role"] == "decode"
+    assert by_rep[pre.index]["handoffs"] == 4
+    # the source holds no blocks at the end; the decode side swapped in
+    assert executor.kv_manager(pre.index).used_blocks == 0
+    dmgr = executor.kv_manager(dec.index)
+    assert dmgr.swap_ins == 4 and dmgr.used_blocks == 0
+    assert dmgr.host_used_blocks == 0
+    # decode-side admission cohorts are swap-in readmissions of the
+    # handed-off requests
+    assert sorted(rid for g in dec.admission_log for rid in g) == [0, 1, 2, 3]
+
+
+def test_disagg_backpressure_parks_then_drains():
+    # decode host tier holds one 2-block payload at a time: concurrent
+    # handoffs must park in the transfer queue and drain as capacity frees
+    cfgs = [_replica(role="prefill"), _replica(role="decode")]
+    trace = _trace(n=4)
+    res, runtime, _ = _run_cost(cfgs, trace, host_blocks=2)
+    assert res.num_completed == 4 and res.num_failed == 0
+    assert res.info["handoff_delivered"] == 4.0
+    assert res.info["handoff_degraded"] == 0.0
+    assert res.info["handoff_parked_total"] > 0
+    assert res.info["handoff_queue_peak"] >= 1.0
+    assert res.info.get("handoffs_stranded", 0.0) == 0.0
+    assert runtime._handoffs is not None and not runtime._handoffs.queue
+
+
+def test_disagg_unfittable_payload_degrades_to_recompute():
+    # a 2-block payload can never fit a 1-block decode host tier: the
+    # request still migrates, by recompute (zero-block handoff)
+    cfgs = [_replica(role="prefill"), _replica(role="decode")]
+    trace = _trace(n=3)
+    res, runtime, executor = _run_cost(cfgs, trace, host_blocks=1)
+    pre, dec = runtime.replicas
+    assert res.num_completed == 3 and res.num_failed == 0
+    assert res.info["handoff_delivered"] == 0.0
+    assert res.info["handoff_degraded"] == 3.0
+    assert all(blocks == 0 for _, _, blocks in pre.handoff_log)
+    assert executor.kv_manager(dec.index).swap_ins == 0
+    # degraded migration re-prefills on the decode target
+    assert sorted(rid for g in dec.admission_log for rid in g) == [0, 1, 2]
+
+
+def test_disagg_admission_throttles_while_stalled():
+    """While a prefill replica has staged or parked handoffs, it plans no
+    new admissions (backpressure): prefill capacity must not outrun the
+    decode pool without bound."""
+    from repro.runtime.lifecycle import RequestState
+    cfgs = [_replica(role="prefill"), _replica(role="decode")]
+    executor = CostModelExecutor(list(cfgs), [TINY], host_blocks=16)
+    runtime = ServingRuntime(_plan(cfgs, 2), executor)
+    pre = runtime.replicas[0]
+
+    def fresh(rid):
+        return RequestState(req=Request(req_id=rid, workload=0, input_len=30,
+                                        output_len=4, arrival=0.0))
+
+    # a transfer parked from this source replica throttles admission
+    pre.enqueue(fresh(9))
+    runtime._handoffs.queue.append(
+        _Handoff(state=None, src=pre, blocks=1, dst=None))
+    assert pre._plan_admission_event(math.inf) is None
+    runtime._handoffs.queue.drain()
+    # so does a staged-but-unplanned handoff on the replica itself
+    pre.handoff_ready.append(fresh(8))
+    assert pre._plan_admission_event(math.inf) is None
+    pre.handoff_ready.clear()
+    # unthrottled: the queued request admits (planning consumes the queue)
+    assert pre._plan_admission_event(math.inf) is not None
+    assert not pre.queue
+
+
+def test_both_role_plan_degenerates_to_colocated():
+    """A plan whose replicas are all role="both" wires no handoff manager
+    and reproduces exactly the legacy colocated behavior."""
+    trace = _trace(n=4)
+    cfgs = [_replica(), _replica()]
+    res, runtime, _ = _run_cost(cfgs, trace)
+    assert runtime._handoffs is None
+    assert res.num_completed == 4
+    assert "handoffs" not in res.info
+    assert "handoff_delivered" not in res.info
+    assert all("role" not in c.key for c in runtime.plan.replicas)
+    assert all(r.handoffs == 0 and not r.handoff_ready
+               for r in runtime.replicas)
+    assert all(e["role"] == "both" for e in res.info["per_replica"])
+
+
+# --------------------------- acceptance: backend-identical handoff logs
+
+def _run_engine(cfgs, trace, *, host_blocks=16, num_blocks=12, **ex_kw):
+    from repro.configs import get_config
+    from repro.obs import TickClock
+    from repro.runtime import EngineExecutor
+    plan = _plan(cfgs, trace.num_requests)
+    executor = EngineExecutor(plan, [get_config("llama3-8b").reduced()],
+                              models=[TINY], max_batch=8, input_len=8,
+                              max_new=5, fused_steps=1,
+                              host_blocks=host_blocks, clock=TickClock(),
+                              **ex_kw)
+    runtime = ServingRuntime(plan, executor)
+    res = runtime.run(trace)
+    return res, runtime, executor
+
+
+def test_disagg_backend_identical_handoff_and_admission_logs():
+    """Acceptance: the cost-model and engine backends plan, gate, and
+    commit the same handoffs — per-replica admission logs and handoff
+    logs are identical."""
+    pytest.importorskip("jax")
+    cfgs = [_replica(role="prefill"), _replica(role="decode")]
+    trace = _trace(n=3)
+    cost_res, cost_rt, _ = _run_cost(cfgs, trace)
+    eng_res, eng_rt, _ = _run_engine(cfgs, trace)
+    assert cost_res.num_completed == eng_res.num_completed == 3
+    for cr, er in zip(cost_rt.replicas, eng_rt.replicas):
+        assert cr.admission_log == er.admission_log
+        assert cr.handoff_log == er.handoff_log
+    assert cost_res.info["handoffs"] == eng_res.info["handoffs"] == 3.0
+    assert (cost_res.info["handoff_delivered"]
+            == eng_res.info["handoff_delivered"] == 3.0)
+
+
+def test_disagg_streams_byte_identical_to_colocated_engine():
+    """Acceptance: a disaggregated run's token streams equal the
+    colocated run's exactly — the handed-off KV resumes decode on the
+    decode replica with no re-prefill and no token drift."""
+    pytest.importorskip("jax")
+    trace = _trace(n=3)
+    colo_res, _, colo_ex = _run_engine([_replica()], trace)
+    dis_res, dis_rt, dis_ex = _run_engine(
+        [_replica(role="prefill"), _replica(role="decode")], trace)
+    assert colo_res.num_completed == dis_res.num_completed == 3
+    assert dis_res.info["handoff_delivered"] == 3.0
+    assert dis_res.info["handoff_degraded"] == 0.0
+    assert set(dis_ex.token_log) == set(colo_ex.token_log)
+    for rid, colo_log in colo_ex.token_log.items():
+        assert list(dis_ex.token_log[rid]) == list(colo_log)
+    # the physical pools are clean on both sides
+    for rep in (0, 1):
+        paged = dis_ex._paged[rep]
+        assert paged.allocator.used_blocks == 0
+
+
+# ------------------------------------ satellite: host-RAM-derived sizing
+
+def test_host_ram_block_sizing_helpers():
+    assert host_ram_blocks(0.0, TINY, BS) == 0
+    assert host_ram_blocks(-10.0, TINY, BS) == 0
+    assert host_ram_blocks(7 * BLOCK_BYTES, TINY, BS) == 7
+    cfg = _replica()
+    assert host_blocks_for(cfg, TINY, None, BS, default=5) == 5
+    assert host_blocks_for(cfg, TINY, 7 * BLOCK_BYTES, BS) == 7
+    ram_cfg = _replica(host_ram_bytes=3 * BLOCK_BYTES)
+    assert host_blocks_for(ram_cfg, TINY, "auto", BS) == 3
+
+
+def test_executor_host_tier_sized_from_ram_budget():
+    cfg = _replica(host_ram_bytes=6 * BLOCK_BYTES)
+    executor = CostModelExecutor([cfg], [TINY], host_blocks=2,
+                                 host_ram_bytes="auto")
+    assert executor.kv_manager(0).host_blocks == 6
+    explicit = CostModelExecutor([cfg], [TINY], host_blocks=2,
+                                 host_ram_bytes=9 * BLOCK_BYTES)
+    assert explicit.kv_manager(0).host_blocks == 9
+    fallback = CostModelExecutor([cfg], [TINY], host_blocks=2)
+    assert fallback.kv_manager(0).host_blocks == 2
+
+
+def test_spec_host_ram_validated_and_catalog_defaults():
+    spec = _catalog_spec()
+    assert spec.host_ram_bytes is None
+    auto = spec.with_host_ram("auto")
+    assert auto.host_ram_bytes == "auto"
+    sized = spec.with_host_ram(64 * 1024**3)
+    assert sized.host_ram_bytes == float(64 * 1024**3)
+    with pytest.raises(ValueError):
+        spec.with_host_ram("lots")
+    with pytest.raises(ValueError):
+        spec.with_host_ram(-1.0)
+    # catalog carries per-device host RAM + handoff interconnect defaults
+    for dev in GPU_CATALOG.values():
+        assert dev.host_ram_bytes > 0
+        assert dev.interconnect_bw > 0
+
+
+# --------------------------- satellite: measured-hit-rate replan feedback
+
+def test_watcher_feeds_measured_hit_rates_into_replan():
+    from repro.runtime import AvailabilityWatcher
+    spec = _catalog_spec()
+    seen = []
+
+    def planner(s):
+        seen.append(s)
+        return _plan([_replica()], 1)
+
+    old = _plan([_replica()], 1)
+    off = AvailabilityWatcher(spec, planner=planner)
+    off.replan(old, hit_rates={0: 0.5})
+    assert seen[-1].prefix_hit_rates is None        # default: ignored
+    on = AvailabilityWatcher(spec, planner=planner, hit_rate_feedback=True)
+    on.replan(old, hit_rates={0: 0.5})
+    assert seen[-1].prefix_hit_rates == {0: 0.5}
+    on.replan(old, hit_rates=None)                  # no measurement yet
+    assert seen[-1].prefix_hit_rates is None
+
+
+def test_runtime_measures_prefix_hit_rates_for_feedback():
+    from repro.core.workloads import make_shared_prefix_trace
+    cfg = _replica(num_blocks=50)
+    trace = make_shared_prefix_trace("sp", 6, input_len=48, output_len=4,
+                                     prefix_pool_size=1, prefix_len=32,
+                                     hit_ratio=1.0, arrival_rate=None,
+                                     seed=2)
+    executor = CostModelExecutor([cfg], [TINY], prefix_cache=True)
+    runtime = ServingRuntime(_plan([cfg], trace.num_requests), executor)
+    res = runtime.run(trace)
+    assert res.info["prefix_hit_rate"] > 0
+    rates = runtime._measured_hit_rates()
+    assert rates is not None
+    assert set(rates) == set(range(len(WORKLOAD_TYPES)))
+    assert all(0.0 < v <= 1.0 for v in rates.values())
+    assert math.isclose(rates[0], res.info["prefix_hit_rate"])
+    # cold executor: nothing measured, nothing fed back
+    cold = CostModelExecutor([cfg], [TINY])
+    cold_rt = ServingRuntime(_plan([cfg], trace.num_requests), cold)
+    cold_rt.run(trace)
+    assert cold_rt._measured_hit_rates() is None
+
+
+# ------------------------------------ trace tooling: handoff/role columns
+
+def _load_summarizer():
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "tools"))
+    import trace_summarize
+    return trace_summarize
+
+
+def test_trace_summarize_handoff_columns():
+    ts = _load_summarizer()
+    doc = {"traceEvents": [
+        {"ph": "M", "name": "thread_name", "tid": 0,
+         "args": {"name": "replica-0 (tiny:H100x1|prefill)"}},
+        {"ph": "M", "name": "thread_name", "tid": 1,
+         "args": {"name": "replica-1 (tiny:A40x1|decode)"}},
+        {"ph": "X", "tid": 0, "ts": 0.0, "dur": 2e6, "cat": "prefill",
+         "name": "prefill[2]"},
+        {"ph": "X", "tid": 0, "ts": 2e6, "dur": 1e6, "cat": "handoff",
+         "name": "handoff[B=2]",
+         "args": {"req_ids": [0, 1], "blocks": 4, "bytes": 8192.0}},
+        {"ph": "X", "tid": 1, "ts": 3e6, "dur": 1e6, "cat": "swapin",
+         "name": "swapin[B=2]", "args": {"bytes": 8192.0}},
+    ]}
+    s = ts.summarize(doc)
+    pre, dec = s["replicas"]
+    assert pre["role"] == "prefill" and dec["role"] == "decode"
+    assert pre["handoffs"] == 2 and pre["handoff_s"] == 1.0
+    assert pre["handoff_blocks"] == 4 and pre["handoff_bytes"] == 8192.0
+    assert dec["handoffs"] == 0 and dec["swap_ins"] == 1
+    text = ts.format_summary(s)
+    assert "role" in text and "handoff" in text and "hnd-MB" in text
+    assert "prefill" in text and "decode" in text
+
+
+def test_trace_summary_cross_checks_runtime_info(tmp_path):
+    from repro.obs import Observability
+    ts = _load_summarizer()
+    cfgs = [_replica(role="prefill"), _replica(role="decode")]
+    trace = _trace(n=4)
+    executor = CostModelExecutor(list(cfgs), [TINY], host_blocks=16)
+    runtime = ServingRuntime(_plan(cfgs, trace.num_requests), executor,
+                             obs=Observability())
+    res = runtime.run(trace)
+    path = tmp_path / "disagg_trace.json"
+    runtime.export_trace(str(path))
+    s = ts.summarize(json.loads(path.read_text()))
+    by_rep = {e["replica"]: e for e in res.info["per_replica"]}
+    summarized = {i: r for i, r in enumerate(s["replicas"])}
+    for i, entry in by_rep.items():
+        assert summarized[i]["role"] == entry["role"]
+        assert summarized[i]["handoffs"] == entry["handoffs"]
+        assert summarized[i]["handoff_bytes"] == entry["handoff_bytes"]
+    assert sum(r["handoffs"] for r in s["replicas"]) == res.info["handoffs"]

@@ -56,13 +56,23 @@ def summarize(doc: dict) -> dict:
     t_end = 0.0
 
     def rep(tid: int) -> dict:
+        name = names.get(tid, f"track-{tid}")
+        # Disaggregated replicas carry their phase role in the config key
+        # that register_replica() bakes into the track name
+        # ("replica-0 (model:H100x1|prefill)").
+        role = "both"
+        for r in ("prefill", "decode"):
+            if name.endswith(f"|{r})"):
+                role = r
         return replicas.setdefault(tid, {
-            "track": names.get(tid, f"track-{tid}"),
+            "track": name, "role": role,
             "busy_s": 0.0, "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_events": 0, "decode_chunks": 0,
             "preemptions": 0, "completed": 0,
             "swap_ins": 0, "swap_in_s": 0.0,
             "swap_in_bytes": 0.0, "swap_out_bytes": 0.0,
+            "handoffs": 0, "handoff_s": 0.0,
+            "handoff_blocks": 0, "handoff_bytes": 0.0,
             "faults": 0, "dead_at_s": None, "downtime_s": 0.0})
 
     control: List[dict] = []
@@ -85,6 +95,14 @@ def summarize(doc: dict) -> dict:
                 r["swap_in_s"] += dur
                 r["swap_in_bytes"] += float(
                     e.get("args", {}).get("bytes", 0.0))
+            elif kind == "handoff":
+                args = e.get("args", {})
+                # one span = one exported group; count per request so the
+                # figure cross-checks result.info's per-replica "handoffs"
+                r["handoffs"] += len(args.get("req_ids", []))
+                r["handoff_s"] += dur
+                r["handoff_blocks"] += int(args.get("blocks", 0))
+                r["handoff_bytes"] += float(args.get("bytes", 0.0))
             t_end = max(t_end, ts + dur)
         elif ph == "i" and tid < CONTROL_TRACK:
             name = e.get("name")
@@ -149,8 +167,12 @@ def format_summary(s: dict) -> str:
     swapping = any(r["swap_ins"] or r["swap_out_bytes"]
                    for r in s["replicas"])
     faulty = any(r["faults"] for r in s["replicas"])
+    disagg = any(r["role"] != "both" or r["handoffs"]
+                 for r in s["replicas"])
     lines.append(f"{'replica':<28}{'busy':>7}{'prefill':>10}{'decode':>10}"
                  f"{'chunks':>8}{'preempt':>9}{'done':>6}"
+                 + (f"{'role':>9}{'handoff':>9}{'hnd-MB':>9}"
+                    if disagg else "")
                  + (f"{'swapin':>8}{'out-MB':>9}{'in-MB':>8}"
                     if swapping else "")
                  + (f"{'faults':>8}{'down-s':>9}" if faulty else ""))
@@ -160,6 +182,9 @@ def format_summary(s: dict) -> str:
             f"{r['prefill_s']:>9.4f}s{r['decode_s']:>9.4f}s"
             f"{r['decode_chunks']:>8}{r['preemptions']:>9}"
             f"{r['completed']:>6}")
+        if disagg:
+            line += (f"{r['role']:>9}{r['handoffs']:>9}"
+                     f"{r['handoff_bytes'] / 1e6:>9.2f}")
         if swapping:
             line += (f"{r['swap_ins']:>8}"
                      f"{r['swap_out_bytes'] / 1e6:>9.2f}"
